@@ -1,0 +1,36 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU — correctness proxy) and
+the jnp reference path (XLA-compiled — the actual CPU timing), over the shapes
+the framework hits. On TPU the Pallas path compiles natively; here the derived
+column records bytes and arithmetic intensity for the roofline discussion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ref
+
+
+def run() -> None:
+    # Krasulina xi: memory-bound BLAS-2 pass (2*B*d flops over B*d*2 bytes bf16)
+    for B, d in ((1024, 512), (4096, 3072)):
+        kw, kz = jax.random.split(jax.random.PRNGKey(0))
+        w = jax.random.normal(kw, (d,), jnp.float32)
+        z = jax.random.normal(kz, (B, d), jnp.float32)
+        f = jax.jit(ref.krasulina_xi_ref)
+        us = time_fn(f, w, z)
+        flops = 4 * B * d
+        bytes_ = B * d * 4
+        emit(f"kernel/krasulina/B{B}_d{d}", us,
+             f"ai={flops / bytes_:.2f}flops_per_byte")
+
+    # blockwise attention reference path
+    for S in (512, 1024):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 8, S, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 8, S, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 8, S, 64), jnp.float32)
+        f = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+        us = time_fn(f, q, k, v)
+        emit(f"kernel/attention/S{S}", us, f"flops={4 * 8 * S * S * 64:.0f}")

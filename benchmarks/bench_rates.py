@@ -1,0 +1,27 @@
+"""Figure 5: the impact of mini-batch size B on R_s / R_e under the exact
+averaging paradigm (N = 10, R_s = 1e6, R_p = 1.25e5, R_c in {1e3, 1e4}).
+
+Emits, per (R_c, B): the ratio R_s/R_e and whether the system keeps up
+(R_s/R_e <= B). The paper's qualitative claim — the ratio drops below the
+B-line for sufficiently large B — is checked programmatically.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import rates
+
+
+def run() -> None:
+    N, Rs, Rp, R = 10, 1e6, 1.25e5, 10
+    for Rc in (1e3, 1e4):
+        crossed = None
+        for B in (100, 200, 500, 1000, 2000, 5000, 10_000, 20_000, 50_000):
+            Re = rates.effective_rate(B, N, R, Rp, Rc)
+            ratio = Rs / Re
+            keeps_up = ratio <= B
+            if keeps_up and crossed is None:
+                crossed = B
+            emit(f"fig5/Rc{int(Rc)}/B{B}", 0.0,
+                 f"ratio={ratio:.0f};keeps_up={int(keeps_up)}")
+        emit(f"fig5/Rc{int(Rc)}/crossover", 0.0, f"B_star={crossed}")
+        assert crossed is not None, "mini-batching must eventually keep up (Fig 5)"

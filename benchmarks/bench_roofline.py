@@ -1,0 +1,24 @@
+"""Roofline report over the dry-run artifacts (deliverable g): one row per
+(arch x shape x mesh) with the three terms, the dominant bottleneck, and
+MODEL_FLOPS/HLO_FLOPs. Skips gracefully when artifacts are missing (run
+`python -m repro.launch.sweep` first).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro import roofline
+
+
+def run() -> None:
+    recs = roofline.load_artifacts()
+    if not recs:
+        emit("roofline/missing", 0.0, "run `python -m repro.launch.sweep` first")
+        return
+    rows = [roofline.analyze(r) for r in recs]
+    rows.sort(key=lambda r: (r.mesh, r.arch, r.shape))
+    for r in rows:
+        emit(f"roofline/{r.mesh}/{r.arch}/{r.shape}",
+             r.step_time_s * 1e6,
+             f"dom={r.dominant};compute_s={r.compute_s:.4f};"
+             f"memory_s={r.memory_s:.4f};collective_s={r.collective_s:.4f};"
+             f"useful={r.useful_ratio:.2f};mfu={r.mfu:.3f};peak_gib={r.peak_gib:.1f}")

@@ -1,0 +1,45 @@
+"""Benchmark harness entrypoint: one module per paper table/figure plus the
+kernel micro-benchmarks and the roofline report.
+
+Prints ``name,us_per_call,derived`` CSV (benchmarks.common.emit).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: rates,dmb,krasulina,dsgd,kernels,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_dmb, bench_dsgd, bench_kernels,
+                            bench_krasulina, bench_rates, bench_roofline)
+
+    suites = {
+        "rates": bench_rates.run,       # Fig. 5
+        "dmb": bench_dmb.run,           # Fig. 6
+        "krasulina": bench_krasulina.run,  # Figs. 7-8
+        "dsgd": bench_dsgd.run,         # Fig. 9
+        "kernels": bench_kernels.run,
+        "roofline": bench_roofline.run,  # deliverable (g)
+    }
+    chosen = [s.strip() for s in args.only.split(",") if s.strip()] or list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in chosen:
+        try:
+            suites[name]()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Section IV-B (Fig. 6): the DMB algorithm training a binary linear
+classifier from a fast synthetic stream, in both the resourceful and the
+under-provisioned (mu > 0 discards) regimes.
+
+Run:  PYTHONPATH=src python examples/streaming_logreg_dmb.py
+"""
+import jax.numpy as jnp
+
+from repro.configs.paper_logreg import FIG6
+from repro.core import dmb, problems
+from repro.core.rates import dmb_stepsize
+from repro.data.synthetic import make_logreg_stream
+
+stream = make_logreg_stream(FIG6)
+grad = lambda w, x, y: problems.logistic_grad(w, x, y)
+metric = lambda w: jnp.sum((w - stream.w_star) ** 2)
+w0 = jnp.zeros(FIG6.dim + 1)
+
+print("Fig 6(a): resourceful regime, error vs B at t' = 1e5 samples")
+for B in (1, 10, 100, 1000):
+    c = {1: 0.1, 10: 0.3, 100: 2.0, 1000: 8.0}[B]
+    res = dmb.run_dmb(grad, stream.draw, w0, N=min(10, B), B=B,
+                      steps=max(1, 100_000 // B),
+                      stepsize=lambda t: c / jnp.sqrt(t), trace_metric=metric)
+    print(f"  B={B:5d}  ||w-w*||^2 = {float(res.trace_metric[-1]):.5f}")
+
+print("Fig 6(b): under-provisioned regime, (N,B)=(10,500), mu discards")
+for mu in (0, 100, 500, 2000):
+    res = dmb.run_dmb(grad, stream.draw, w0, N=10, B=500, mu=mu, steps=200,
+                      stepsize=lambda t: 2.0 / jnp.sqrt(t), trace_metric=metric,
+                      seed=1)
+    print(f"  mu={mu:5d}  ||w-w*||^2 = {float(res.trace_metric[-1]):.5f} "
+          f"(t' arrived = {int(res.trace_t_prime[-1])})")
+
+# Theorem 4's prescribed stepsize is also available:
+print(f"Thm-4 stepsize at t=100 (L=1, sigma=1, D_W=5): "
+      f"{dmb_stepsize(100, 1.0, 1.0, 5.0):.4f}")

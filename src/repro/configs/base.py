@@ -1,0 +1,301 @@
+"""Config system for `repro`.
+
+Every assigned architecture is described by a :class:`ModelConfig`. Input shapes are
+described by :class:`ShapeConfig`. The training/serving distribution setup (mesh,
+gradient-averaging mode per the paper) lives in :class:`RunConfig`.
+
+All configs are plain frozen dataclasses: hashable (usable as jit static args),
+serializable, and composable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+BlockKind = str  # "attn" | "rglru" | "ssd"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style)."""
+
+    kv_lora_rank: int = 256
+    q_lora_rank: int = 768
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 1
+    num_shared_experts: int = 0
+    # d_ff of each routed expert (shared experts use ModelConfig.d_ff)
+    expert_d_ff: int = 0
+    router_aux_loss_weight: float = 0.01
+    # every `every` layers is MoE (1 = all layers)
+    every: int = 1
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD parameters."""
+
+    state_dim: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    chunk_size: int = 256
+    conv_width: int = 4
+    ngroups: int = 1
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma / Griffin recurrent block parameters."""
+
+    lru_width: int = 0  # 0 -> d_model
+    conv_width: int = 4
+    # block pattern: indices i with i % pattern_period in attn_positions are local-attn
+    pattern_period: int = 3
+    attn_positions: Tuple[int, ...] = (2,)
+    local_window: int = 2048
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    # attention flavor
+    rope_theta: float = 10_000.0
+    use_qk_norm: bool = False
+    sliding_window: int = 0  # 0 = full attention
+    # iRoPE-style chunked-local attention: layers with (i % global_every != global_offset)
+    # use local chunks of `chunk_attn_window`; 0 disables.
+    chunk_attn_window: int = 0
+    global_attn_every: int = 4
+    # ffn flavor: "swiglu" | "geglu" | "gelu"
+    ffn: str = "swiglu"
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    tie_embeddings: bool = True
+    # sub-configs
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # encoder-decoder (audio): number of encoder layers (decoder = num_layers)
+    encoder_layers: int = 0
+    # modality frontend stub: if set, inputs may be precomputed embeddings with
+    # this feature dim (projected to d_model by a learned projector).
+    frontend_embed_dim: int = 0
+    # serve-time option: allocate sliding-window attention caches as W-slot
+    # ring buffers instead of full seq_len (perf iteration, EXPERIMENTS.md §Perf)
+    ring_buffer_cache: bool = False
+    # citation / provenance
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def block_kind(self, layer_idx: int) -> BlockKind:
+        if self.family == "ssm":
+            return "ssd"
+        if self.rglru is not None:
+            pat = self.rglru
+            return "attn" if (layer_idx % pat.pattern_period) in pat.attn_positions else "rglru"
+        return "attn"
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks), for roofline MODEL_FLOPS."""
+        d, V = self.d_model, self.vocab_size
+        emb = V * d if self.tie_embeddings else 2 * V * d
+        total = emb
+        hd = self.resolved_head_dim
+        for i in range(self.num_layers + self.encoder_layers):
+            kind = self.block_kind(i % max(self.num_layers, 1))
+            if kind == "attn" or self.is_encdec:
+                if self.mla is not None:
+                    m = self.mla
+                    attn = (
+                        d * m.q_lora_rank
+                        + m.q_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                        + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                        + m.kv_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                        + self.num_heads * m.v_head_dim * d
+                    )
+                else:
+                    attn = d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd + self.num_heads * hd * d
+            elif kind == "rglru":
+                w = self.rglru.lru_width or d
+                attn = 2 * d * w + 2 * w + w * d  # in/gate projections + lru params + out
+            else:  # ssd
+                s = self.ssm
+                dinner = s.expand * d
+                nheads = dinner // s.head_dim
+                attn = d * (2 * dinner + 2 * s.ngroups * s.state_dim + nheads) + dinner * d
+            if self.moe is not None and (i % self.moe.every == 0):
+                eff = self.moe.expert_d_ff or self.d_ff
+                ff_mults = 3 if self.ffn in ("swiglu", "geglu") else 2
+                ffn = self.moe.num_experts * ff_mults * d * eff + self.moe.num_shared_experts * ff_mults * d * eff
+                ffn += d * self.moe.num_experts  # router
+            else:
+                ff_mults = 3 if self.ffn in ("swiglu", "geglu") else 2
+                ffn = ff_mults * d * self.d_ff
+            total += attn + ffn + 2 * d  # + norms
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k + shared experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        eff = self.moe.expert_d_ff or self.d_ff
+        ff_mults = 3 if self.ffn in ("swiglu", "geglu") else 2
+        per_layer_all = self.moe.num_experts * ff_mults * d * eff
+        per_layer_active = (self.moe.top_k) * ff_mults * d * eff
+        n_moe_layers = sum(1 for i in range(self.num_layers) if i % self.moe.every == 0)
+        return self.param_count() - n_moe_layers * (per_layer_all - per_layer_active)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+# ---------------------------------------------------------------------------
+# Run (distribution + paper technique) config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AveragingConfig:
+    """The paper's gradient-aggregation knob (Sections IV & V).
+
+    mode:
+      exact        -- AllReduce/psum over all data-parallel axes (DMB, Alg. 1)
+      gossip       -- R rounds of doubly-stochastic consensus over the data axis
+                      (D-SGD/AD-SGD, Algs. 3-4, eq. 17)
+      hierarchical -- psum within pod, gossip across pods (TPU adaptation)
+    """
+
+    mode: str = "exact"
+    rounds: int = 1  # R
+    topology: str = "ring"  # ring | torus | circulant2 (deg-4 expander)
+    self_weight: float = 0.0  # 0 -> uniform 1/(deg+1)
+    quantization: str = "none"  # none | sign | int8
+
+
+@dataclass(frozen=True)
+class StreamConfig:
+    """The paper's rate model (Section II-C)."""
+
+    streaming_rate: float = 0.0  # R_s samples/s; 0 = no governor (consume everything)
+    processing_rate: float = 0.0  # R_p samples/s/node
+    comms_rate: float = 0.0  # R_c messages/s
+    # If positive, force this many discarded samples per round (mu); otherwise planned.
+    forced_mu: int = -1
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    averaging: AveragingConfig = field(default_factory=AveragingConfig)
+    stream: StreamConfig = field(default_factory=StreamConfig)
+    # mesh
+    multi_pod: bool = False
+    # optimizer
+    optimizer: str = "adam"  # sgd | adam | accel (paper eqs. 9-11)
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.0
+    polyak: bool = False  # Polyak-Ruppert iterate averaging (eq. 7)
+    # numerics
+    param_dtype: str = "bfloat16"
+    # fp32 master weights for mixed precision (ZeRO-sharded); without them,
+    # sub-bf16-resolution updates vanish
+    master_weights: bool = True
+    remat: bool = True
+    # sequential microbatches per step (gradient accumulation): the paper's
+    # compute-limited regime knob — the local mini-batch B/N is processed in
+    # `microbatches` sequential slices per round
+    microbatches: int = 1
+    seed: int = 0
+
+
+def reduced(cfg: ModelConfig, layers: int = 2, d_model: int = 256, experts: int = 4) -> ModelConfig:
+    """A smoke-test-sized member of the same architecture family (brief: 2 layers,
+    d_model<=512, <=4 experts)."""
+    num_heads = max(2, min(cfg.num_heads, d_model // 64))
+    ratio = max(1, cfg.num_heads // max(cfg.num_kv_heads, 1))
+    num_kv = max(1, num_heads // ratio)
+    changes = dict(
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=num_heads,
+        num_kv_heads=num_kv,
+        d_ff=2 * d_model,
+        vocab_size=512,
+        head_dim=64 if cfg.head_dim else 0,
+    )
+    if cfg.mla is not None:
+        changes["mla"] = MLAConfig(kv_lora_rank=64, q_lora_rank=128, qk_nope_head_dim=32,
+                                   qk_rope_head_dim=16, v_head_dim=32)
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=min(experts, cfg.moe.num_experts),
+            top_k=min(cfg.moe.top_k, min(experts, cfg.moe.num_experts)),
+            num_shared_experts=min(1, cfg.moe.num_shared_experts),
+            expert_d_ff=(2 * d_model if cfg.moe.expert_d_ff else 0))
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(cfg.ssm, state_dim=32, head_dim=32, chunk_size=64)
+    if cfg.rglru is not None:
+        changes["rglru"] = dataclasses.replace(cfg.rglru, lru_width=0, local_window=128)
+    if cfg.encoder_layers:
+        changes["encoder_layers"] = layers
+    if cfg.sliding_window:
+        changes["sliding_window"] = 128
+    if cfg.chunk_attn_window:
+        changes["chunk_attn_window"] = 128
+    if cfg.frontend_embed_dim:
+        changes["frontend_embed_dim"] = 128
+    return dataclasses.replace(cfg, **changes)

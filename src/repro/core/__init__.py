@@ -1,0 +1,4 @@
+"""The paper's contribution: distributed mini-batch streaming stochastic
+approximation with exact (AllReduce) and inexact (consensus) averaging, plus the
+rate-model planner."""
+from repro.core import averaging, dmb, dsgd, krasulina, mixing, problems, quantize, rates, streaming  # noqa: F401

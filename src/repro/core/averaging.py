@@ -1,0 +1,94 @@
+"""Gradient-averaging operators for the framework-scale trainer — the paper's
+technique as a first-class feature.
+
+The trainer represents the paper's N compute nodes as a leading *node axis* on
+the gradient pytree (sharded over the mesh's data axes), so averaging modes are
+pure array programs whose collectives are visible in the lowered HLO:
+
+* exact        -- mean over the node axis == AllReduce (DMB, Section IV)
+* gossip       -- R rounds of circulant consensus: weighted `jnp.roll`s, which
+                  XLA lowers to `collective-permute` chains (Section V, eq. 17)
+* hierarchical -- exact within pod, gossip across pods (TPU adaptation)
+
+Optional message quantization (Section VI) compresses each round's messages.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AveragingConfig
+from repro.core.mixing import schedule
+from repro.core.quantize import COMPRESSORS
+
+Tree = Any
+
+
+def _roll_mix(x: jax.Array, sched, compress) -> jax.Array:
+    """One consensus round over axis 0 of x via weighted circular shifts."""
+    out = None
+    for shift, w in sched:
+        msg = x if shift == 0 else compress(jnp.roll(x, shift, axis=0))
+        term = w * msg
+        out = term if out is None else out + term
+    return out
+
+
+def gossip_average(tree: Tree, n_nodes: int, cfg: AveragingConfig) -> Tree:
+    """R rounds of doubly-stochastic consensus over the leading node axis."""
+    sched = schedule(cfg.topology, n_nodes, cfg.self_weight)
+    compress = COMPRESSORS[cfg.quantization]
+
+    def mix(g):
+        for _ in range(cfg.rounds):
+            g = _roll_mix(g, sched, compress)
+        return g
+
+    return jax.tree.map(mix, tree)
+
+
+def exact_average(tree: Tree) -> Tree:
+    return jax.tree.map(lambda g: jnp.broadcast_to(
+        jnp.mean(g, axis=0, keepdims=True), g.shape), tree)
+
+
+def hierarchical_average(tree: Tree, pods: int, per_pod: int,
+                         cfg: AveragingConfig) -> Tree:
+    """Exact psum within each pod (fast ICI), gossip across pods (slow DCN)."""
+    def mix(g):
+        shp = g.shape
+        g = g.reshape(pods, per_pod, *shp[1:])
+        g = jnp.broadcast_to(jnp.mean(g, axis=1, keepdims=True), g.shape)
+        gp = gossip_average(g[:, 0], pods, cfg)
+        g = jnp.broadcast_to(gp[:, None], g.shape)
+        return g.reshape(shp)
+
+    return jax.tree.map(mix, tree)
+
+
+def average_gradients(tree: Tree, cfg: AveragingConfig, *, n_nodes: int,
+                      pods: int = 1) -> Tree:
+    """Dispatch on the paper's averaging mode. `tree` leaves: [n_nodes, ...]."""
+    if cfg.mode == "exact":
+        return exact_average(tree)
+    if cfg.mode == "gossip":
+        return gossip_average(tree, n_nodes, cfg)
+    if cfg.mode == "hierarchical":
+        assert n_nodes % pods == 0
+        return hierarchical_average(tree, pods, n_nodes // pods, cfg)
+    raise ValueError(f"unknown averaging mode {cfg.mode!r}")
+
+
+def consensus_error(tree: Tree) -> jax.Array:
+    """max_n ||v_n - v_bar|| / ||v_bar|| across the pytree — the paper's
+    epsilon-accuracy diagnostic for inexact averaging."""
+    def err(g):
+        bar = jnp.mean(g, axis=0, keepdims=True)
+        num = jnp.max(jnp.sqrt(jnp.sum((g - bar) ** 2, axis=tuple(range(1, g.ndim)))))
+        den = jnp.sqrt(jnp.sum(bar**2)) + 1e-30
+        return num / den
+    errs = [err(g) for g in jax.tree.leaves(tree)]
+    return jnp.max(jnp.stack(errs)) if errs else jnp.zeros(())

@@ -1,0 +1,140 @@
+"""Algorithms 3 & 4 — D-SGD and AD-SGD: distributed stochastic (accelerated)
+gradient descent with *inexact* averaging via R rounds of averaging consensus
+(eq. 17) over a doubly-stochastic mixing matrix A.
+
+Decentralized-parameter model: every node keeps its own iterate; the state is
+[N, d]. Consensus mixes the *gradients* (Alg. 3 steps 7-10). D-SGD additionally
+maintains the stepsize-weighted Polyak-Ruppert average per node (step 13);
+AD-SGD maintains the (u, v, w) Nesterov triple per node (Alg. 4).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class DSGDResult(NamedTuple):
+    w: jax.Array  # [N, d] final iterates
+    w_av: jax.Array  # [N, d] Polyak averages (D-SGD) or final w (AD-SGD)
+    trace_t_prime: jax.Array
+    trace_metric: jax.Array  # metric of node 0's averaged iterate
+
+
+def consensus(h: jax.Array, A: jax.Array, rounds: int) -> jax.Array:
+    """R rounds of averaging consensus: h <- A h (eq. 17). h: [N, d]."""
+    def body(h, _):
+        return A @ h, None
+    if rounds == 0:
+        return h
+    h, _ = jax.lax.scan(body, h, None, length=rounds)
+    return h
+
+
+def run_dsgd(
+    grad_fn: Callable,  # grad_fn(w, *z) -> gradient for one node's local batch
+    draw: Callable,  # draw(key, n) -> round samples
+    w0: jax.Array,  # [d] common init
+    A: jax.Array,  # [N, N] doubly-stochastic mixing matrix
+    *,
+    B: int,
+    rounds: int,  # R consensus rounds per iteration
+    steps: int,
+    stepsize: Callable,
+    project: Optional[Callable] = None,
+    trace_metric: Optional[Callable] = None,
+    accelerated: bool = False,
+    beta: Optional[Callable] = None,  # AD-SGD beta_t (default (t+1)/2)
+    seed: int = 0,
+) -> DSGDResult:
+    N = A.shape[0]
+    assert B % N == 0
+    proj = project or (lambda w: w)
+    metric = trace_metric or (lambda w: jnp.zeros(()))
+    beta_fn = beta or (lambda t: (t + 1.0) / 2.0)
+
+    def local_grads(w_nodes, key):
+        z = draw(key, B)
+        z = jax.tree.map(lambda a: a.reshape(N, B // N, *a.shape[1:]), z)
+        return jax.vmap(lambda w, zn: grad_fn(w, *jax.tree.leaves(zn)))(w_nodes, z)
+
+    if not accelerated:
+        def round_fn(carry, t):
+            w, w_av, eta_sum, key = carry
+            key, kd = jax.random.split(key)
+            g = local_grads(w, kd)  # [N, d] (steps 2-6)
+            h = consensus(g, A, rounds)  # steps 7-10
+            eta = stepsize(t)
+            w_new = jax.vmap(proj)(w - eta * h)  # step 12
+            eta_sum_new = eta_sum + eta
+            w_av_new = (eta_sum * w_av + eta * w_new) / eta_sum_new  # step 13
+            return (w_new, w_av_new, eta_sum_new, key), metric(w_av_new[0])
+
+        w_nodes = jnp.tile(w0[None], (N, 1))
+        init = (w_nodes, jnp.zeros_like(w_nodes), jnp.zeros(()), jax.random.PRNGKey(seed))
+        (w, w_av, _, _), metrics = jax.lax.scan(round_fn, init,
+                                                jnp.arange(1, steps + 1))
+        t_prime = jnp.arange(1, steps + 1) * B
+        return DSGDResult(w, w_av, t_prime, metrics)
+
+    def round_fn(carry, t):
+        v, w, key = carry
+        key, kd = jax.random.split(key)
+        b = beta_fn(t)
+        u = v / b + (1.0 - 1.0 / b) * w  # step 2 (eq. 9)
+        g = local_grads(u, kd)  # steps 3-7 (gradients at u)
+        h = consensus(g, A, rounds)  # steps 8-11
+        v_new = jax.vmap(proj)(u - stepsize(t) * h)  # step 13 (eq. 10)
+        w_new = v_new / b + (1.0 - 1.0 / b) * w  # step 14 (eq. 11)
+        return (v_new, w_new, key), metric(w_new[0])
+
+    w_nodes = jnp.tile(w0[None], (N, 1))
+    init = (w_nodes, w_nodes, jax.random.PRNGKey(seed))
+    (v, w, _), metrics = jax.lax.scan(round_fn, init, jnp.arange(1, steps + 1))
+    t_prime = jnp.arange(1, steps + 1) * B
+    return DSGDResult(w, w, t_prime, metrics)
+
+
+def run_local_sgd(grad_fn, draw, w0, *, N, B, steps, stepsize, project=None,
+                  trace_metric=None, seed=0) -> DSGDResult:
+    """The paper's `local` baseline: nodes run SGD on their own streams with no
+    collaboration (A = I, R = 0)."""
+    A = jnp.eye(N)
+    return run_dsgd(grad_fn, draw, w0, A, B=B, rounds=0, steps=steps,
+                    stepsize=stepsize, project=project, trace_metric=trace_metric,
+                    seed=seed)
+
+
+def run_dgd(
+    grad_fn, draw, w0, A, *, B, steps, stepsize, project=None,
+    trace_metric=None, mode: str = "minibatched", rho: float = 1.0, seed: int = 0,
+) -> DSGDResult:
+    """Communications-constrained DGD adaptation (Section V-C, eq. 18):
+    one consensus round on the *iterates* per step, gradient on local data.
+
+    mode="naive": discards samples that arrive during comm rounds (keeps B/N=1
+    sample per node per step, drops the rest implied by rho).
+    mode="minibatched": local mini-batch of size B/N = 1/rho per step.
+    """
+    N = A.shape[0]
+    metric = trace_metric or (lambda w: jnp.zeros(()))
+    proj = project or (lambda w: w)
+    Bn = max(1, B // N) if mode == "minibatched" else 1
+    drawn = N * Bn
+
+    def round_fn(carry, t):
+        w, key = carry
+        key, kd = jax.random.split(key)
+        z = draw(kd, drawn)
+        z = jax.tree.map(lambda a: a.reshape(N, Bn, *a.shape[1:]), z)
+        g = jax.vmap(lambda wn, zn: grad_fn(wn, *jax.tree.leaves(zn)))(w, z)
+        w_new = jax.vmap(proj)(A @ w - stepsize(t) * g)  # eq. (18)
+        return (w_new, key), metric(w_new[0])
+
+    w_nodes = jnp.tile(w0[None], (N, 1))
+    (w, _), metrics = jax.lax.scan(round_fn, (w_nodes, jax.random.PRNGKey(seed)),
+                                   jnp.arange(1, steps + 1))
+    # in the naive mode the system still *receives* B samples per step
+    t_prime = jnp.arange(1, steps + 1) * B
+    return DSGDResult(w, w, t_prime, metrics)

@@ -1,0 +1,147 @@
+"""Doubly-stochastic mixing matrices / topologies for averaging consensus
+(paper eq. 17 and Section V).
+
+Two representations:
+
+* **Dense matrices** (numpy) for the paper-scale experiments — including the
+  6-regular random expanders used in Fig. 9 — consumed by `core.dsgd` via matmul
+  over an explicit node axis.
+* **Shift schedules** (circulant topologies) for the device-mesh gossip path —
+  consumed by `core.averaging` as weighted `jnp.roll`s over the data axis, which
+  XLA lowers to `collective-permute` chains on the TPU ICI torus.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+Schedule = Tuple[Tuple[int, float], ...]  # ((shift, weight), ...) includes shift 0
+
+
+# ---------------------------------------------------------------------------
+# Circulant schedules (device path)
+# ---------------------------------------------------------------------------
+
+
+def schedule(topology: str, n: int, self_weight: float = 0.0) -> Schedule:
+    """Doubly-stochastic circulant mixing schedule over `n` nodes."""
+    if n == 1:
+        return ((0, 1.0),)
+    if topology == "ring":
+        shifts = [-1, 1] if n > 2 else [1]
+    elif topology == "circulant2":  # degree-4 circulant expander
+        shifts = [s for s in (-2, -1, 1, 2) if abs(s) < n]
+    elif topology == "torus":  # 2D torus on a near-square factorization
+        a = int(np.sqrt(n))
+        while n % a:
+            a -= 1
+        b = n // a
+        shifts = sorted({s % n for s in (-1, 1, -b, b) if (s % n) != 0})
+        shifts = [s if s <= n // 2 else s - n for s in shifts]
+    else:
+        raise ValueError(f"unknown topology {topology!r}")
+    deg = len(shifts)
+    w_self = self_weight if self_weight > 0 else 1.0 / (deg + 1)
+    w = (1.0 - w_self) / deg
+    return tuple([(0, float(w_self))] + [(s, float(w)) for s in shifts])
+
+
+def schedule_matrix(sched: Schedule, n: int) -> np.ndarray:
+    """Dense matrix equivalent of a circulant schedule (for tests/analysis)."""
+    A = np.zeros((n, n))
+    for shift, w in sched:
+        for i in range(n):
+            # roll(x, shift)[i] = x[(i - shift) % n]
+            A[i, (i - shift) % n] += w
+    return A
+
+
+# ---------------------------------------------------------------------------
+# Dense matrices (paper experiments)
+# ---------------------------------------------------------------------------
+
+
+def ring_matrix(n: int, self_weight: float = 0.0) -> np.ndarray:
+    return schedule_matrix(schedule("ring", n, self_weight), n)
+
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Metropolis-Hastings doubly-stochastic weights for an undirected graph."""
+    n = adj.shape[0]
+    deg = adj.sum(1)
+    A = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            if i != j and adj[i, j]:
+                A[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        A[i, i] = 1.0 - A[i].sum()
+    return A
+
+
+def random_regular_expander(n: int, deg: int = 6, seed: int = 0,
+                            max_tries: int = 50) -> np.ndarray:
+    """Random `deg`-regular graph, Metropolis weights — the paper's Fig. 9
+    topology family. Sampled by double-edge-swap randomization of a circulant
+    `deg`-regular base graph (keeps the graph simple and regular by
+    construction; connectivity is re-checked after mixing)."""
+    if deg >= n:
+        raise ValueError("degree must be < n")
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        adj = _circulant_regular(n, deg)
+        edges = [(u, v) for u in range(n) for v in range(u + 1, n) if adj[u, v]]
+        for _ in range(20 * len(edges)):
+            i, j = rng.integers(len(edges)), rng.integers(len(edges))
+            (a, b), (c, d) = edges[i], edges[j]
+            if len({a, b, c, d}) < 4:
+                continue
+            if adj[a, c] or adj[b, d]:
+                continue
+            adj[a, b] = adj[b, a] = adj[c, d] = adj[d, c] = False
+            adj[a, c] = adj[c, a] = adj[b, d] = adj[d, b] = True
+            edges[i], edges[j] = (min(a, c), max(a, c)), (min(b, d), max(b, d))
+        if _connected(adj):
+            return metropolis_weights(adj.astype(float))
+    raise RuntimeError("failed to sample a connected regular graph")
+
+
+def _circulant_regular(n: int, deg: int) -> np.ndarray:
+    """Deterministic connected `deg`-regular circulant graph."""
+    adj = np.zeros((n, n), dtype=bool)
+    offsets = list(range(1, deg // 2 + 1))
+    for i in range(n):
+        for o in offsets:
+            adj[i, (i + o) % n] = adj[(i + o) % n, i] = True
+        if deg % 2:  # odd degree needs the antipodal matching (n must be even)
+            if n % 2:
+                raise ValueError("odd-degree regular graph needs even n")
+            adj[i, (i + n // 2) % n] = adj[(i + n // 2) % n, i] = True
+    return adj
+
+
+def _connected(adj: np.ndarray) -> bool:
+    n = adj.shape[0]
+    seen = {0}
+    frontier = [0]
+    while frontier:
+        u = frontier.pop()
+        for v in np.nonzero(adj[u])[0]:
+            if v not in seen:
+                seen.add(int(v))
+                frontier.append(int(v))
+    return len(seen) == n
+
+
+def lambda2(A: np.ndarray) -> float:
+    """Second-largest eigenvalue magnitude — the consensus contraction rate."""
+    ev = np.sort(np.abs(np.linalg.eigvals(A)))[::-1]
+    return float(ev[1]) if len(ev) > 1 else 0.0
+
+
+def is_doubly_stochastic(A: np.ndarray, tol: float = 1e-8) -> bool:
+    return (
+        bool(np.all(A >= -tol))
+        and np.allclose(A.sum(0), 1.0, atol=1e-6)
+        and np.allclose(A.sum(1), 1.0, atol=1e-6)
+    )

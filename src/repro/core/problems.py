@@ -1,0 +1,62 @@
+"""Loss oracles for the paper's experiments: smooth convex losses (logistic,
+hinge-smoothed) and the 1-PCA loss (eq. 13) with Krasulina's pseudo-gradient.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Logistic regression (convex, smooth)
+# ---------------------------------------------------------------------------
+
+
+def logistic_loss(w: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    """w: [d+1] (weights, bias); x: [n, d]; y: [n] in {-1, +1}."""
+    z = x @ w[:-1] + w[-1]
+    return jnp.mean(jnp.logaddexp(0.0, -y * z))
+
+
+logistic_grad = jax.grad(logistic_loss)
+
+
+def logistic_risk(w: jax.Array, draw, key, n: int = 20_000) -> jax.Array:
+    x, y = draw(key, n)
+    return logistic_loss(w, x, y)
+
+
+def project_ball(w: jax.Array, radius: float) -> jax.Array:
+    """Projection onto the l2 ball of given radius (bounded model space W)."""
+    nrm = jnp.linalg.norm(w)
+    return jnp.where(nrm > radius, w * (radius / nrm), w)
+
+
+# ---------------------------------------------------------------------------
+# 1-PCA (structured nonconvex, eq. 13)
+# ---------------------------------------------------------------------------
+
+
+def pca_loss(w: jax.Array, cov: jax.Array) -> jax.Array:
+    """Population risk f(w) = -w^T Sigma w / ||w||^2."""
+    return -(w @ cov @ w) / jnp.maximum(w @ w, 1e-30)
+
+
+def pca_excess_risk(w: jax.Array, cov: jax.Array, lambda1: float) -> jax.Array:
+    return pca_loss(w, cov) + lambda1
+
+
+def krasulina_xi(w: jax.Array, z: jax.Array) -> jax.Array:
+    """Mini-batch Krasulina pseudo-gradient (Alg. 2, step 4, averaged over the
+    local batch): xi = mean_b [ z_b (z_b.w) - ((w.z_b)^2/||w||^2) w ]."""
+    zw = z @ w  # [n]
+    nrm2 = jnp.maximum(w @ w, 1e-30)
+    return (z.T @ zw) / z.shape[0] - (jnp.mean(zw**2) / nrm2) * w
+
+
+def sin2_error(w: jax.Array, v: jax.Array) -> jax.Array:
+    """sin^2 angle between w and the true eigenvector v (alignment error)."""
+    c = (w @ v) ** 2 / (jnp.maximum(w @ w, 1e-30) * (v @ v))
+    return 1.0 - c

@@ -1,0 +1,25 @@
+"""Message compressors for consensus rounds (paper Section VI, "Message
+quantization" — signSGD [125] and int8 stochastic rounding). Beyond-paper
+feature; applied to gossip messages in `core.averaging`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sign_compress(x: jax.Array) -> jax.Array:
+    """1-bit signSGD compressor with the scale-preserving mean-|x| factor."""
+    scale = jnp.mean(jnp.abs(x))
+    return jnp.sign(x) * scale
+
+
+def int8_compress(x: jax.Array) -> jax.Array:
+    """Deterministic symmetric int8 quantization (dequantized back to float —
+    models the wire format's precision loss)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q * scale
+
+
+COMPRESSORS = {"none": lambda x: x, "sign": sign_compress, "int8": int8_compress}

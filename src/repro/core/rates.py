@@ -1,0 +1,90 @@
+"""The paper's rate model (Section II-C): streaming rate R_s, per-node compute
+rate R_p, communications rate R_c, consensus rounds R, network-wide mini-batch B,
+N nodes — and the provisioning planner implied by Theorems 4-7.
+
+    R_e  = ( B/(N*R_p) + R/R_c )^-1                      (eq. 4)
+    R   <= floor( B*R_c * (1/R_s - 1/(N*R_p)) )          (eq. 3)
+
+A system keeps up with the stream iff R_s <= B*R_e; otherwise it must discard
+mu = R_s/R_e - B samples per round (Algorithms 1-2, steps 9-10).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs.base import StreamConfig
+
+
+def effective_rate(B: float, N: int, R: int, Rp: float, Rc: float) -> float:
+    """Mini-batches per second the network can process (eq. 4)."""
+    return 1.0 / (B / (N * Rp) + R / Rc)
+
+
+def max_rounds(B: float, N: int, Rs: float, Rp: float, Rc: float) -> int:
+    """Largest R compatible with keeping up with the stream (eq. 3)."""
+    slack = 1.0 / Rs - 1.0 / (N * Rp)
+    return max(0, math.floor(B * Rc * slack))
+
+
+def discards_per_round(B: int, N: int, R: int, Rs: float, Rp: float, Rc: float) -> int:
+    """mu = max(0, R_s/R_e - B): samples dropped at the splitter per round."""
+    Re = effective_rate(B, N, R, Rp, Rc)
+    # epsilon guard: B chosen exactly at the keep-up boundary must give mu = 0
+    return max(0, math.ceil(Rs / Re - B - 1e-9))
+
+
+@dataclass(frozen=True)
+class Plan:
+    B: int
+    mu: int
+    R: int
+    Re: float
+    regime: str  # "resourceful" | "under-provisioned"
+
+
+def plan(stream: StreamConfig, N: int, R: int, *, B: Optional[int] = None,
+         horizon_samples: Optional[float] = None) -> Plan:
+    """Choose (B, mu) for a stream. If B is not given, pick the smallest B that
+    keeps up (R_s <= B*R_e), clipped to the order-optimality ceiling
+    B <= sqrt(t') from Theorem 4 when a sample horizon is known."""
+    Rs, Rp, Rc = stream.streaming_rate, stream.processing_rate, stream.comms_rate
+    if B is None:
+        # R_s <= B*R_e  <=>  R_s*(B/(N Rp) + R/Rc) <= B
+        #              <=>  B*(1 - Rs/(N Rp)) >= Rs*R/Rc
+        denom = 1.0 - Rs / (N * Rp)
+        if denom <= 0:
+            raise ValueError(
+                f"stream faster than total compute: R_s={Rs} >= N*R_p={N * Rp}")
+        B = max(N, math.ceil((Rs * R / Rc) / denom))
+        B = ((B + N - 1) // N) * N  # B must split evenly across nodes
+    if horizon_samples:
+        ceiling = max(N, int(math.sqrt(horizon_samples)))
+        ceiling = (ceiling // N) * N or N
+        B = min(B, ceiling)
+    if stream.forced_mu >= 0:
+        mu = stream.forced_mu
+    else:
+        mu = discards_per_round(B, N, R, Rs, Rp, Rc)
+    Re = effective_rate(B, N, R, Rp, Rc)
+    return Plan(B=B, mu=mu, R=R,
+                Re=Re, regime="resourceful" if mu == 0 else "under-provisioned")
+
+
+def dmb_stepsize(t: int, L: float, sigma: float, D_W: float) -> float:
+    """Theorem 4's stepsize: eta_t = 1 / (L + (sigma/D_W) * sqrt(t))."""
+    return 1.0 / (L + (sigma / D_W) * math.sqrt(max(t, 1)))
+
+
+def krasulina_stepsize(t: int, c: float, Q: float) -> float:
+    """Theorems 3/5 stepsize: eta_t = c / (Q + t)."""
+    return c / (Q + t)
+
+
+def min_comms_rate_for_optimality(B: int, N: int, R: int, Rs: float, Rp: float) -> float:
+    """Eq. (26): R_c >= N*R*R_s*R_p / (B*(N*R_p - R_s))."""
+    denom = B * (N * Rp - Rs)
+    if denom <= 0:
+        return float("inf")
+    return N * R * Rs * Rp / denom

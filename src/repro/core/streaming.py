@@ -1,0 +1,60 @@
+"""The streaming governor: hooks the rate model (core.rates) to a data source and
+enforces the paper's provisioning semantics — per round it yields exactly B
+samples split N ways and accounts for mu discarded samples (Fig. 4's timeline).
+
+The governor is host-side (it models the splitter of Fig. 3(c)); the device-side
+compute consumes its output. It also exposes running counters so experiments can
+plot metrics against t' = samples *arrived* rather than samples consumed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import StreamConfig
+from repro.core.rates import Plan, plan
+
+
+@dataclasses.dataclass
+class GovernedStream:
+    draw: Callable  # draw(rng, n) -> np/jnp samples (host-side)
+    n_nodes: int
+    plan: Plan
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self.samples_arrived = 0
+        self.samples_consumed = 0
+        self.samples_discarded = 0
+        self.rounds = 0
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        B, mu, N = self.plan.B, self.plan.mu, self.n_nodes
+        z = self.draw(self._rng, B + mu)
+        self.samples_arrived += B + mu
+        self.samples_discarded += mu
+        self.samples_consumed += B
+        self.rounds += 1
+        take = z[:B] if not isinstance(z, tuple) else tuple(a[:B] for a in z)
+        reshape = lambda a: a.reshape(N, B // N, *a.shape[1:])
+        if isinstance(take, tuple):
+            return tuple(reshape(a) for a in take)
+        return reshape(take)
+
+
+def make_governed_stream(draw: Callable, stream_cfg: StreamConfig, n_nodes: int,
+                         rounds_R: int, *, B: Optional[int] = None,
+                         horizon: Optional[float] = None, seed: int = 0) -> GovernedStream:
+    if stream_cfg.streaming_rate <= 0:
+        # no governor: consume everything with the requested B
+        p = Plan(B=B or n_nodes, mu=max(stream_cfg.forced_mu, 0), R=rounds_R,
+                 Re=float("inf"), regime="resourceful")
+    else:
+        p = plan(stream_cfg, n_nodes, rounds_R, B=B, horizon_samples=horizon)
+    return GovernedStream(draw, n_nodes, p, seed)

@@ -1,0 +1,45 @@
+"""Host-side streaming input pipeline: glues a token/sample source to the
+streaming governor (core.streaming) and the trainer.
+
+The governor decides (B, mu) from the rate model; the pipeline yields
+device-ready batches of exactly B samples per round, discarding mu, and tracks
+t' (samples arrived) so training curves can be plotted against the paper's
+x-axis.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import StreamConfig
+from repro.core.rates import Plan, plan as make_plan
+
+
+class StreamingPipeline:
+    def __init__(self, sample_fn: Callable[[np.random.Generator, int], Dict[str, np.ndarray]],
+                 stream_cfg: StreamConfig, n_nodes: int, rounds_R: int, *,
+                 batch: Optional[int] = None, horizon: Optional[float] = None,
+                 seed: int = 0):
+        if stream_cfg.streaming_rate > 0:
+            self.plan = make_plan(stream_cfg, n_nodes, rounds_R, B=batch,
+                                  horizon_samples=horizon)
+        else:
+            self.plan = Plan(B=batch or n_nodes, mu=max(stream_cfg.forced_mu, 0),
+                             R=rounds_R, Re=float("inf"), regime="resourceful")
+        self.sample_fn = sample_fn
+        self.n_nodes = n_nodes
+        self._rng = np.random.default_rng(seed)
+        self.samples_arrived = 0
+        self.rounds = 0
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        B, mu = self.plan.B, self.plan.mu
+        batch = self.sample_fn(self._rng, B + mu)
+        batch = {k: v[:B] for k, v in batch.items()}  # splitter discards mu
+        self.samples_arrived += B + mu
+        self.rounds += 1
+        return batch

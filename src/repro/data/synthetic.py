@@ -1,0 +1,86 @@
+"""The paper's synthetic data generators.
+
+* Logistic-link labels with standard-normal features (Fig. 6): w* ~ N(0, I),
+  x ~ N(0, I_d), Pr(y=1|x) = sigmoid(w*.x + b*).
+* Conditional Gaussians (Fig. 9): mu_{+-1} ~ N(0, I), x | y ~ N(mu_y, sigma_x^2 I).
+* Spiked / linear-spectrum covariance streams for the PCA experiments
+  (Figs. 7-8): Sigma with lambda_1 = 1 and a prescribed eigengap.
+
+All draws are stateless (key-in, samples-out) so stream steps can live inside
+`lax.scan`.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_logreg import LogRegConfig
+from repro.configs.paper_pca import PCAConfig
+
+
+class LogRegStream(NamedTuple):
+    draw: Callable  # draw(key, n) -> (x [n,d], y [n])
+    w_star: jax.Array  # [d+1] (weights, bias) ground truth
+
+
+def make_logreg_stream(cfg: LogRegConfig) -> LogRegStream:
+    key = jax.random.PRNGKey(cfg.seed)
+    if cfg.generator == "logistic_link":
+        kw, = jax.random.split(key, 1)
+        w_star = jax.random.normal(kw, (cfg.dim + 1,))
+
+        def draw(k, n):
+            kx, ky = jax.random.split(k)
+            x = jax.random.normal(kx, (n, cfg.dim))
+            logits = x @ w_star[:-1] + w_star[-1]
+            y = 2.0 * jax.random.bernoulli(ky, jax.nn.sigmoid(logits)) - 1.0
+            return x, y
+
+        return LogRegStream(draw, w_star)
+
+    # conditional Gaussians (Fig. 9)
+    km, = jax.random.split(key, 1)
+    mus = jax.random.normal(km, (2, cfg.dim))  # rows: class -1, +1
+    # Bayes-optimal linear separator for equal-covariance Gaussians:
+    # w* = (mu_1 - mu_0)/sigma^2, b* = -(|mu_1|^2 - |mu_0|^2)/(2 sigma^2)
+    w = (mus[1] - mus[0]) / cfg.noise_var
+    b = -(jnp.sum(mus[1] ** 2) - jnp.sum(mus[0] ** 2)) / (2 * cfg.noise_var)
+    w_star = jnp.concatenate([w, b[None]])
+
+    def draw(k, n):
+        ky, kx = jax.random.split(k)
+        y = 2.0 * jax.random.bernoulli(ky, 0.5, (n,)) - 1.0
+        mu = jnp.where(y[:, None] > 0, mus[1], mus[0])
+        x = mu + jnp.sqrt(cfg.noise_var) * jax.random.normal(kx, (n, cfg.dim))
+        return x, y
+
+    return LogRegStream(draw, w_star)
+
+
+class PCAStream(NamedTuple):
+    draw: Callable  # draw(key, n) -> z [n, d]
+    cov: jax.Array  # [d, d]
+    top_eigvec: jax.Array  # [d]
+    lambda1: float
+    eigengap: float
+
+
+def make_pca_stream(cfg: PCAConfig) -> PCAStream:
+    key = jax.random.PRNGKey(cfg.seed)
+    d = cfg.dim
+    lam2 = cfg.lambda1 - cfg.eigengap
+    if cfg.spectrum == "power":
+        rest = lam2 * (jnp.arange(1, d) ** -0.7)
+    else:
+        rest = jnp.linspace(lam2, 0.01 * cfg.lambda1, d - 1)
+    evals = jnp.concatenate([jnp.array([cfg.lambda1]), rest])
+    q, _ = jnp.linalg.qr(jax.random.normal(key, (d, d)))
+    cov = (q * evals) @ q.T
+    sqrt_cov = (q * jnp.sqrt(evals)) @ q.T
+
+    def draw(k, n):
+        return jax.random.normal(k, (n, d)) @ sqrt_cov
+
+    return PCAStream(draw, cov, q[:, 0], float(cfg.lambda1), float(cfg.eigengap))

@@ -1,0 +1,34 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the Pallas path compiles natively; on CPU (this container) the kernels
+run in interpret mode for correctness validation, and callers that want XLA
+performance on CPU use the jnp reference path. `use_pallas()` picks per backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.krasulina_update import krasulina_xi_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def krasulina_xi(w: jax.Array, z: jax.Array, *, force_pallas: bool = False) -> jax.Array:
+    """Fused mini-batch Krasulina pseudo-gradient (Alg. 2 steps 3-5)."""
+    if _on_tpu() or force_pallas:
+        return krasulina_xi_pallas(w, z, interpret=not _on_tpu())
+    return ref.krasulina_xi_ref(w, z)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+              window: int = 0, chunk: int = 0, force_pallas: bool = False) -> jax.Array:
+    """Blockwise attention, [B, H, S, D] layout, GQA pre-broadcast."""
+    if _on_tpu() or force_pallas:
+        return flash_attention(q, k, v, causal=causal, window=window, chunk=chunk,
+                               interpret=not _on_tpu())
+    return ref.attention_ref(q, k, v, causal=causal, window=window, chunk=chunk)

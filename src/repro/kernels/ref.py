@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels. These are the ground truth the
+kernels are validated against (per-kernel allclose sweeps in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def krasulina_xi_ref(w: jax.Array, z: jax.Array) -> jax.Array:
+    """Mini-batch Krasulina pseudo-gradient (Alg. 2 step 4, batch-averaged).
+
+    w: [d]; z: [B, d]. xi = (1/B) Z^T (Z w) - (mean((Zw)^2) / ||w||^2) w.
+    """
+    zw = z.astype(jnp.float32) @ w.astype(jnp.float32)
+    nrm2 = jnp.maximum(jnp.sum(w.astype(jnp.float32) ** 2), 1e-30)
+    xi = (z.astype(jnp.float32).T @ zw) / z.shape[0] - (
+        jnp.mean(zw**2) / nrm2) * w.astype(jnp.float32)
+    return xi.astype(w.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0, chunk: int = 0,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Dense masked attention. q/k/v: [B, H, S, D] (same head count)."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    if chunk:
+        mask &= (kp // chunk) == (qp // chunk)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(v.dtype)

@@ -1,0 +1,278 @@
+"""Sharding rules: parameter specs by name, activation constraint rules, and
+KV-cache specs per input shape.
+
+Convention: every parameter leaf gets a *base* spec keyed by its dict name; the
+spec covers the trailing dims and is left-padded with None for any leading
+stacking dims (layer scan stacks, node axes), so the same table serves the
+per-layer, stacked and decentralized-parameter representations.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import data_axes
+
+Tree = Any
+
+M = "model"
+
+# base specs over each param's own (unstacked) trailing dims
+_NAME_SPECS: Dict[str, Tuple] = {
+    # embeddings
+    "embed": (M, None),
+    "unembed": (M, None),
+    "frontend_proj": (None, M),
+    # attention
+    "wq": (None, M), "wk": (None, M), "wv": (None, M), "wo": (M, None),
+    # MLA
+    "wq_a": (None, None), "wq_b": (None, M),
+    "wkv_a": (None, None), "wkv_b": (None, M),
+    "norm_kv": (None,),
+    # dense/shared FFN
+    "w_gate": (None, M), "w_up": (None, M), "w_down": (M, None),
+    # MoE (expert-parallel over the model axis)
+    "router": (None, None),
+    "we_gate": (M, None, None), "we_up": (M, None, None), "we_down": (M, None, None),
+    # SSD (mamba2)
+    "w_in": (None, M), "conv_w": (None, M), "conv_b": (M,),
+    "A_log": (None,), "D": (None,), "dt_bias": (None,),
+    "norm_scale": (M,), "w_out": (M, None),
+    # RG-LRU
+    "w_gate_in": (None, M), "w_main_in": (None, M),
+    "w_rec_gate": (None, M), "w_inp_gate": (None, M), "lam": (M,),
+    # norms
+    "scale": (None,), "bias": (None,),
+}
+
+
+# fallback candidates when a base spec's dims don't divide the mesh axis
+# (e.g. vocab 50280 % 16 != 0 -> shard the d_model dim; 60 experts % 16 != 0 ->
+# tensor-shard within experts; kv heads < 16 in caches -> shard head_dim)
+_ALT_SPECS: Dict[str, Tuple[Tuple, ...]] = {
+    "embed": ((None, M),),
+    "unembed": ((None, M),),
+    "we_gate": ((None, None, M),),
+    "we_up": ((None, None, M),),
+    "we_down": ((None, M, None),),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _axis_size(mesh: Mesh, d) -> int:
+    axes = d if isinstance(d, tuple) else (d,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dims: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> bool:
+    return all(d is None or s % _axis_size(mesh, d) == 0
+               for d, s in zip(dims, shape))
+
+
+def _sanitize(dims: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> Tuple:
+    return tuple(d if (d is None or shape[i] % _axis_size(mesh, d) == 0) else None
+                 for i, d in enumerate(dims))
+
+
+def _resolve(name: str, shape: Tuple[int, ...], mesh: Mesh, lead: Tuple) -> Tuple:
+    base = _NAME_SPECS.get(name, ())
+    pad = len(shape) - len(base) - len(lead)
+    assert pad >= 0, f"{name}: shape {shape} < spec {base}"
+    for cand in (base,) + _ALT_SPECS.get(name, ()):
+        dims = lead + (None,) * pad + tuple(cand)
+        if _fits(dims, shape, mesh):
+            return dims
+    return _sanitize(lead + (None,) * pad + tuple(base), shape, mesh)
+
+
+def param_specs(params: Tree, mesh: Optional[Mesh] = None, *,
+                node_axes: Optional[Tuple[str, ...]] = None) -> Tree:
+    """PartitionSpecs for a parameter pytree. If `node_axes` is given, params
+    carry a leading decentralized-node dim sharded over those mesh axes."""
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        lead = (node_axes,) if node_axes else ()
+        if mesh is not None:
+            return P(*_resolve(name, leaf.shape, mesh, lead))
+        base = _NAME_SPECS.get(name, ())
+        pad = leaf.ndim - len(base) - len(lead)
+        assert pad >= 0, f"{name}: ndim {leaf.ndim} < spec {base}"
+        return P(*(lead + (None,) * pad + tuple(base)))
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def zero1_specs(params: Tree, mesh: Mesh, *,
+                node_axes: Optional[Tuple[str, ...]] = None) -> Tree:
+    """ZeRO-1 specs for optimizer moments: the param spec plus the data axes on
+    the first still-replicated dim whose size divides evenly. Keeps fp32 Adam
+    state at 1/(data*model) per chip instead of 1/model."""
+    dp = data_axes(mesh)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    base = param_specs(params, mesh, node_axes=node_axes)
+
+    def add_dp(path, leaf, spec):
+        if node_axes:  # node axis already consumes the data axes
+            return spec
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        # never shard the leading stack dim of scanned layer weights: the
+        # per-layer dynamic-slice would all-gather the whole stack every layer
+        order = list(range(1, leaf.ndim)) + ([0] if leaf.ndim < 3 else [])
+        for i in order:
+            if dims[i] is None and leaf.shape[i] % ndp == 0 and leaf.shape[i] > 0:
+                dims[i] = dp
+                return P(*dims)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(
+        lambda pth, leaf, sp: add_dp(pth, leaf, sp), params, base)
+
+
+def activation_rules(mesh: Mesh, shape: ShapeConfig,
+                     node_axis: bool = False) -> Dict[str, P]:
+    """Logical rules consumed by models.common.pshard."""
+    dp = data_axes(mesh)
+    if node_axis:
+        # under vmap over the node axis, constraints see the un-batched shape;
+        # rely on propagation instead (DESIGN.md §Mesh & sharding)
+        return {}
+    if shape.mode == "decode" and shape.global_batch < mesh.shape["data"]:
+        # long-context decode: batch too small to shard; replicate activations,
+        # shard heads/features over model (the cache itself is sequence-sharded)
+        return {
+            "act_dmodel": P(None, None, None),
+            "act_resid": P(None, None, None),
+            "act_ff": P(None, None, M),
+            "act_heads": P(None, None, M, None),
+            "act_scores": P(None, M, None, None),
+            "act_vocab": P(None, None, M),
+            "emb_vocab": P(M, None),
+            "emb_replicated": P(None, None),
+            "moe_expert": P(M, None, None, None),
+            "act_ssm_l": P(None, None, M, None, None),
+            "act_ssm_y": P(None, None, None, M, None),
+            "act_ssm_state": P(None, None, M, None, None),
+        }
+    return {
+        "act_dmodel": P(dp, None, None),
+        # residual stream saved by the remat layer-scan: also shard over model
+        # (Megatron-style; re-gathered per layer). Perf iteration B2 tried
+        # replicating it at inference: collective -29% but HBM +15% on the
+        # memory-dominated rg prefill -> net regression, REVERTED (EXPERIMENTS
+        # §Perf B2).
+        "act_resid": P(dp, None, M),
+        "act_ff": P(dp, None, M),
+        "act_heads": P(dp, None, M, None),
+        "act_scores": P(dp, M, None, None),
+        "act_vocab": P(dp, None, M),
+        "emb_vocab": P(M, None),
+        "emb_replicated": P(None, None),
+        "moe_expert": P(M, dp, None, None),
+        # SSD internals: [b,c,H,q,q] decay blocks, [b,c,q,H,p] outputs,
+        # [b,c,H,P,N] chunk states — head axis over model
+        "act_ssm_l": P(dp, None, M, None, None),
+        "act_ssm_y": P(dp, None, None, M, None),
+        "act_ssm_state": P(dp, None, M, None, None),
+    }
+
+
+def kv_rules(mesh: Mesh, shape: ShapeConfig, kv_heads: int) -> Dict[str, P]:
+    """Rules for fresh K/V ("act_kv") and the updated cache ("act_cache_kv"),
+    matched to cache_specs' layout for this arch's KV-head divisibility."""
+    dp = data_axes(mesh)
+    msize = mesh.shape[M]
+    seq_parallel = shape.global_batch < mesh.shape["data"]
+    heads_ok = kv_heads > 0 and kv_heads % msize == 0
+    if seq_parallel:
+        cache = P(None, dp, M, None) if heads_ok else P(None, dp, None, M)
+        fresh = P(None, None, M, None) if heads_ok else P(None, None, None, M)
+    elif heads_ok:
+        cache = fresh = P(dp, None, M, None)
+    else:
+        cache = P(dp, M, None, None)
+        fresh = P(dp, M, None, None)
+    return {"act_cache_kv": cache, "act_kv": fresh}
+
+
+def batch_specs(batch_shapes: Tree, mesh: Mesh, shape: ShapeConfig,
+                node_axis: bool = False) -> Tree:
+    dp = data_axes(mesh)
+    small = shape.global_batch < mesh.shape["data"]
+
+    def spec(path, leaf):
+        if small:
+            return P(*([None] * leaf.ndim))
+        if node_axis:
+            # [node, B/node, ...]
+            return P(dp, *([None] * (leaf.ndim - 1)))
+        return P(dp, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shapes)
+
+
+def cache_specs(cache: Tree, mesh: Mesh, shape: ShapeConfig) -> Tree:
+    """KV/state cache specs. decode_32k shards the cache batch over data and
+    kv-heads/latents over model; long_500k (batch 1) shards the *sequence* dim
+    over data (sequence-parallel cache) and heads over model."""
+    dp = data_axes(mesh)
+    seq_parallel = shape.global_batch < mesh.shape["data"]
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        stacked = leaf.ndim and path and any(
+            getattr(e, "key", None) in ("layers", "decoder") for e in path)
+        lead = (None,) if stacked else ()
+        nb = (None,) if seq_parallel else (dp,)
+        if name in ("k", "v"):  # [B, S, KH, hd]
+            body = nb + ((dp,) if seq_parallel else (None,)) + (M, None)
+            if not _fits(lead + body, leaf.shape, mesh):  # KH < model size
+                if not seq_parallel:
+                    # shard the sequence dim over model instead: head-dim
+                    # sharding provokes involuntary full-remat copies in SPMD
+                    body = nb + (M, None, None)
+                else:
+                    body = nb + (dp, None, M)
+        elif name == "ckv":  # [B, S, rank]
+            body = nb + ((dp,) if seq_parallel else (None,)) + (M,)
+        elif name == "krope":  # [B, S, 1, rope]
+            body = nb + ((dp,) if seq_parallel else (None,)) + (None, None)
+        elif name == "h":  # ssd [B, H, P, N] / rglru [B, w]
+            body = nb + (M,) + (None,) * (leaf.ndim - len(lead) - 2)
+        elif name == "conv":  # [B, W-1, convdim]
+            body = nb + (None, M)
+        elif name == "memory":  # enc-dec memory [B, S_enc, D]
+            body = nb + (None, None)
+            lead = ()
+        else:
+            body = (None,) * (leaf.ndim - len(lead))
+        assert len(lead) + len(body) == leaf.ndim, f"{name}: {leaf.ndim} vs {lead + body}"
+        return P(*_sanitize(lead + body, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def named(tree_specs: Tree, mesh: Mesh) -> Tree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_with_sharding(shapes: Tree, specs: Tree, mesh: Mesh) -> Tree:
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs)

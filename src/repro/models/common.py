@@ -1,0 +1,82 @@
+"""Shared utilities for the model zoo: mesh-aware sharding constraints and
+parameter initializers.
+
+Models are written mesh-agnostically; `launch/` installs a mesh + logical sharding
+rules through :func:`set_mesh_rules`, and :func:`pshard` becomes a no-op when no
+mesh is installed (single-host tests, paper experiments).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+_RULES: Dict[str, Tuple[Optional[str], ...]] = {}
+
+
+def set_mesh_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, P]] = None) -> None:
+    global _MESH, _RULES
+    _MESH = mesh
+    _RULES = dict(rules or {})
+
+
+@contextlib.contextmanager
+def mesh_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, P]] = None):
+    global _MESH, _RULES
+    prev = (_MESH, _RULES)
+    set_mesh_rules(mesh, rules)
+    try:
+        yield
+    finally:
+        _MESH, _RULES = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def pshard(x: jax.Array, rule: str) -> jax.Array:
+    """Apply a named logical sharding constraint if a mesh is installed."""
+    if _MESH is None:
+        return x
+    spec = _RULES.get(rule)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+# ---------------------------------------------------------------------------
+# Initializers (plain functional params-as-pytree style)
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float = 1.0, fan_in: Optional[int] = None):
+    fi = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / jnp.sqrt(jnp.asarray(fi, jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def split_tree(key: jax.Array, n: int):
+    return list(jax.random.split(key, n))
+
+
+def stack_init(init_fn, key, n: int):
+    """vmap an init function over `n` stacked copies (for lax.scan layer stacks)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)

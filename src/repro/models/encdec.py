@@ -1,0 +1,159 @@
+"""Encoder-decoder backbone (SeamlessM4T-medium). The speech frontend is stubbed:
+the encoder consumes precomputed frame embeddings ("frames") projected to d_model.
+Decoder = causal self-attention + cross-attention into the encoder memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.common import dense_init, embed_init, pshard, stack_init
+
+Params = Dict[str, Any]
+
+
+def _init_enc_block(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "norm1": L.init_norm(ks[0], cfg.d_model, cfg.norm, dtype),
+        "attn": L.init_attention(ks[1], cfg, dtype),
+        "norm2": L.init_norm(ks[2], cfg.d_model, cfg.norm, dtype),
+        "ffn": L.init_ffn(ks[3], cfg.d_model, cfg.d_ff, cfg.ffn, dtype),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    return {
+        "norm1": L.init_norm(ks[0], cfg.d_model, cfg.norm, dtype),
+        "self_attn": L.init_attention(ks[1], cfg, dtype),
+        "norm_x": L.init_norm(ks[2], cfg.d_model, cfg.norm, dtype),
+        "cross_attn": L.init_attention(ks[3], cfg, dtype),
+        "norm2": L.init_norm(ks[4], cfg.d_model, cfg.norm, dtype),
+        "ffn": L.init_ffn(ks[5], cfg.d_model, cfg.d_ff, cfg.ffn, dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32, window_override: int = 0) -> Params:
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "frontend_proj": dense_init(ks[1], (cfg.frontend_embed_dim, cfg.d_model), dtype),
+        "encoder": stack_init(lambda k: _init_enc_block(k, cfg, dtype), ks[2], cfg.encoder_layers),
+        "decoder": stack_init(lambda k: _init_dec_block(k, cfg, dtype), ks[3], cfg.num_layers),
+        "final_norm": L.init_norm(ks[4], cfg.d_model, cfg.norm, dtype),
+    }
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array, *, remat: bool = True):
+    x = jnp.einsum("bsf,fd->bsd", frames, params["frontend_proj"])
+    x = pshard(x, "act_dmodel")
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def block(x, p):
+        h = L.apply_norm(p["norm1"], x, cfg.norm)
+        out, _ = L.apply_attention(p["attn"], cfg, h, positions, attn_mode="full")
+        x = x + out
+        h = L.apply_norm(p["norm2"], x, cfg.norm)
+        return x + L.apply_ffn(p["ffn"], h, cfg.ffn), None
+
+    body = jax.checkpoint(block) if remat else block
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    # feature-shard the memory: its per-decoder-layer cotangent stacks are the
+    # dominant train-time buffer otherwise
+    return pshard(x, "act_resid")
+
+
+def _cross_kv(cfg: ModelConfig, p: Params, memory: jax.Array):
+    B, S, _ = memory.shape
+    kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = jnp.einsum("bsd,de->bse", memory, p["wk"]).reshape(B, S, kh, hd)
+    v = jnp.einsum("bsd,de->bse", memory, p["wv"]).reshape(B, S, kh, hd)
+    return k, v
+
+
+def _dec_block(cfg, p, x, positions, memory, cache, cache_index, window_override):
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    mode = "window" if window_override else "causal"
+    out, new_kv = L.apply_attention(
+        p["self_attn"], cfg, h, positions, attn_mode=mode, window=window_override,
+        cache=None if cache is None else cache["self"], cache_index=cache_index)
+    x = x + out
+    h = L.apply_norm(p["norm_x"], x, cfg.norm)
+    ck, cv = _cross_kv(cfg, p["cross_attn"], memory)
+    out, _ = L.apply_attention(p["cross_attn"], cfg, h, positions, attn_mode="full",
+                               cross_kv=(ck, cv))
+    x = x + out
+    h = L.apply_norm(p["norm2"], x, cfg.norm)
+    x = x + L.apply_ffn(p["ffn"], h, cfg.ffn)
+    return x, ({"self": new_kv} if new_kv is not None else None)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            remat: bool = True, window_override: int = 0,
+            cache: Optional[Params] = None, cache_index=None, memory=None):
+    """batch: {"frames": [B,Se,Df] (unless memory given), "tokens": [B,Sd]}."""
+    if memory is None:
+        memory = encode(params, cfg, batch["frames"], remat=remat)
+    x = L.embed_lookup(params["embed"], batch["tokens"]) * jnp.sqrt(
+        jnp.asarray(cfg.d_model))
+    x = pshard(x.astype(memory.dtype), "act_dmodel")
+    B, Sd = batch["tokens"].shape
+    base = jnp.asarray(0 if cache_index is None else cache_index)
+    positions = jnp.broadcast_to(jnp.arange(Sd)[None] + base, (B, Sd))
+
+    def block(x, xs):
+        p = xs[0] if cache is not None else xs
+        c = xs[1] if cache is not None else None
+        x, nc = _dec_block(cfg, p, x, positions, memory, c, cache_index, window_override)
+        return x, (nc if nc is not None else 0)
+
+    body = jax.checkpoint(block) if (remat and cache is None) else block
+    xs = params["decoder"] if cache is None else (params["decoder"], cache["decoder"])
+    x, ys = jax.lax.scan(body, x, xs)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed_logits(params["embed"], x)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"decoder": ys, "memory": memory}
+    return logits, jnp.zeros((), jnp.float32), new_cache
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch, *, remat: bool = True,
+            window_override: int = 0):
+    logits, _, _ = forward(params, cfg, batch, remat=remat,
+                           window_override=window_override)
+    ce = L.cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               enc_len: int = 4096, window_override: int = 0) -> Params:
+    kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    kv = {
+        "self": {
+            "k": jnp.zeros((cfg.num_layers, batch, max_len, kh, hd), dtype),
+            "v": jnp.zeros((cfg.num_layers, batch, max_len, kh, hd), dtype),
+        }
+    }
+    return {"decoder": kv, "memory": jnp.zeros((batch, enc_len, cfg.d_model), dtype)}
+
+
+def prefill(params: Params, cfg: ModelConfig, batch, cache, *, window_override: int = 0):
+    logits, _, new_cache = forward(params, cfg, batch, remat=False, cache=cache,
+                                   cache_index=jnp.asarray(0, jnp.int32),
+                                   window_override=window_override)
+    return logits, new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens, cache, index, *,
+                window_override: int = 0):
+    logits, _, new_cache = forward(
+        params, cfg, {"tokens": tokens}, remat=False, cache=cache,
+        cache_index=index, memory=cache["memory"], window_override=window_override)
+    return logits, new_cache

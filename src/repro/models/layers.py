@@ -1,0 +1,479 @@
+"""Core neural layers: norms, RoPE, blockwise (memory-efficient) attention with
+causal / sliding-window / chunked-local masking, GQA and MLA attention blocks with
+KV caches, and gated FFNs.
+
+Attention is written in the blockwise online-softmax form so that the full-size
+dry-runs never materialize an S x S score matrix; the Pallas flash kernel in
+``repro.kernels`` implements the same contract for TPUs and is validated against
+``repro.kernels.ref`` which mirrors this math.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.common import dense_init, ones_init, pshard
+
+Params = Dict[str, Any]
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(key, dim: int, kind: str, dtype=jnp.float32) -> Params:
+    p = {"scale": ones_init(key, (dim,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_headdim(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Parameter-free QK-norm over the head dim (Chameleon / Llama-4 style)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # [head_dim/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, d/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, d/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masked blockwise attention
+# ---------------------------------------------------------------------------
+
+
+def _mask_block(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool, window: int,
+                chunk: int, kv_valid: Optional[jax.Array]) -> jax.Array:
+    """Boolean [q, k] mask from absolute positions. window/chunk of 0 disable."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= kp <= qp
+    if window > 0:
+        m &= kp > qp - window
+    if chunk > 0:
+        m &= (kp // chunk) == (qp // chunk)
+    if kv_valid is not None:
+        m &= kp < kv_valid
+    return m
+
+
+def blockwise_attention(
+    q: jax.Array,  # [B, Sq, H, D]
+    k: jax.Array,  # [B, Sk, KH, D]
+    v: jax.Array,  # [B, Sk, KH, Dv]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 0,
+    q_offset: Any = 0,
+    kv_valid: Optional[jax.Array] = None,  # scalar or [B]: #valid cache slots
+    kv_block: int = 512,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """Online-softmax attention; never materializes [Sq, Sk] for Sk > kv_block.
+
+    GQA kv heads are broadcast to the full H before the score einsum so every
+    blockwise intermediate carries a head axis that shards evenly over the
+    `model` mesh axis (all assigned archs have H >= 16).
+    `q_offset` is the absolute position of q[0] (int or [B] array, for decode).
+    """
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KH
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    q_pos_base = jnp.arange(Sq)
+
+    if G > 1:  # broadcast kv to full heads: [B, Sk, H, *]
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+
+    if Sq <= 16:
+        # decode fast path: one masked dot over the whole cache — no block
+        # scan (whose reshape-to-blocks would regather sharded caches).
+        # bf16 inputs + f32 accumulation: no materialized f32 cache copy.
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(k.dtype), k,
+                       preferred_element_type=jnp.float32) * scale
+        s = pshard(s, "act_scores")
+        k_pos = jnp.arange(Sk)
+        qoff = jnp.asarray(q_offset)
+        kvv = jnp.broadcast_to(jnp.asarray(Sk if kv_valid is None else kv_valid), (B,))
+
+        def mk_mask(qo, kv_n):
+            return _mask_block(q_pos_base + qo, k_pos, causal=causal,
+                               window=window, chunk=chunk, kv_valid=kv_n)
+
+        if qoff.ndim == 0:
+            mask = mk_mask(qoff, None)[None] & (k_pos[None, None] < kvv[:, None, None])
+        else:
+            mask = jax.vmap(mk_mask)(qoff, kvv)
+        s = jnp.where(mask[:, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(B, Sq, H, Dv).astype(v.dtype)
+
+    nblocks = max(1, (Sk + kv_block - 1) // kv_block)
+    pad = nblocks * kv_block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kv_valid_eff = jnp.asarray(Sk if kv_valid is None else kv_valid)
+
+    kb = k.reshape(B, nblocks, kv_block, H, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblocks, kv_block, H, Dv).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        blk_idx, kblk, vblk = xs
+        # scores: [B, H, Sq, kv_block], head axis sharded over `model`
+        # (bf16 inputs, f32 accumulation — the MXU-native formulation)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(kblk.dtype), kblk,
+                       preferred_element_type=jnp.float32) * scale
+        s = pshard(s, "act_scores")
+        k_pos = blk_idx * kv_block + jnp.arange(kv_block)
+
+        def mk_mask(qoff, kvv):
+            return _mask_block(q_pos_base + qoff, k_pos, causal=causal, window=window,
+                               chunk=chunk, kv_valid=kvv)
+
+        qoff = jnp.asarray(q_offset)
+        kvv = jnp.broadcast_to(kv_valid_eff, (B,)) if kv_valid_eff.ndim <= 1 else kv_valid_eff
+        if qoff.ndim == 0:
+            mask = mk_mask(qoff, None)[None]  # [1, Sq, kv_block]
+            mask = mask & (k_pos[None, None, :] < kvv[:, None, None])
+        else:
+            mask = jax.vmap(mk_mask)(qoff, kvv)  # [B, Sq, kv_block]
+        s = jnp.where(mask[:, None], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)  # [B, H, Sq]
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)  # zero out fully-masked rows later via l
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, Dv), jnp.float32)
+    if nblocks == 1:
+        (m, l, acc), _ = body((m0, l0, acc0), (jnp.asarray(0), kb[0], vb[0]))
+    else:
+        # checkpoint each kv-block step: backward recomputes the block's
+        # probabilities instead of saving O(Sq x Sk) residuals (flash-style)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, acc0),
+                                      (jnp.arange(nblocks), kb, vb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 2, 1, 3).reshape(B, Sq, H, Dv)
+    return out.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (with optional KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KH = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, H * hd), dtype),
+        "wk": dense_init(ks[1], (d, KH * hd), dtype),
+        "wv": dense_init(ks[2], (d, KH * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, d), dtype, fan_in=H * hd),
+    }
+
+
+def apply_attention(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, D]
+    positions: jax.Array,  # [B, S] absolute positions
+    *,
+    attn_mode: str = "causal",  # causal | window | chunk | full (encoder)
+    window: int = 0,
+    use_rope: bool = True,
+    cache: Optional[Params] = None,  # {"k","v"} [B, S_max, KH, hd]
+    cache_index: Optional[jax.Array] = None,  # scalar int: write offset
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, KH = cfg.num_heads, cfg.num_kv_heads
+
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, S, H, hd)
+    if cross_kv is None:
+        k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(B, S, KH, hd)
+        v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(B, S, KH, hd)
+    else:
+        k, v = cross_kv
+
+    if cfg.use_qk_norm:
+        q, k = rms_norm_headdim(q), (rms_norm_headdim(k) if cross_kv is None else k)
+    if use_rope and cross_kv is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = pshard(q, "act_heads")
+
+    causal = attn_mode in ("causal", "window", "chunk")
+    eff_window = window if attn_mode == "window" else 0
+    eff_chunk = window if attn_mode == "chunk" else 0
+
+    new_cache = None
+    ring = (cache is not None and cross_kv is None and cfg.ring_buffer_cache
+            and attn_mode == "window" and window
+            and cache["k"].shape[1] <= window)
+    if ring:
+        # W-slot ring buffer: slot(p) = p % W. RoPE is applied before the
+        # write, so slots need no absolute positions; validity is purely a
+        # count. Prefill assumes cache_index == 0.
+        W = cache["k"].shape[1]
+        if S == 1:
+            slot = cache_index % W
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+            kvv = jnp.minimum(cache_index + 1, W)
+            out = blockwise_attention(q, ck, cv, causal=False, kv_valid=kvv)
+        else:
+            out = blockwise_attention(q, k, v, causal=True, window=window)
+            if S >= W:
+                shift = (S - W) % W
+                ck = jnp.roll(k[:, -W:], shift, axis=1).astype(cache["k"].dtype)
+                cv = jnp.roll(v[:, -W:], shift, axis=1).astype(cache["v"].dtype)
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+        out = jnp.einsum("bse,ed->bsd", out.reshape(B, S, H * hd), p["wo"])
+        return pshard(out, "act_dmodel"), new_cache
+    if cache is not None and cross_kv is None:
+        # align the freshly-computed K/V with the cache's layout BEFORE the
+        # update-slice, or SPMD stacks unsharded per-layer copies (decode's
+        # single-position slice stays unconstrained)
+        if S > 1:
+            k = pshard(k, "act_kv")
+            v = pshard(v, "act_kv")
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, cache_index, 0, 0))
+        new_cache = {"k": pshard(ck, "act_cache_kv"), "v": pshard(cv, "act_cache_kv")}
+        k, v = ck, cv
+        kv_valid = cache_index + S
+        q_offset = cache_index + jnp.asarray(0)
+        out = blockwise_attention(q, k, v, causal=causal, window=eff_window,
+                                  chunk=eff_chunk, q_offset=q_offset, kv_valid=kv_valid)
+    else:
+        out = blockwise_attention(q, k, v, causal=causal and cross_kv is None,
+                                  window=eff_window, chunk=eff_chunk)
+
+    out = jnp.einsum("bse,ed->bsd", out.reshape(B, S, H * hd), p["wo"])
+    return pshard(out, "act_dmodel"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention) block
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig, dtype) -> Params:
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, H * qk), dtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "wkv_b": dense_init(ks[3], (m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim)), dtype),
+        "wo": dense_init(ks[4], (H * m.v_head_dim, d), dtype, fan_in=H * m.v_head_dim),
+        "norm_kv": ones_init(ks[5], (m.kv_lora_rank,), dtype),
+    }
+
+
+def apply_mla(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    attn_mode: str = "causal",
+    window: int = 0,
+    cache: Optional[Params] = None,  # {"ckv": [B,S,rank], "krope": [B,S,1,rope]}
+    cache_index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk_n, qk_r, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q = jnp.einsum("bsr,re->bse", q, p["wq_b"]).reshape(B, S, H, qk_n + qk_r)
+    q_nope, q_rope = q[..., :qk_n], q[..., qk_n:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv, k_rope = kv[..., : m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    # rms-norm the latent (DeepSeek-V2 style)
+    ckvf = ckv.astype(jnp.float32)
+    ckv = (ckvf * jax.lax.rsqrt(jnp.mean(ckvf**2, -1, keepdims=True) + 1e-6)).astype(x.dtype)
+    ckv = ckv * p["norm_kv"]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,qk_r]
+
+    new_cache = None
+    kv_valid = None
+    q_offset = 0
+    if cache is not None:
+        c1 = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                                          (0, cache_index, 0))
+        c2 = jax.lax.dynamic_update_slice(cache["krope"], k_rope.astype(cache["krope"].dtype),
+                                          (0, cache_index, 0, 0))
+        new_cache = {"ckv": c1, "krope": c2}
+        ckv, k_rope = c1, c2
+        kv_valid = cache_index + S
+        q_offset = cache_index + jnp.asarray(0)
+
+    kv_up = jnp.einsum("bsr,re->bse", ckv, p["wkv_b"]).reshape(
+        ckv.shape[0], ckv.shape[1], H, qk_n + dv)
+    k_nope, v = kv_up[..., :qk_n], kv_up[..., qk_n:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (*k_rope.shape[:2], H, qk_r)).astype(k_nope.dtype)], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    eff_window = window if attn_mode == "window" else 0
+    out = blockwise_attention(qfull, k, v, causal=True, window=eff_window,
+                              q_offset=q_offset, kv_valid=kv_valid,
+                              softmax_scale=1.0 / math.sqrt(qk_n + qk_r))
+    out = jnp.einsum("bse,ed->bsd", out.reshape(B, S, H * dv), p["wo"])
+    return pshard(out, "act_dmodel"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Vocab projection + loss (sharding-aware)
+# ---------------------------------------------------------------------------
+
+
+def embed_lookup(emb: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Token embedding gather. Tables whose vocab doesn't divide the model axis
+    are stored d-sharded; SPMD mishandles row-gathers from those, so replicate
+    them for the lookup (small: <0.5 GiB for every assigned arch)."""
+    from repro.models.common import current_mesh
+    mesh = current_mesh()
+    if mesh is not None and emb.shape[0] % mesh.shape["model"]:
+        emb = pshard(emb, "emb_replicated")
+    return emb[tokens]
+
+
+def unembed_logits(emb: jax.Array, x: jax.Array) -> jax.Array:
+    """logits = x @ emb^T with the vocab dim padded to a multiple of 16 so it
+    shards over the `model` axis even for non-divisible vocabularies (e.g.
+    50280); padded entries are masked to NEG_INF so downstream softmax/CE are
+    exact."""
+    V = emb.shape[0]
+    Vp = ((V + 15) // 16) * 16
+    if Vp != V:
+        emb = jnp.pad(emb, ((0, Vp - V), (0, 0)))
+    # make sure the (padded) table is vocab-sharded here even when the stored
+    # param had to fall back to d_model sharding (non-divisible vocab)
+    emb = pshard(emb, "emb_vocab")
+    logits = jnp.einsum("bsd,vd->bsv", x, emb)
+    logits = pshard(logits, "act_vocab")
+    if Vp != V:
+        vpos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(vpos < V, logits, jnp.asarray(NEG_INF, logits.dtype))
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over positions with label >= 0. Gold scores via a one-hot
+    contraction (keeps the sharded vocab dim sharded; take_along_axis would
+    all-gather it)."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), logits.shape[-1],
+                            dtype=jnp.float32)
+    onehot = pshard(onehot, "act_vocab")
+    gold = jnp.einsum("bsv,bsv->bs", lf, onehot)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, d_model: int, d_ff: int, kind: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype, fan_in=d_ff),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def apply_ffn(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * jnp.einsum(
+            "bsd,df->bsf", x, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    h = pshard(h, "act_ff")
+    return pshard(jnp.einsum("bsf,fd->bsd", h, p["w_down"]), "act_dmodel")

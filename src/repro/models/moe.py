@@ -1,0 +1,105 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch, shared
+experts, and the load-balance auxiliary loss. Experts are sharded over the `model`
+mesh axis (expert parallelism); dispatch/combine are einsums that XLA lowers to
+all-to-all on the expert axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.common import dense_init, pshard
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    eff = m.expert_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": dense_init(ks[0], (d, m.num_experts), jnp.float32),
+        "we_gate": dense_init(ks[1], (m.num_experts, d, eff), dtype),
+        "we_up": dense_init(ks[2], (m.num_experts, d, eff), dtype),
+        "we_down": dense_init(ks[3], (m.num_experts, eff, d), dtype, fan_in=eff),
+    }
+    if m.num_shared_experts:
+        sk = jax.random.split(ks[4], 3)
+        sd = m.num_shared_experts * eff
+        p["shared"] = {
+            "w_gate": dense_init(sk[0], (d, sd), dtype),
+            "w_up": dense_init(sk[1], (d, sd), dtype),
+            "w_down": dense_init(sk[2], (sd, d), dtype, fan_in=sd),
+        }
+    return p
+
+
+GROUP_TOKENS = 4096  # GShard-style dispatch group size
+
+
+def apply_moe(p: Params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output [B,S,D], aux load-balance loss scalar).
+
+    Dispatch is *grouped* (GShard-style): tokens are split into groups of
+    GROUP_TOKENS, each with its own capacity C = cf * group * K / E, so the
+    one-hot dispatch tensor is O(T * group * K * cf) instead of O(T^2 * K / E).
+    Groups shard over the data axes; experts shard over `model`.
+    """
+    m: MoEConfig = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    group = min(GROUP_TOKENS, T)
+    while T % group:
+        group //= 2
+    G = T // group
+    xg = x.reshape(G, group, D)
+
+    # f32 routing accuracy WITHOUT materializing an f32 copy of every token
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [G, t, E]
+
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # [G, t, K]
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * P_e (global means)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # [G, t, K, E]
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))  # [E]
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    # per-group capacity dispatch
+    C = max(K, int(m.capacity_factor * group * K / E))
+    flat = onehot.reshape(G, group * K, E)
+    pos = jnp.cumsum(flat, axis=1) - 1.0  # position within expert queue
+    pos = jnp.sum(pos * flat, axis=-1).reshape(G, group, K)
+    keep = pos < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    slot = jax.nn.one_hot(jnp.where(keep, pos, C).astype(jnp.int32), C,
+                          dtype=x.dtype)  # [G, t, K, C]
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot.astype(x.dtype), slot)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", onehot.astype(jnp.float32),
+                      slot.astype(jnp.float32), gate_vals).astype(x.dtype)
+
+    xe = jnp.einsum("gtd,gtec->egcd", xg, disp)  # [E, G, C, D] (all-to-all)
+    xe = pshard(xe, "moe_expert")
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, p["we_gate"])) * jnp.einsum(
+        "egcd,edf->egcf", xe, p["we_up"])
+    ye = jnp.einsum("egcf,efd->egcd", h, p["we_down"])
+    ye = pshard(ye, "moe_expert")
+    y = jnp.einsum("egcd,gtec->gtd", ye, comb).reshape(B, S, D)
+
+    if "shared" in p:
+        sp = p["shared"]
+        xt = x.reshape(T, D)
+        hs = jax.nn.silu(jnp.einsum("td,df->tf", xt, sp["w_gate"])) * jnp.einsum(
+            "td,df->tf", xt, sp["w_up"])
+        y = y + jnp.einsum("tf,fd->td", hs, sp["w_down"]).reshape(B, S, D)
+
+    return pshard(y, "act_dmodel"), aux

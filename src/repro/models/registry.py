@@ -1,0 +1,105 @@
+"""Unified model API over the decoder-only and encoder-decoder assemblies, plus
+`input_specs` — the ShapeDtypeStruct stand-ins used by the multi-pod dry-run
+(weak-type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+# Encoder memory length for enc-dec decode/prefill shapes (frames are the stubbed
+# frontend's output); documented in DESIGN.md.
+ENC_LEN = 4096
+# Early-fusion image prefix length for VLM/early-fusion train shapes.
+IMG_PREFIX = 256
+
+
+def _mod(cfg: ModelConfig):
+    return encdec if cfg.is_encdec else transformer
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32, window_override: int = 0):
+    return _mod(cfg).init_params(key, cfg, dtype, window_override=window_override)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat=True, window_override: int = 0):
+    return _mod(cfg).loss_fn(params, cfg, batch, remat=remat,
+                             window_override=window_override)
+
+
+def forward(params, cfg: ModelConfig, batch, **kw):
+    return _mod(cfg).forward(params, cfg, batch, **kw)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               window_override: int = 0):
+    if cfg.is_encdec:
+        return encdec.init_cache(cfg, batch, max_len, dtype, enc_len=ENC_LEN,
+                                 window_override=window_override)
+    return transformer.init_cache(cfg, batch, max_len, dtype,
+                                  window_override=window_override)
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, *, window_override: int = 0):
+    return _mod(cfg).prefill(params, cfg, batch, cache, window_override=window_override)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, index, *,
+                window_override: int = 0):
+    return _mod(cfg).decode_step(params, cfg, tokens, cache, index,
+                                 window_override=window_override)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for (arch x input-shape), per the dry-run contract.
+
+    train/prefill: full-sequence tokens (+labels for train, + stub modality
+    embeddings where the arch is early-fusion / enc-dec).
+    decode: ONE new token; the KV cache of seq_len is a separate spec built by
+    `cache_specs` in launch/dryrun.py.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.mode == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        return specs
+    specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.mode == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.is_encdec:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, min(ENC_LEN, S), cfg.frontend_embed_dim), jnp.bfloat16)
+    elif cfg.frontend_embed_dim and shape.mode == "train":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, IMG_PREFIX, cfg.frontend_embed_dim), jnp.bfloat16)
+    return specs
+
+
+def synth_batch(key, cfg: ModelConfig, shape_or_batch, seq_len: Optional[int] = None,
+                mode: str = "train") -> Dict[str, jax.Array]:
+    """Concrete random batch matching input_specs (for smoke tests/examples)."""
+    if isinstance(shape_or_batch, ShapeConfig):
+        B, S, mode = shape_or_batch.global_batch, shape_or_batch.seq_len, shape_or_batch.mode
+    else:
+        B, S = shape_or_batch, seq_len
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size, jnp.int32)}
+    if mode == "train":
+        batch["labels"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size, jnp.int32)
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, min(ENC_LEN, S), cfg.frontend_embed_dim), jnp.float32)
+    elif cfg.frontend_embed_dim and mode == "train":
+        batch["patches"] = jax.random.normal(
+            ks[2], (B, min(IMG_PREFIX, S), cfg.frontend_embed_dim), jnp.float32)
+    return batch

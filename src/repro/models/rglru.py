@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin). [arXiv:2402.19427]
+
+Training uses `lax.associative_scan` over the linear recurrence
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+decode is a single O(1) state update. The block is the Griffin "recurrent block":
+two input branches (gate, main), a short causal depthwise conv, the RG-LRU, and an
+output projection.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RGLRUConfig
+from repro.models.common import dense_init, pshard
+
+Params = Dict[str, Any]
+
+_C = 8.0  # Griffin's fixed exponent scale
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> Params:
+    r: RGLRUConfig = cfg.rglru
+    d = cfg.d_model
+    w = r.lru_width or d
+    ks = jax.random.split(key, 7)
+    return {
+        "w_gate_in": dense_init(ks[0], (d, w), dtype),
+        "w_main_in": dense_init(ks[1], (d, w), dtype),
+        "conv_w": dense_init(ks[2], (r.conv_width, w), dtype, fan_in=r.conv_width),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_rec_gate": dense_init(ks[3], (w, w), dtype),
+        "w_inp_gate": dense_init(ks[4], (w, w), dtype),
+        # Lambda param: a = sigmoid(lam); init so a^c in [0.9, 0.999]
+        "lam": jnp.log(jnp.linspace(0.9, 0.999, w) ** (1 / _C)
+                       / (1 - jnp.linspace(0.9, 0.999, w) ** (1 / _C))).astype(jnp.float32),
+        "w_out": dense_init(ks[5], (w, d), dtype, fan_in=w),
+    }
+
+
+def _rglru_scan(x: jax.Array, rec_gate: jax.Array, inp_gate: jax.Array,
+                lam: jax.Array, h0: Optional[jax.Array]):
+    """x, gates: [B, S, W] fp32. Returns (y [B,S,W], h_final [B,W])."""
+    log_a0 = jax.nn.log_sigmoid(lam)  # [W] log of base decay
+    log_a = _C * rec_gate * log_a0  # [B,S,W], rec_gate in (0,1)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    u = beta * (inp_gate * x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        # fold initial state in as a virtual first step
+        u = jnp.concatenate([h0[:, None, :], u], axis=1)
+        a = jnp.concatenate([jnp.ones_like(h0)[:, None, :], a], axis=1)
+    _, y = jax.lax.associative_scan(combine, (a, u), axis=1)
+    if h0 is not None:
+        y = y[:, 1:]
+    return y, y[:, -1]
+
+
+def apply_rglru(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, D]
+    *,
+    state: Optional[Params] = None,  # {"h": [B,W] fp32, "conv": [B,W-1,w]}
+) -> Tuple[jax.Array, Optional[Params]]:
+    r: RGLRUConfig = cfg.rglru
+    B, S, D = x.shape
+    W = r.conv_width
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate_in"]))
+    main = jnp.einsum("bsd,dw->bsw", x, p["w_main_in"])
+    main = pshard(main, "act_ff")
+
+    # causal depthwise conv on the main branch
+    new_state = None
+    if state is None:
+        pad = jnp.pad(main, ((0, 0), (W - 1, 0), (0, 0)))
+        conv_tail = None
+    else:
+        pad = jnp.concatenate([state["conv"].astype(main.dtype), main], axis=1)
+        conv_tail = pad[:, -(W - 1):, :]
+    main = sum(pad[:, i: i + S, :] * p["conv_w"][i] for i in range(W)) + p["conv_b"]
+
+    mf = main.astype(jnp.float32)
+    rec_gate = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", mf, p["w_rec_gate"].astype(jnp.float32)))
+    inp_gate = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", mf, p["w_inp_gate"].astype(jnp.float32)))
+
+    if S == 1 and state is not None:
+        log_a = _C * rec_gate[:, 0] * jax.nn.log_sigmoid(p["lam"])
+        a = jnp.exp(log_a)
+        beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        h = a * state["h"] + beta * (inp_gate[:, 0] * mf[:, 0])
+        y = h[:, None, :]
+        new_state = {"h": h, "conv": conv_tail}
+    else:
+        h0 = state["h"] if state is not None else None
+        y, h_final = _rglru_scan(mf, rec_gate, inp_gate, p["lam"], h0)
+        if state is not None:
+            new_state = {"h": h_final, "conv": conv_tail}
+
+    out = (y.astype(x.dtype) * gate)
+    out = jnp.einsum("bsw,wd->bsd", out, p["w_out"])
+    return pshard(out, "act_dmodel"), new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    r: RGLRUConfig = cfg.rglru
+    w = r.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, r.conv_width - 1, w), dtype),
+    }

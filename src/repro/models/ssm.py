@@ -1,0 +1,192 @@
+"""Mamba-2 SSD (state-space duality) block. [arXiv:2405.21060]
+
+Training uses the chunked dual form (quadratic within chunk_size-length chunks,
+linear across chunks via a state recurrence scanned with lax.scan). Decoding uses
+the O(1) recurrent update on a persistent state, which is what makes long_500k
+native for this family.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.common import dense_init, pshard
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    return s, d_inner, nheads
+
+
+def init_ssd(key, cfg: ModelConfig, dtype) -> Params:
+    s, d_inner, nheads = _dims(cfg)
+    d = cfg.d_model
+    conv_dim = d_inner + 2 * s.ngroups * s.state_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "w_in": dense_init(ks[0], (d, 2 * d_inner + 2 * s.ngroups * s.state_dim + nheads), dtype),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_dim), dtype, fan_in=s.conv_width),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nheads,), 0.01))).astype(jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "w_out": dense_init(ks[2], (d_inner, d), dtype, fan_in=d_inner),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k] (−inf for j > i)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """SSD dual form.
+
+    x: [b, S, H, P]; dt: [b, S, H]; A: [H] (positive; decay = exp(-dt*A));
+    Bm, Cm: [b, S, G, N]. Returns (y [b,S,H,P], final_state [b,H,P,N]).
+    """
+    b, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    nchunks = S // chunk
+    rep = H // G
+
+    xs = x.reshape(b, nchunks, chunk, H, P)
+    dts = dt.reshape(b, nchunks, chunk, H)
+    Bs = Bm.reshape(b, nchunks, chunk, G, N)
+    Cs = Cm.reshape(b, nchunks, chunk, G, N)
+
+    dA = -dts * A  # [b, c, q, H] log-decay per step (negative)
+
+    # intra-chunk (diagonal blocks): y = (C B^T ∘ L) x, L from segsum of dA
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # [b, c, H, q, q]
+    L = pshard(L, "act_ssm_l")
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cs, Bs)  # [b,c,G,q,k]
+    CB = jnp.repeat(CB, rep, axis=2)  # [b,c,H,q,k]
+    scores = CB * L * dts.transpose(0, 1, 3, 2)[:, :, :, None, :]  # weight by dt_k
+    scores = pshard(scores, "act_ssm_l")
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores, xs)
+    y_diag = pshard(y_diag, "act_ssm_y")
+
+    # chunk-final states: sum_k exp(sum_{j>k} dA_j) * dt_k * B_k x_k
+    dA_cum = jnp.cumsum(dA, axis=2)  # [b,c,q,H]
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # [b,c,q,H]
+    Brep = jnp.repeat(Bs, rep, axis=3)  # [b,c,q,H,N]
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn",
+                        decay_to_end * dts, Brep, xs)  # [b,c,H,P,N]
+    states = pshard(states, "act_ssm_state")
+
+    # inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])  # [b,c,H]
+
+    def scan_fn(h, inp):
+        st, dec = inp  # st: [b,H,P,N], dec: [b,H]
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((b, H, P, N), jnp.float32) if init_state is None else init_state
+    final, h_in = jax.lax.scan(scan_fn, h0,
+                               (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+                                chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # [b,c,H,P,N]
+
+    # contribution of the incoming state to each position
+    state_decay = jnp.exp(dA_cum)  # decay from chunk start to q inclusive
+    Crep = jnp.repeat(Cs, rep, axis=3)  # [b,c,q,H,N]
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Crep, h_in.astype(x.dtype), state_decay)
+    y_off = pshard(y_off, "act_ssm_y")
+
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y, final
+
+
+def apply_ssd(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, D]
+    *,
+    state: Optional[Params] = None,  # {"h": [B,H,P,N], "conv": [B,W-1,convdim]}
+) -> Tuple[jax.Array, Optional[Params]]:
+    s, d_inner, nheads = _dims(cfg)
+    B, S, D = x.shape
+    G, N, P = s.ngroups, s.state_dim, s.head_dim
+    conv_dim = d_inner + 2 * G * N
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    xbc = pshard(xbc, "act_ff")
+
+    # causal depthwise conv over time
+    W = s.conv_width
+    new_state = None
+    if state is None:
+        pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
+        conv_tail = pad[:, -(W - 1):, :]
+    conv = sum(pad[:, i: i + S, :] * p["conv_w"][i] for i in range(W)) + p["conv_b"]
+    xbc = jax.nn.silu(conv)
+
+    xi, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    xi = xi.reshape(B, S, nheads, P)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    A = jnp.exp(p["A_log"])  # [H] positive
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+
+    if S == 1 and state is not None:
+        # O(1) recurrent decode step
+        h = state["h"]  # [B,H,P,N] fp32
+        dec = jnp.exp(-dt[:, 0] * A)  # [B,H]
+        Brep = jnp.repeat(Bm[:, 0], nheads // G, axis=1)  # [B,H,N]
+        inj = jnp.einsum("bh,bhn,bhp->bhpn", dt[:, 0], Brep.astype(jnp.float32),
+                         xi[:, 0].astype(jnp.float32))
+        h = h * dec[:, :, None, None] + inj
+        Crep = jnp.repeat(Cm[:, 0], nheads // G, axis=1)
+        y = jnp.einsum("bhn,bhpn->bhp", Crep.astype(jnp.float32), h)[:, None]  # [B,1,H,P]
+        new_state = {"h": h, "conv": conv_tail}
+    else:
+        chunk = min(s.chunk_size, S)
+        Spad = ((S + chunk - 1) // chunk) * chunk
+        if Spad != S:
+            padlen = Spad - S
+            xi = jnp.pad(xi, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, padlen), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        y, h_final = ssd_chunked(xi, dt, A, Bm, Cm, chunk)
+        y = y[:, :S]
+        if state is not None:
+            new_state = {"h": h_final, "conv": conv_tail}
+
+    y = y + xi[:, :S].astype(y.dtype) * p["D"][:, None]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+
+    # gated RMSNorm (Mamba-2 norm-before-out)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf**2, -1, keepdims=True) + 1e-6)
+    y = (yf * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return pshard(out, "act_dmodel"), new_state
+
+
+def init_ssd_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    s, d_inner, nheads = _dims(cfg)
+    conv_dim = d_inner + 2 * s.ngroups * s.state_dim
+    return {
+        "h": jnp.zeros((batch, nheads, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    }

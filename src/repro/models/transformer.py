@@ -1,0 +1,301 @@
+"""Decoder-only transformer assembly covering the dense / moe / ssm / hybrid / vlm
+families.
+
+Layers are grouped into *super-blocks* — the smallest repeating pattern of block
+kinds (e.g. (rglru, rglru, local-attn) for RecurrentGemma, (chunk, chunk, chunk,
+global) for Llama-4's iRoPE) — and the stack is a `lax.scan` over stacked
+super-block parameters, with any remainder layers unrolled as a tail. This keeps
+compile time O(period) instead of O(num_layers) for the full-size dry-runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.common import embed_init, pshard, stack_init
+
+Params = Dict[str, Any]
+
+
+class LayerSpec(NamedTuple):
+    kind: str  # attn | mla | rglru | ssd
+    attn_mode: str = "causal"  # causal | window | chunk
+    window: int = 0
+    use_rope: bool = True
+    has_moe: bool = False
+
+
+def build_plan(cfg: ModelConfig, window_override: int = 0) -> Tuple[Tuple[LayerSpec, ...], int, Tuple[LayerSpec, ...]]:
+    """Returns (period_specs, n_repeats, tail_specs)."""
+
+    def attn_spec(i: int) -> LayerSpec:
+        kind = "mla" if cfg.mla is not None else "attn"
+        mode, win, rope = "causal", 0, True
+        if cfg.sliding_window:
+            mode, win = "window", cfg.sliding_window
+        if cfg.chunk_attn_window:
+            if (i % cfg.global_attn_every) == cfg.global_attn_every - 1:
+                mode, win, rope = "causal", 0, False  # iRoPE global layer: NoPE
+            else:
+                mode, win = "chunk", cfg.chunk_attn_window
+        if window_override and mode == "causal":
+            mode, win = "window", window_override
+        has_moe = cfg.moe is not None and (i % cfg.moe.every == 0)
+        return LayerSpec(kind, mode, win, rope, has_moe)
+
+    if cfg.family == "ssm":
+        return (LayerSpec("ssd"),), cfg.num_layers, ()
+    if cfg.rglru is not None:
+        r = cfg.rglru
+        period = []
+        for i in range(r.pattern_period):
+            if i in r.attn_positions:
+                period.append(LayerSpec("attn", "window", r.local_window, True,
+                                        cfg.moe is not None))
+            else:
+                period.append(LayerSpec("rglru", has_moe=False))
+        period = tuple(period)
+        n = cfg.num_layers // r.pattern_period
+        tail = period[: cfg.num_layers % r.pattern_period]
+        return period, n, tail
+    if cfg.chunk_attn_window:
+        period = tuple(attn_spec(i) for i in range(cfg.global_attn_every))
+        n = cfg.num_layers // cfg.global_attn_every
+        tail = period[: cfg.num_layers % cfg.global_attn_every]
+        return period, n, tail
+    period = (attn_spec(0),)
+    return period, cfg.num_layers, ()
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, spec: LayerSpec, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_norm(ks[0], cfg.d_model, cfg.norm, dtype)}
+    if spec.kind == "attn":
+        p["attn"] = L.init_attention(ks[1], cfg, dtype)
+    elif spec.kind == "mla":
+        p["attn"] = L.init_mla(ks[1], cfg, dtype)
+    elif spec.kind == "rglru":
+        p["attn"] = R.init_rglru(ks[1], cfg, dtype)
+    else:
+        p["attn"] = S.init_ssd(ks[1], cfg, dtype)
+    if spec.kind != "ssd":
+        p["norm2"] = L.init_norm(ks[2], cfg.d_model, cfg.norm, dtype)
+        if spec.has_moe:
+            p["ffn"] = M.init_moe(ks[3], cfg, dtype)
+        elif cfg.d_ff:
+            p["ffn"] = L.init_ffn(ks[3], cfg.d_model, cfg.d_ff, cfg.ffn, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32,
+                window_override: int = 0) -> Params:
+    period, n, tail = build_plan(cfg, window_override)
+    keys = jax.random.split(key, 4 + len(period) + len(tail))
+    p: Params = {
+        "embed": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": L.init_norm(keys[1], cfg.d_model, cfg.norm, dtype),
+        "layers": [
+            stack_init(lambda k, s=spec: _init_block(k, cfg, s, dtype), keys[4 + i], n)
+            for i, spec in enumerate(period)
+        ],
+        "tail": [
+            _init_block(keys[4 + len(period) + i], cfg, spec, dtype)
+            for i, spec in enumerate(tail)
+        ],
+    }
+    if cfg.frontend_embed_dim:
+        from repro.models.common import dense_init
+        p["frontend_proj"] = dense_init(keys[2], (cfg.frontend_embed_dim, cfg.d_model), dtype)
+    if not cfg.tie_embeddings:
+        p["unembed"] = embed_init(keys[3], (cfg.vocab_size, cfg.d_model), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg: ModelConfig, spec: LayerSpec, p: Params, x, positions,
+                 cache=None, cache_index=None):
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    new_cache = None
+    if spec.kind == "attn":
+        out, new_cache = L.apply_attention(
+            p["attn"], cfg, h, positions, attn_mode=spec.attn_mode,
+            window=spec.window, use_rope=spec.use_rope,
+            cache=cache, cache_index=cache_index)
+    elif spec.kind == "mla":
+        out, new_cache = L.apply_mla(
+            p["attn"], cfg, h, positions, attn_mode=spec.attn_mode,
+            window=spec.window, cache=cache, cache_index=cache_index)
+    elif spec.kind == "rglru":
+        out, new_cache = R.apply_rglru(p["attn"], cfg, h, state=cache)
+    else:
+        out, new_cache = S.apply_ssd(p["attn"], cfg, h, state=cache)
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if spec.kind != "ssd" and "ffn" in p:
+        h2 = L.apply_norm(p["norm2"], x, cfg.norm)
+        if spec.has_moe:
+            out2, aux = M.apply_moe(p["ffn"], cfg, h2)
+        else:
+            out2 = L.apply_ffn(p["ffn"], h2, cfg.ffn)
+        x = x + out2
+    # shard the residual stream (and thus the remat-scan carries) over `model`
+    x = pshard(x, "act_resid")
+    return x, new_cache, aux
+
+
+def _embed(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    x = L.embed_lookup(params["embed"], batch["tokens"])
+    x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+    if cfg.frontend_embed_dim and "patches" in batch:
+        # early fusion: precomputed modality embeddings occupy a prefix of the
+        # sequence (frontend itself is stubbed per the brief)
+        pe = jnp.einsum("bnf,fd->bnd", batch["patches"].astype(x.dtype),
+                        params["frontend_proj"])
+        n = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, n:]], axis=1)
+    return pshard(x, "act_dmodel")
+
+
+def _unembed(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    return L.unembed_logits(params.get("unembed", params["embed"]), x)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss (train + prefill), decode
+# ---------------------------------------------------------------------------
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            window_override: int = 0, remat: bool = True,
+            cache: Optional[Params] = None, cache_index=None):
+    """Returns (logits, aux_loss, new_cache)."""
+    period, n_rep, tail = build_plan(cfg, window_override)
+    x = _embed(cfg, params, batch)
+    B, Sq = batch["tokens"].shape
+    base = jnp.asarray(0 if cache_index is None else cache_index)
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None] + base, (B, Sq))
+
+    def superblock(carry, xs):
+        x, aux = carry
+        lp = xs[0]
+        cs = xs[1] if cache is not None else [None] * len(period)
+        new_cs = []
+        for pos, spec in enumerate(period):
+            # per-layer checkpoint nested inside the superblock checkpoint:
+            # the superblock backward replays one layer at a time instead of
+            # keeping all `period` layers' intermediates live
+            blk = partial(_apply_block, cfg, spec)
+            if remat and cache is None and len(period) > 1:
+                blk = jax.checkpoint(blk)
+            x, nc, a = blk(lp[pos], x, positions, cache=cs[pos],
+                           cache_index=cache_index)
+            new_cs.append(nc if nc is not None else 0)
+            aux = aux + a
+        return (x, aux), (tuple(new_cs) if cache is not None else 0)
+
+    body = jax.checkpoint(superblock) if (remat and cache is None) else superblock
+    xs = (params["layers"],) if cache is None else (params["layers"], cache["layers"])
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"layers": list(ys), "tail": []}
+    for i, spec in enumerate(tail):
+        tc = cache["tail"][i] if cache is not None else None
+        x, nc, a = _apply_block(cfg, spec, params["tail"][i], x, positions,
+                                cache=tc, cache_index=cache_index)
+        aux = aux + a
+        if cache is not None:
+            new_cache["tail"].append(nc)
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _unembed(cfg, params, x)
+    return logits, aux, new_cache
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            remat: bool = True, window_override: int = 0):
+    logits, aux, _ = forward(params, cfg, batch, remat=remat,
+                             window_override=window_override)
+    ce = L.cross_entropy(logits, batch["labels"])
+    aux_w = cfg.moe.router_aux_loss_weight if cfg.moe is not None else 0.0
+    n_layers = max(cfg.num_layers, 1)
+    loss = ce + aux_w * aux / n_layers
+    return loss, {"ce": ce, "aux": aux / n_layers}
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def _init_block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int, dtype):
+    if spec.kind == "attn":
+        kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        # ring-buffer option: windowed layers never look back more than W, so a
+        # W-slot ring suffices (perf iteration, EXPERIMENTS.md §Perf); baseline
+        # allocates the full seq_len
+        eff = max_len
+        if cfg.ring_buffer_cache and spec.attn_mode == "window" and spec.window:
+            eff = min(max_len, spec.window)
+        return {
+            "k": jnp.zeros((batch, eff, kh, hd), dtype),
+            "v": jnp.zeros((batch, eff, kh, hd), dtype),
+        }
+    if spec.kind == "mla":
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_len, 1, m.qk_rope_head_dim), dtype),
+        }
+    if spec.kind == "rglru":
+        return R.init_rglru_state(cfg, batch, dtype)
+    return S.init_ssd_state(cfg, batch, dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               window_override: int = 0) -> Params:
+    period, n, tail = build_plan(cfg, window_override)
+
+    def stacked(spec):
+        c = _init_block_cache(cfg, spec, batch, max_len, dtype)
+        return jax.tree.map(lambda v: jnp.broadcast_to(v[None], (n, *v.shape)), c)
+
+    return {
+        "layers": [stacked(s) for s in period],
+        "tail": [_init_block_cache(cfg, s, batch, max_len, dtype) for s in tail],
+    }
+
+
+def prefill(params: Params, cfg: ModelConfig, batch, cache, *, window_override: int = 0):
+    logits, _, new_cache = forward(params, cfg, batch, remat=False, cache=cache,
+                                   cache_index=jnp.asarray(0, jnp.int32),
+                                   window_override=window_override)
+    return logits, new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens, cache, index, *,
+                window_override: int = 0):
+    """tokens: [B, 1]; index: scalar int32 (current length). Returns (logits, cache)."""
+    logits, _, new_cache = forward(params, cfg, {"tokens": tokens}, remat=False,
+                                   cache=cache, cache_index=index,
+                                   window_override=window_override)
+    return logits, new_cache

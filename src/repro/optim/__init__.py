@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    init_optimizer,
+    make_optimizer,
+    polyak_init,
+    polyak_update,
+)

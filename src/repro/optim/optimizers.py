@@ -1,0 +1,136 @@
+"""Pytree optimizers for the framework-scale trainer: SGD(+momentum), Adam, and
+the paper's accelerated SGD (eqs. 9-11, Lan's method) generalized to pytrees,
+plus stepsize-weighted Polyak-Ruppert iterate averaging (eq. 7).
+
+All optimizers keep fp32 master state regardless of parameter dtype.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Tree  # momentum / first moment / Nesterov v
+    v: Tree  # second moment (Adam) or unused
+    master: Tree = ()  # fp32 master weights (mixed-precision training)
+
+
+def _zeros_like_f32(params: Tree) -> Tree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def init_optimizer(name: str, params: Tree, *, master_weights: bool = False) -> OptState:
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if master_weights else ())
+    if name == "accel":
+        # v iterate initialized at params (fp32)
+        v0 = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), v0, _zeros_like_f32(params), master)
+    return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params),
+                    _zeros_like_f32(params), master)
+
+
+def make_optimizer(name: str, lr: float, *, weight_decay: float = 0.0,
+                   b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                   momentum: float = 0.0,
+                   lr_schedule: Callable | None = None) -> Callable:
+    """Returns update(grads, state, params) -> (new_params, new_state)."""
+
+    def lr_at(step):
+        base = lr_schedule(step) if lr_schedule is not None else 1.0
+        return lr * base
+
+    if name == "sgd":
+        def update(grads, state: OptState, params):
+            step = state.step + 1
+            eta = lr_at(step)
+            if momentum:
+                m = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                                 state.m, grads)
+            else:
+                m = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            new_params = jax.tree.map(
+                lambda p, mm: (p.astype(jnp.float32) - eta * (mm + weight_decay * p.astype(jnp.float32))).astype(p.dtype),
+                params, m)
+            return new_params, OptState(step, m if momentum else state.m, state.v, state.master)
+        return update
+
+    if name == "adam":
+        def update(grads, state: OptState, params):
+            step = state.step + 1
+            eta = lr_at(step)
+            m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                             state.m, grads)
+            v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                             state.v, grads)
+            bc1 = 1 - b1 ** step.astype(jnp.float32)
+            bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+            def upd(p, mm, vv):
+                mhat = mm / bc1
+                vhat = vv / bc2
+                delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+                return p.astype(jnp.float32) - eta * delta
+
+            if state.master != ():
+                # mixed precision: accumulate into fp32 masters, cast out
+                new_master = jax.tree.map(upd, state.master, m, v)
+                new_params = jax.tree.map(lambda nm, p: nm.astype(p.dtype),
+                                          new_master, params)
+                return new_params, OptState(step, m, v, new_master)
+            new_params = jax.tree.map(
+                lambda p, mm, vv: upd(p, mm, vv).astype(p.dtype), params, m, v)
+            return new_params, OptState(step, m, v)
+        return update
+
+    if name == "accel":
+        # Paper eqs. (9)-(11) with beta_t = (t+1)/2: gradients must be evaluated
+        # at u_t; the trainer calls `accel_point` first.
+        def update(grads, state: OptState, params):
+            step = state.step + 1
+            t = step.astype(jnp.float32)
+            beta = (t + 1.0) / 2.0
+            eta = lr_at(step)
+            v_new = jax.tree.map(
+                lambda v, g: v - eta * g.astype(jnp.float32), state.m, grads)  # eq. 10 at u
+            new_params = jax.tree.map(
+                lambda w, v: (v / beta + (1 - 1 / beta) * w.astype(jnp.float32)).astype(w.dtype),
+                params, v_new)  # eq. 11
+            return new_params, OptState(step, v_new, state.v, state.master)
+        return update
+
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def accel_point(state: OptState, params: Tree) -> Tree:
+    """u_t = beta^-1 v_t + (1-beta^-1) w_t (eq. 9): where accelerated SGD takes
+    its gradient."""
+    t = (state.step + 1).astype(jnp.float32)
+    beta = (t + 1.0) / 2.0
+    return jax.tree.map(
+        lambda v, w: (v / beta + (1 - 1 / beta) * w.astype(jnp.float32)).astype(w.dtype),
+        state.m, params)
+
+
+class PolyakState(NamedTuple):
+    eta_sum: jax.Array
+    avg: Tree
+
+
+def polyak_init(params: Tree) -> PolyakState:
+    return PolyakState(jnp.zeros(()), jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def polyak_update(state: PolyakState, params: Tree, eta: jax.Array) -> PolyakState:
+    s = state.eta_sum + eta
+    avg = jax.tree.map(
+        lambda a, p: (state.eta_sum * a + eta * p.astype(jnp.float32)) / s,
+        state.avg, params)
+    return PolyakState(s, avg)

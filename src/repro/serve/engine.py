@@ -1,0 +1,67 @@
+"""Batched serving: prefill + greedy/temperature decode over the sharded KV
+cache. `serve_step` is the unit the decode-shape dry-runs lower: ONE new token
+against a cache of seq_len."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+
+Tree = Any
+
+
+class ServeState(NamedTuple):
+    cache: Tree
+    last_tokens: jax.Array  # [B, 1]
+    index: jax.Array  # scalar int32: number of valid cache positions
+
+
+def init_serve(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               window_override: int = 0) -> ServeState:
+    cache = registry.init_cache(cfg, batch, max_len, dtype,
+                                window_override=window_override)
+    return ServeState(cache, jnp.zeros((batch, 1), jnp.int32),
+                      jnp.zeros((), jnp.int32))
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            state: ServeState, *, window_override: int = 0) -> ServeState:
+    logits, cache = registry.prefill(params, cfg, batch, state.cache,
+                                     window_override=window_override)
+    nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    return ServeState(cache, nxt, jnp.asarray(batch["tokens"].shape[1], jnp.int32))
+
+
+def serve_step(params, cfg: ModelConfig, state: ServeState, *,
+               window_override: int = 0, temperature: float = 0.0,
+               key: Optional[jax.Array] = None) -> Tuple[ServeState, jax.Array]:
+    """Decode ONE token for the whole batch. Returns (state, token [B, 1])."""
+    logits, cache = registry.decode_step(params, cfg, state.last_tokens,
+                                         state.cache, state.index,
+                                         window_override=window_override)
+    lf = logits[:, -1].astype(jnp.float32)
+    if temperature > 0.0 and key is not None:
+        nxt = jax.random.categorical(key, lf / temperature, axis=-1)[:, None]
+    else:
+        nxt = jnp.argmax(lf, axis=-1)[:, None]
+    nxt = nxt.astype(jnp.int32)
+    return ServeState(cache, nxt, state.index + 1), nxt
+
+
+def generate(params, cfg: ModelConfig, prompt: Dict[str, jax.Array], max_len: int,
+             steps: int, *, dtype=jnp.bfloat16, window_override: int = 0) -> jax.Array:
+    """Simple eager generate loop (examples / tests)."""
+    B = prompt["tokens"].shape[0]
+    st = init_serve(cfg, B, max_len, dtype, window_override=window_override)
+    st = prefill(params, cfg, prompt, st, window_override=window_override)
+    toks = [st.last_tokens]
+    step = jax.jit(lambda s: serve_step(params, cfg, s,
+                                        window_override=window_override))
+    for _ in range(steps - 1):
+        st, t = step(st)
+        toks.append(t)
+    return jnp.concatenate(toks, axis=1)

@@ -1,0 +1,68 @@
+"""Minimal dependency-free checkpointing: pytree -> a directory with one .npy
+per leaf plus a JSON manifest (paths, dtypes, optimizer step, RunConfig echo).
+
+Arrays are fetched with jax.device_get (works for sharded arrays on any
+addressable mesh) and restored with the caller-provided sharding function, so
+restore works across mesh changes — the manifest stores only logical shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+Tree = Any
+
+_SEP = "::"
+
+
+def _flatten(tree: Tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out
+
+
+def save(path: str, tree: Tree, *, step: int = 0, meta: Optional[dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {"step": step, "meta": meta or {}, "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace("/", "_") + ".npy"
+        np.save(os.path.join(path, fname), arr)
+        manifest["leaves"][key] = {"file": fname, "dtype": str(arr.dtype),
+                                   "shape": list(arr.shape)}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like: Tree, *, put: Optional[Callable] = None) -> Tree:
+    """Restore into the structure of `like`. `put(key, np_array)` may place each
+    leaf onto devices (e.g. with a NamedSharding); default: jnp.asarray."""
+    import jax.numpy as jnp
+
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_like = _flatten(like)
+    leaves_out = {}
+    for key in flat_like:
+        ent = manifest["leaves"][key]
+        arr = np.load(os.path.join(path, ent["file"]))
+        leaves_out[key] = put(key, arr) if put else jnp.asarray(arr)
+    # rebuild in the order of `like`'s flatten
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = [_SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in paths_leaves]
+    return jax.tree_util.tree_unflatten(treedef, [leaves_out[k] for k in keys])
+
+
+def loaded_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["step"]

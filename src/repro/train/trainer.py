@@ -1,0 +1,168 @@
+"""Framework-scale streaming trainer: builds the sharded train_step for a
+RunConfig, with the paper's averaging mode as a first-class switch.
+
+Two representations:
+
+* **exact** (paper-faithful DMB, Alg. 1): standard data-parallel pjit. The mean
+  loss over the global batch makes XLA emit the AllReduce of gradients — exactly
+  the paper's exact-averaging step 7 (B = global batch, N = data-parallel size,
+  local mini-batch B/N per node).
+* **gossip / hierarchical** (D-SGD, Algs. 3-4 / TPU adaptation): decentralized
+  parameters. Every leaf carries a leading node axis sharded over the data mesh
+  axes; per-node gradients are computed with vmap and mixed by
+  `core.averaging.average_gradients` (R rounds of collective-permute consensus);
+  each node applies its own optimizer update. Node disagreement is observable
+  via `core.averaging.consensus_error`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.core.averaging import average_gradients, consensus_error
+from repro.launch import sharding as shlib
+from repro.launch.mesh import data_axes, n_data_nodes
+from repro.models import registry
+from repro.models.common import mesh_rules
+from repro.optim import init_optimizer, make_optimizer
+
+Tree = Any
+
+
+class TrainState(NamedTuple):
+    params: Tree
+    opt: Tree
+
+
+def _dtype(run: RunConfig):
+    return jnp.dtype(run.param_dtype)
+
+
+def init_state(run: RunConfig, key) -> TrainState:
+    params = registry.init_params(key, run.model, _dtype(run))
+    use_master = run.master_weights and _dtype(run) != jnp.float32
+    return TrainState(params, init_optimizer(run.optimizer, params,
+                                             master_weights=use_master))
+
+
+def replicate_for_nodes(state: TrainState, n_nodes: int) -> TrainState:
+    """Attach the decentralized node axis (identical initial copies)."""
+    return jax.tree.map(lambda p: jnp.broadcast_to(p[None], (n_nodes, *p.shape)),
+                        state)
+
+
+def build_train_step(run: RunConfig, mesh) -> Tuple[Callable, Callable]:
+    """Returns (train_step, state_spec_fn).
+
+    train_step(state, batch) -> (state, metrics); call under `mesh_rules`.
+    """
+    cfg = run.model
+    update = make_optimizer(run.optimizer, run.learning_rate,
+                            weight_decay=run.weight_decay)
+    n_nodes = n_data_nodes(mesh)
+    pods = mesh.shape.get("pod", 1)
+    decentralized = run.averaging.mode != "exact"
+
+    def loss(params, batch):
+        return registry.loss_fn(params, cfg, batch, remat=run.remat)
+
+    if not decentralized:
+        def grad_of(params, batch):
+            return jax.value_and_grad(loss, has_aux=True)(params, batch)
+
+        # the fp32 grad accumulator must be ZeRO-sharded explicitly: left to
+        # propagation, XLA keeps the scan carry model-sharded only (8x memory)
+        state_shapes = jax.eval_shape(lambda k: init_state(run, k),
+                                      jax.random.PRNGKey(0))
+        gspec = shlib.zero1_specs(state_shapes.params, mesh)
+
+        def shard_like_zero1(tree):
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, jax.NamedSharding(mesh, s)), tree, gspec)
+
+        def train_step(state: TrainState, batch):
+            mb = run.microbatches
+            if mb > 1:
+                # gradient accumulation: process the local mini-batch B/N in
+                # `mb` sequential slices (paper Section II-C, compute-limited)
+                mbatch = jax.tree.map(
+                    lambda a: a.reshape(mb, a.shape[0] // mb, *a.shape[1:]), batch)
+
+                def acc_fn(accu, b):
+                    (l, metrics), grads = grad_of(state.params, b)
+                    # reduce to ZeRO slices BEFORE the f32 cast: otherwise a
+                    # full f32 copy of the gradient tree goes live per microbatch
+                    grads = shard_like_zero1(grads)
+                    acc_g, acc_l, acc_m = accu
+                    acc_g = jax.tree.map(
+                        lambda x, g: x + g.astype(jnp.float32) / mb, acc_g, grads)
+                    acc_g = shard_like_zero1(acc_g)
+                    return (acc_g, acc_l + l / mb,
+                            jax.tree.map(lambda x, y: x + y / mb, acc_m, metrics)), None
+
+                zero_g = shard_like_zero1(jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), state.params))
+                zero_m = {"ce": jnp.zeros(()), "aux": jnp.zeros(())}
+                (grads, l, metrics), _ = jax.lax.scan(
+                    acc_fn, (zero_g, jnp.zeros(()), zero_m), mbatch)
+            else:
+                (l, metrics), grads = grad_of(state.params, batch)
+            new_params, new_opt = update(grads, state.opt, state.params)
+            metrics = dict(metrics, loss=l, consensus_err=jnp.zeros(()))
+            return TrainState(new_params, new_opt), metrics
+        return train_step, partial(_state_specs, run=run, mesh=mesh, node_axes=None)
+
+    node_axes = data_axes(mesh)
+
+    def train_step(state: TrainState, batch):
+        # batch leaves: [n_nodes, B/n_nodes, ...]
+        def node_loss_grad(params, node_batch):
+            return jax.value_and_grad(loss, has_aux=True)(params, node_batch)
+
+        (l, metrics), grads = jax.vmap(node_loss_grad)(state.params, batch)
+        mixed = average_gradients(grads, run.averaging, n_nodes=n_nodes, pods=pods)
+        cerr = consensus_error(mixed)
+        new_params, new_opt = jax.vmap(update)(mixed, state.opt, state.params)
+        metrics = jax.tree.map(jnp.mean, metrics)
+        metrics = dict(metrics, loss=jnp.mean(l), consensus_err=cerr)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step, partial(_state_specs, run=run, mesh=mesh, node_axes=node_axes)
+
+
+def _state_specs(state_shapes: TrainState, *, run: RunConfig, mesh, node_axes):
+    # FSDP: params sharded over model AND data axes (all-gathered per layer at
+    # use under the scan); decentralized mode instead uses the node axis.
+    pspec = (shlib.param_specs(state_shapes.params, mesh, node_axes=node_axes)
+             if node_axes else shlib.zero1_specs(state_shapes.params, mesh))
+
+    def opt_spec(leaf):
+        # OptState.step is scalar; moment trees mirror params
+        return None
+
+    # opt state: map each leaf by matching structure against params where possible
+    opt = state_shapes.opt
+    same = lambda t: jax.tree_util.tree_structure(t) == jax.tree_util.tree_structure(
+        state_shapes.params)
+    # ZeRO-1: fp32 Adam moments additionally sharded over the data axes
+    m_spec = shlib.zero1_specs(opt.m, mesh, node_axes=node_axes) if same(
+        opt.m) else jax.tree.map(lambda _: jax.sharding.PartitionSpec(), opt.m)
+    v_spec = shlib.zero1_specs(opt.v, mesh, node_axes=node_axes) if same(
+        opt.v) else jax.tree.map(lambda _: jax.sharding.PartitionSpec(), opt.v)
+    master_spec = (shlib.zero1_specs(opt.master, mesh, node_axes=node_axes)
+                   if opt.master != () else ())
+    from repro.optim.optimizers import OptState
+    return TrainState(pspec, OptState(jax.sharding.PartitionSpec(), m_spec,
+                                      v_spec, master_spec))
+
+
+def make_node_batch(batch: Dict[str, jax.Array], n_nodes: int) -> Dict[str, jax.Array]:
+    """[B, ...] -> [n_nodes, B/n_nodes, ...] (the splitter of Fig. 3(c))."""
+    return jax.tree.map(
+        lambda a: a.reshape(n_nodes, a.shape[0] // n_nodes, *a.shape[1:]), batch)

@@ -1,0 +1,67 @@
+"""Executed by test_trainer_dist.py in a subprocess with 8 fake host devices:
+trains a reduced arch with each averaging mode on a real (8, 1) mesh and prints
+JSON metrics for the parent test to assert on."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import AveragingConfig, RunConfig, SHAPES, StreamConfig
+from repro.core.averaging import consensus_error
+from repro.data.lm import MarkovTokenStream
+from repro.launch.mesh import make_host_mesh, n_data_nodes
+from repro.launch.sharding import activation_rules
+from repro.models.common import mesh_rules
+from repro.train.trainer import (build_train_step, init_state, make_node_batch,
+                                 replicate_for_nodes)
+
+
+def train(mode: str, rounds: int, steps: int = 12, arch: str = "granite-8b"):
+    cfg = reduced(get_config(arch))
+    run = RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                    averaging=AveragingConfig(mode=mode, rounds=rounds),
+                    optimizer="adam", learning_rate=2e-3, param_dtype="float32")
+    mesh = make_host_mesh()
+    n_nodes = n_data_nodes(mesh)
+    decentralized = mode != "exact"
+    data = MarkovTokenStream(cfg.vocab_size, seed=0)
+    rng = np.random.default_rng(0)
+
+    with mesh_rules(mesh, activation_rules(mesh, run.shape, decentralized)):
+        state = init_state(run, jax.random.PRNGKey(0))
+        if decentralized:
+            state = replicate_for_nodes(state, n_nodes)
+        step, _ = build_train_step(run, mesh)
+        step = jax.jit(step)
+        losses, cerrs = [], []
+        for _ in range(steps):
+            toks = data.sample(rng, 16, 65)
+            batch = {"tokens": jnp.asarray(toks[:, :-1]),
+                     "labels": jnp.asarray(toks[:, 1:])}
+            if decentralized:
+                batch = make_node_batch(batch, n_nodes)
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+            cerrs.append(float(metrics["consensus_err"]))
+        # node disagreement on the parameters themselves
+        if decentralized:
+            spread = float(consensus_error(
+                {"p": jax.tree.leaves(state.params)[0]}))
+        else:
+            spread = 0.0
+    return {"mode": mode, "losses": losses, "consensus_errs": cerrs,
+            "param_spread": spread, "n_nodes": n_nodes,
+            "n_devices": len(jax.devices())}
+
+
+if __name__ == "__main__":
+    mode = sys.argv[1] if len(sys.argv) > 1 else "exact"
+    rounds = int(sys.argv[2]) if len(sys.argv) > 2 else 2
+    print(json.dumps(train(mode, rounds)))

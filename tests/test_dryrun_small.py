@@ -1,0 +1,76 @@
+"""CI-scale proof of the dry-run machinery: a subprocess with 8 fake devices
+lowers + compiles train and decode steps for reduced archs on a 4x2 mesh and
+reports memory/cost/collective stats — the same code path the production
+16x16 / 2x16x16 sweep uses (artifacts in artifacts/dryrun)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+WORKER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax, jax.numpy as jnp
+import dataclasses
+import repro.launch.dryrun as dr
+import repro.configs as C
+from repro.launch import sharding as shlib
+from repro.models.common import mesh_rules
+
+arch, shape = sys.argv[1], sys.argv[2]
+orig_get = C.get_config
+small = C.reduced(orig_get(arch))
+dr.get_config = lambda a: small
+# shrink the input shapes to CI size
+base = C.SHAPES[shape]
+tiny = dataclasses.replace(base, seq_len=256, global_batch=8)
+dr.SHAPES = dict(C.SHAPES); dr.SHAPES[shape] = tiny
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rules = shlib.activation_rules(mesh, tiny)
+with mesh_rules(mesh, rules):
+    fn, args, _ = dr.build_lowerable(arch, shape, mesh, "exact", 1, microbatches=1)
+    compiled = fn.lower(*args).compile()
+ma = compiled.memory_analysis()
+ca = compiled.cost_analysis() or {}
+print(json.dumps({
+    "temp_gib": ma.temp_size_in_bytes / 2**30,
+    "flops": ca.get("flops", 0.0),
+    "collectives": dr.parse_collectives(compiled.as_text()),
+}))
+"""
+
+
+def _run(arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    p = subprocess.run([sys.executable, "-c", WORKER, arch, shape],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert p.returncode == 0, p.stderr[-3000:]
+    return json.loads(p.stdout.strip().splitlines()[-1])
+
+
+# NOTE: reduced qwen2-moe (4 experts on a model=2 axis) trips an XLA SPMD
+# partitioner CHECK (device_groups 2 vs 8) at this toy mesh; the full config on
+# the production 16x16 / 2x16x16 meshes compiles fine (see artifacts/dryrun).
+# The MoE family is covered here by reduced llama4 instead.
+@pytest.mark.parametrize("arch,shape", [
+    ("granite-8b", "train_4k"),
+    ("llama4-scout-17b-a16e", "train_4k"),
+    ("mamba2-2.7b", "decode_32k"),
+])
+def test_small_mesh_dryrun_compiles(arch, shape):
+    rec = _run(arch, shape)
+    assert rec["flops"] > 0
+    assert rec["temp_gib"] < 8.0
+    # data-parallel training must exhibit gradient aggregation collectives
+    if shape == "train_4k":
+        assert rec["collectives"].get("all-reduce", 0) > 0 or \
+            rec["collectives"].get("reduce-scatter", 0) > 0

@@ -1,0 +1,116 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs the pure-jnp oracle
+in repro.kernels.ref, swept over shapes, dtypes and mask configurations, plus
+hypothesis property tests on the Krasulina kernel's invariants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.problems import krasulina_xi as core_xi
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.krasulina_update import krasulina_xi_pallas
+
+
+# ---------------------------------------------------------------------------
+# Krasulina kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,d", [(8, 16), (256, 128), (300, 257), (1024, 64), (5, 3072)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_krasulina_kernel_matches_ref(B, d, dtype):
+    kw, kz = jax.random.split(jax.random.PRNGKey(0))
+    w = jax.random.normal(kw, (d,), dtype)
+    z = jax.random.normal(kz, (B, d), dtype)
+    got = krasulina_xi_pallas(w, z, interpret=True)
+    want = ref.krasulina_xi_ref(w, z)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_krasulina_ref_matches_core_problems():
+    """ref.py oracle == the algorithmic definition used by core.krasulina."""
+    kw, kz = jax.random.split(jax.random.PRNGKey(1))
+    w = jax.random.normal(kw, (32,))
+    z = jax.random.normal(kz, (64, 32))
+    np.testing.assert_allclose(np.asarray(ref.krasulina_xi_ref(w, z)),
+                               np.asarray(core_xi(w, z)), rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 64), st.integers(2, 48), st.integers(16, 400))
+@settings(max_examples=20, deadline=None)
+def test_krasulina_kernel_property(seed, d, B):
+    """Invariant (Krasulina = projected update): xi is orthogonal to nothing in
+    general, but <xi, w> relates to the Rayleigh quotient: w^T xi = 0 exactly."""
+    kw, kz = jax.random.split(jax.random.PRNGKey(seed))
+    w = jax.random.normal(kw, (d,))
+    z = jax.random.normal(kz, (B, d))
+    xi = krasulina_xi_pallas(w, z, interpret=True, block_b=64)
+    # w^T xi = w^T Z^T Z w / B - (|Zw|^2/B / |w|^2) * w^T w = 0
+    ortho = float(jnp.abs(w @ xi) / (jnp.linalg.norm(w) * jnp.linalg.norm(xi) + 1e-9))
+    assert ortho < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Flash attention kernel
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # (B, H, Sq, Sk, D, causal, window, chunk)
+    (1, 2, 128, 128, 64, True, 0, 0),
+    (2, 2, 256, 256, 64, True, 0, 0),
+    (1, 1, 256, 256, 128, True, 64, 0),   # sliding window
+    (1, 2, 256, 256, 64, True, 0, 128),   # chunked-local (iRoPE)
+    (1, 1, 200, 200, 64, True, 0, 0),     # non-divisible seq (padding path)
+    (1, 1, 128, 384, 64, True, 0, 0),     # decode-ish: Sq < Sk
+]
+
+
+@pytest.mark.parametrize("B,H,Sq,Sk,D,causal,window,chunk", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, H, Sq, Sk, D, causal, window, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, D), dtype)
+    k = jax.random.normal(ks[1], (B, H, Sk, D), dtype)
+    v = jax.random.normal(ks[2], (B, H, Sk, D), dtype)
+    # align positions so q block i attends where a suffix-query would
+    got = flash_attention(q, k, v, causal=causal, window=window, chunk=chunk,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window, chunk=chunk)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_model_blockwise():
+    """The Pallas kernel and the model-side blockwise_attention agree (they are
+    alternative implementations of the same contract)."""
+    from repro.models.layers import blockwise_attention
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, H, S, D = 1, 4, 192, 64
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    # blockwise_attention uses [B, S, H, D] layout
+    want = blockwise_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3), causal=True, kv_block=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want.transpose(0, 2, 1, 3)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_rows_convex(seed):
+    """Each output row is a convex combination of value rows => within [min, max]."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, H, S, D = 1, 1, 128, 32
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    assert float(jnp.max(out)) <= float(jnp.max(v)) + 1e-4
+    assert float(jnp.min(out)) >= float(jnp.min(v)) - 1e-4

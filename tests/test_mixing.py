@@ -1,0 +1,94 @@
+"""Property tests for consensus mixing (paper eq. 17): double stochasticity,
+|lambda_2|^R geometric contraction, and equivalence of the device-path circulant
+schedule with its dense-matrix form.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.configs.base import AveragingConfig
+from repro.core import averaging, mixing
+
+
+@given(st.integers(2, 64), st.sampled_from(["ring", "circulant2", "torus"]))
+@settings(max_examples=40, deadline=None)
+def test_schedule_doubly_stochastic(n, topo):
+    A = mixing.schedule_matrix(mixing.schedule(topo, n), n)
+    assert mixing.is_doubly_stochastic(A)
+    assert mixing.lambda2(A) < 1.0 - 1e-9  # connected => contraction
+
+
+@given(st.integers(8, 40), st.integers(1, 12))
+@settings(max_examples=25, deadline=None)
+def test_consensus_contraction_rate(n, rounds):
+    """||A^R v - vbar|| <= lambda_2^R ||v - vbar|| for symmetric mixing."""
+    A = mixing.schedule_matrix(mixing.schedule("ring", n), n)
+    lam2 = mixing.lambda2(A)
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(n, 3))
+    vbar = v.mean(0, keepdims=True)
+    out = np.linalg.matrix_power(A, rounds) @ v
+    lhs = np.linalg.norm(out - vbar)
+    rhs = (lam2**rounds) * np.linalg.norm(v - vbar) + 1e-9
+    assert lhs <= rhs * (1 + 1e-6)
+
+
+@given(st.integers(10, 60))
+@settings(max_examples=15, deadline=None)
+def test_expander_matrix(n):
+    A = mixing.random_regular_expander(n, deg=4, seed=1)
+    assert mixing.is_doubly_stochastic(A)
+    assert mixing.lambda2(A) < 1.0
+
+
+@pytest.mark.parametrize("topo", ["ring", "circulant2", "torus"])
+@pytest.mark.parametrize("rounds", [1, 3])
+def test_device_gossip_matches_dense(topo, rounds):
+    """gossip_average (roll-based, device path) == dense A^R matmul."""
+    n = 12
+    rng = np.random.default_rng(2)
+    v = rng.normal(size=(n, 5)).astype(np.float32)
+    cfg = AveragingConfig(mode="gossip", rounds=rounds, topology=topo)
+    got = averaging.gossip_average({"g": jnp.asarray(v)}, n, cfg)["g"]
+    A = mixing.schedule_matrix(mixing.schedule(topo, n), n)
+    want = np.linalg.matrix_power(A, rounds) @ v
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-6)
+
+
+def test_exact_average():
+    v = jnp.arange(12.0).reshape(6, 2)
+    out = averaging.exact_average({"g": v})["g"]
+    np.testing.assert_allclose(np.asarray(out), np.tile(np.asarray(v).mean(0), (6, 1)))
+
+
+def test_hierarchical_average():
+    n, pods = 8, 2
+    rng = np.random.default_rng(3)
+    v = rng.normal(size=(n, 4)).astype(np.float32)
+    cfg = AveragingConfig(mode="hierarchical", rounds=50, topology="ring")
+    out = np.asarray(averaging.hierarchical_average({"g": jnp.asarray(v)}, pods,
+                                                    n // pods, cfg)["g"])
+    # 50 gossip rounds over 2 pods converges to the global mean
+    np.testing.assert_allclose(out, np.tile(v.mean(0), (n, 1)), atol=1e-5)
+
+
+def test_consensus_error_diagnostic():
+    v = jnp.asarray(np.random.default_rng(4).normal(size=(6, 3)).astype(np.float32))
+    e0 = averaging.consensus_error({"g": v})
+    cfg = AveragingConfig(mode="gossip", rounds=30, topology="ring")
+    mixed = averaging.gossip_average({"g": v}, 6, cfg)
+    e1 = averaging.consensus_error(mixed)
+    assert e1 < e0
+    assert e1 < 1e-3
+
+
+def test_quantized_gossip_still_averages_approximately():
+    n = 8
+    v = jnp.asarray(np.random.default_rng(5).normal(size=(n, 16)).astype(np.float32))
+    cfg = AveragingConfig(mode="gossip", rounds=20, topology="ring", quantization="int8")
+    out = averaging.gossip_average({"g": v}, n, cfg)["g"]
+    bar = jnp.mean(v, axis=0)
+    rel = jnp.linalg.norm(out - bar[None]) / jnp.linalg.norm(bar)
+    assert rel < 0.05

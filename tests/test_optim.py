@@ -1,0 +1,85 @@
+"""Optimizer unit tests, including the paper's accelerated updates (eqs. 9-11)
+and Polyak-Ruppert averaging (eq. 7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.optimizers import (accel_point, init_optimizer, make_optimizer,
+                                    polyak_init, polyak_update)
+
+
+def quad_grad(params):
+    return jax.tree.map(lambda p: 2.0 * p.astype(jnp.float32), params)
+
+
+@pytest.mark.parametrize("name,lr", [("sgd", 0.1), ("adam", 0.2), ("accel", 0.05)])
+def test_optimizers_minimize_quadratic(name, lr):
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array([1.0])}
+    state = init_optimizer(name, params)
+    update = make_optimizer(name, lr)
+    for _ in range(200):
+        at = accel_point(state, params) if name == "accel" else params
+        grads = quad_grad(at)
+        params, state = update(grads, state, params)
+    norm = sum(float(jnp.sum(p**2)) for p in jax.tree.leaves(params))
+    assert norm < 1e-2, f"{name}: {norm}"
+
+
+def test_sgd_momentum_state():
+    params = {"w": jnp.ones(3)}
+    state = init_optimizer("sgd", params)
+    update = make_optimizer("sgd", 0.1, momentum=0.9)
+    p1, s1 = update({"w": jnp.ones(3)}, state, params)
+    p2, s2 = update({"w": jnp.ones(3)}, s1, p1)
+    # second step moves further (momentum accumulates)
+    d1 = float(jnp.linalg.norm(params["w"] - p1["w"]))
+    d2 = float(jnp.linalg.norm(p1["w"] - p2["w"]))
+    assert d2 > d1
+
+
+def test_adam_bias_correction_first_step():
+    params = {"w": jnp.zeros(4)}
+    update = make_optimizer("adam", 1e-1, b1=0.9, b2=0.999, eps=1e-12)
+    g = {"w": jnp.full(4, 0.5)}
+    p1, _ = update(g, init_optimizer("adam", params), params)
+    # with bias correction the first step is ~ -lr * sign(g)
+    np.testing.assert_allclose(np.asarray(p1["w"]), -0.1 * np.ones(4), rtol=1e-3)
+
+
+def test_weight_decay():
+    params = {"w": jnp.ones(2)}
+    update = make_optimizer("sgd", 0.1, weight_decay=0.5)
+    p1, _ = update({"w": jnp.zeros(2)}, init_optimizer("sgd", params), params)
+    np.testing.assert_allclose(np.asarray(p1["w"]), 0.95 * np.ones(2), rtol=1e-6)
+
+
+def test_bf16_params_fp32_master_updates():
+    """tiny updates must not vanish in bf16 (fp32 master weights)."""
+    params = {"w": jnp.ones(2, jnp.bfloat16)}
+    update = make_optimizer("adam", 1e-4)
+    state = init_optimizer("adam", params, master_weights=True)
+    p, s = params, state
+    for _ in range(10):
+        p, s = update({"w": jnp.full(2, 1e-3, jnp.bfloat16)}, s, p)
+    assert p["w"].dtype == jnp.bfloat16
+    # the fp32 master moved even though bf16 storage may round
+    assert float(s.master["w"][0]) != 1.0
+    # without master weights the same updates vanish entirely
+    p2, s2 = {"w": jnp.ones(2, jnp.bfloat16)}, init_optimizer("adam", params)
+    for _ in range(10):
+        p2, s2 = update({"w": jnp.full(2, 1e-3, jnp.bfloat16)}, s2, p2)
+    assert float(p2["w"][0]) == 1.0
+
+
+@given(st.lists(st.floats(0.01, 2.0), min_size=2, max_size=10))
+@settings(max_examples=25, deadline=None)
+def test_polyak_is_stepsize_weighted_average(etas):
+    """eq. (7): w_av = sum(eta_t w_t) / sum(eta_t)."""
+    ws = [jnp.array([float(i), -float(i)]) for i in range(len(etas))]
+    state = polyak_init({"w": ws[0]})
+    for eta, w in zip(etas, ws):
+        state = polyak_update(state, {"w": w}, jnp.asarray(eta))
+    want = sum(e * np.asarray(w) for e, w in zip(etas, ws)) / sum(etas)
+    np.testing.assert_allclose(np.asarray(state.avg["w"]), want, rtol=1e-5)

@@ -1,0 +1,81 @@
+"""The rate model (paper Section II-C, eqs. 3-4) and the provisioning planner."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import StreamConfig
+from repro.core import rates
+
+
+def test_effective_rate_matches_eq4():
+    # Fig. 5's setting: N=10, Rp=1.25e5, Rc in {1e3, 1e4}
+    B, N, R, Rp, Rc = 500, 10, 10, 1.25e5, 1e4
+    Re = rates.effective_rate(B, N, R, Rp, Rc)
+    assert Re == pytest.approx(1.0 / (B / (N * Rp) + R / Rc))
+
+
+def test_nondistributed_special_case():
+    # N=1, R=0 -> R_e = R_p / B (paper, below eq. 4)
+    assert rates.effective_rate(200, 1, 0, 1e5, 1e3) == pytest.approx(1e5 / 200)
+
+
+@given(st.integers(1, 64), st.integers(1, 20),
+       st.floats(1e3, 1e7), st.floats(1e3, 1e7), st.floats(1e2, 1e6))
+@settings(max_examples=80, deadline=None)
+def test_max_rounds_consistency(N, R, Rs, Rp, Rc):
+    """If R <= max_rounds(B,...) then the system keeps up: R_s <= B*R_e."""
+    B = 64 * N
+    rmax = rates.max_rounds(B, N, Rs, Rp, Rc)
+    if rmax >= 1 and R <= rmax:
+        Re = rates.effective_rate(B, N, R, Rp, Rc)
+        assert Rs <= B * Re * (1 + 1e-9)
+
+
+@given(st.floats(1e4, 1e6), st.floats(1e4, 1e6), st.floats(1e3, 1e5),
+       st.integers(2, 32), st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_planner_keeps_up_when_feasible(Rs, Rp, Rc, N, R):
+    sc = StreamConfig(streaming_rate=Rs, processing_rate=Rp, comms_rate=Rc)
+    if Rs >= N * Rp * 0.999:
+        return  # infeasible; planner raises (tested separately)
+    p = rates.plan(sc, N, R)
+    assert p.B % N == 0
+    # with the planned B the system keeps up without discards
+    assert p.mu == 0
+    assert Rs <= p.B * p.Re * (1 + 1e-6)
+
+
+def test_planner_infeasible_raises():
+    sc = StreamConfig(streaming_rate=1e6, processing_rate=1e4, comms_rate=1e4)
+    with pytest.raises(ValueError):
+        rates.plan(sc, 10, 1)  # N*Rp = 1e5 < Rs
+
+
+def test_planner_underprovisioned_mu():
+    # force a small B so the system cannot keep up -> mu > 0 (Alg. 1 step 9)
+    sc = StreamConfig(streaming_rate=1e6, processing_rate=1.25e5, comms_rate=1e3)
+    p = rates.plan(sc, 10, 10, B=500)
+    assert p.regime == "under-provisioned"
+    assert p.mu > 0
+    Re = rates.effective_rate(500, 10, 10, 1.25e5, 1e3)
+    assert p.mu == math.ceil(1e6 / Re - 500)
+
+
+def test_horizon_ceiling_thm4():
+    # B is clipped to sqrt(t') per Theorem 4's order-optimality condition
+    sc = StreamConfig(streaming_rate=1e5, processing_rate=1e5, comms_rate=1e5)
+    p = rates.plan(sc, 10, 1, B=100_000, horizon_samples=1e6)
+    assert p.B <= math.sqrt(1e6)
+
+
+def test_min_comms_rate_eq26():
+    # eq. (26): increasing B relaxes the R_c requirement
+    r1 = rates.min_comms_rate_for_optimality(100, 10, 5, 1e5, 1e5)
+    r2 = rates.min_comms_rate_for_optimality(1000, 10, 5, 1e5, 1e5)
+    assert r2 < r1
+
+
+def test_dmb_stepsize_thm4():
+    assert rates.dmb_stepsize(1, L=2.0, sigma=1.0, D_W=1.0) == pytest.approx(1 / 3)
+    assert rates.dmb_stepsize(100, 2.0, 1.0, 1.0) == pytest.approx(1 / 12)

@@ -1,0 +1,38 @@
+"""Ring-buffer windowed KV cache (perf iteration): a W-slot ring must reproduce
+full-cache decoding exactly for sliding-window attention."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import registry
+
+
+@pytest.mark.parametrize("prefill_len", [100, 150])  # < W and > W after ring
+def test_ring_matches_full_cache(prefill_len):
+    cfg = dataclasses.replace(reduced(get_config("starcoder2-15b")),
+                              ring_buffer_cache=True)
+    W = cfg.sliding_window
+    assert W == 128
+    total = prefill_len + 10
+    params = registry.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, total), 0,
+                              cfg.vocab_size, jnp.int32)
+    full, _, _ = registry.forward(params, cfg, {"tokens": toks}, remat=False)
+
+    cache = registry.init_cache(cfg, 1, total, jnp.float32)
+    # the attention cache is ring-sized (capped at W), not seq-sized
+    assert jax.tree.leaves(cache)[0].shape[2] == min(W, total)
+    logits, cache = registry.prefill(params, cfg,
+                                     {"tokens": toks[:, :prefill_len]}, cache)
+    assert jnp.allclose(logits[:, -1], full[:, prefill_len - 1], atol=3e-3)
+    outs = []
+    for i in range(prefill_len, total):
+        lg, cache = registry.decode_step(params, cfg, toks[:, i:i + 1], cache,
+                                         jnp.asarray(i, jnp.int32))
+        outs.append(lg)
+    inc = jnp.concatenate(outs, 1)
+    assert jnp.allclose(inc, full[:, prefill_len:], atol=5e-3), float(
+        jnp.max(jnp.abs(inc - full[:, prefill_len:])))

@@ -1,0 +1,118 @@
+"""Unit tests for the sharding-rule engine: name-table resolution, divisibility
+fallbacks, ZeRO/FSDP dp-axis injection, and cache specs per shape."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch import sharding as shlib
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape and axis_names are consulted by the rules."""
+
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _leaf(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+
+def test_basic_name_specs():
+    params = {"wq": _leaf((4096, 4096)), "w_down": _leaf((14336, 4096)),
+              "scale": _leaf((4096,))}
+    specs = shlib.param_specs(params, MESH)
+    assert specs["wq"] == P(None, "model")
+    assert specs["w_down"] == P("model", None)
+    assert specs["scale"] == P(None)
+
+
+def test_stacked_layers_get_lead_padding():
+    params = {"wq": _leaf((36, 4096, 4096))}
+    specs = shlib.param_specs(params, MESH)
+    assert specs["wq"] == P(None, None, "model")
+
+
+def test_vocab_fallback_to_dmodel():
+    # 50280 % 16 != 0 -> embed falls back to (None, model)
+    specs = shlib.param_specs({"embed": _leaf((50280, 2560))}, MESH)
+    assert specs["embed"] == P(None, "model")
+    specs = shlib.param_specs({"embed": _leaf((49152, 4096))}, MESH)
+    assert specs["embed"] == P("model", None)
+
+
+def test_moe_expert_fallback():
+    # 60 experts % 16 != 0 -> tensor-shard within experts (d_ff 1408 % 16 == 0)
+    specs = shlib.param_specs({"we_gate": _leaf((24, 60, 2048, 1408))}, MESH)
+    assert specs["we_gate"] == P(None, None, None, "model")
+    # 16 experts -> true expert parallelism
+    specs = shlib.param_specs({"we_gate": _leaf((12, 16, 5120, 8192))}, MESH)
+    assert specs["we_gate"] == P(None, "model", None, None)
+
+
+def test_node_axes_prepended():
+    specs = shlib.param_specs({"wq": _leaf((16, 4096, 4096))}, MESH,
+                              node_axes=("data",))
+    assert specs["wq"] == P(("data",), None, "model")
+
+
+def test_zero1_adds_dp_on_divisible_dim():
+    specs = shlib.zero1_specs({"wq": _leaf((36, 4096, 4096))}, MESH)
+    # 36 % 16 != 0, so dp lands on the 4096 dim
+    assert specs["wq"] == P(None, ("data",), "model")
+
+
+def test_zero1_skips_when_nothing_divides():
+    specs = shlib.zero1_specs({"lam": _leaf((37,))}, MESH)
+    assert specs["lam"] == P(None)
+
+
+def test_cache_specs_decode_batch_sharded():
+    cache = {"layers": [{"k": _leaf((40, 128, 32768, 4, 128)),
+                         "v": _leaf((40, 128, 32768, 4, 128))}]}
+    specs = shlib.cache_specs(cache, MESH, SHAPES["decode_32k"])
+    # KH=4 < 16 -> falls to sequence sharding over model; batch over data
+    assert specs["layers"][0]["k"] == P(None, ("data",), "model", None, None)
+
+
+def test_cache_specs_long500k_sequence_sharded():
+    cache = {"layers": [{"k": _leaf((36, 1, 524288, 8, 128))}]}
+    specs = shlib.cache_specs(cache, MESH, SHAPES["long_500k"])
+    assert specs["layers"][0]["k"] == P(None, None, ("data",), None, "model")
+
+
+def test_ssd_state_heads_over_model():
+    cache = {"layers": [{"h": _leaf((64, 128, 80, 64, 128)),
+                         "conv": _leaf((64, 128, 3, 5376))}]}
+    specs = shlib.cache_specs(cache, MESH, SHAPES["decode_32k"])
+    assert specs["layers"][0]["h"] == P(None, ("data",), "model", None, None)
+    assert specs["layers"][0]["conv"] == P(None, ("data",), None, "model")
+
+
+def test_multipod_dp_is_pod_and_data():
+    specs = shlib.zero1_specs({"wq": _leaf((4096, 4096))}, POD)
+    assert specs["wq"] == P(("pod", "data"), "model")
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "qwen2-moe-a2.7b", "mamba2-2.7b",
+                                  "seamless-m4t-medium"])
+def test_full_param_tree_resolves(arch):
+    from repro.models import registry
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(
+        lambda k: registry.init_params(k, cfg, jnp.bfloat16), jax.random.PRNGKey(0))
+    specs = shlib.param_specs(shapes, MESH)
+    # every sharded dim divides evenly
+    for leaf, spec in zip(jax.tree.leaves(shapes),
+                          jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is not None:
+                size = 16 if not isinstance(ax, tuple) else 16 ** len(ax)
+                assert dim % size == 0, (arch, leaf.shape, spec)
