@@ -1,0 +1,61 @@
+"""Consensus engine benchmark: per-step consensus wall time vs R, per-round
+loop vs the precomputed fused operator (core.mixing.MixOp).
+
+The per-round loop is the slowest-possible form of eq. 17 — R sequential dense
+matmuls (dense path) or (deg+1)*R weighted rolls (circulant path) per step.
+The fused engine precomputes the R-round operator once outside the step, so
+per-step cost is ~one round. Rows emit the fused time with the loop time and
+speedup in the derived column; the dense rows assert the >=2x contract at
+R>=8, N>=16 and allclose(1e-5) against the per-round oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import dsgd, mixing
+
+D = 65_536  # per-node state width: big enough that work, not dispatch, is timed
+
+
+def _dense(N: int, R: int) -> None:
+    A = jnp.asarray(mixing.random_regular_expander(N, deg=6, seed=0), jnp.float32)
+    h = jax.random.normal(jax.random.PRNGKey(0), (N, D), jnp.float32)
+    loop = jax.jit(lambda h: dsgd.consensus(h, A, R))
+    mix = mixing.dense_mix_op(A, R)
+    fused = jax.jit(lambda h: mix(h))
+    np.testing.assert_allclose(np.asarray(fused(h)), np.asarray(loop(h)),
+                               rtol=1e-5, atol=1e-5)
+    t_loop = time_fn(loop, h, iters=5)
+    t_fused = time_fn(fused, h, iters=5)
+    speedup = t_loop / t_fused
+    emit(f"consensus/dense/N{N}_R{R}_d{D}", t_fused,
+         f"loop_us={t_loop:.1f};speedup={speedup:.2f}x")
+    if R >= 8 and N >= 16:
+        assert speedup >= 2.0, (N, R, speedup)
+
+
+def _circulant(N: int, R: int, topo: str) -> None:
+    sched = mixing.schedule(topo, N)
+    h = jax.random.normal(jax.random.PRNGKey(1), (N, D), jnp.float32)
+    loop_op = mixing.circulant_mix_op(sched, N, R, fuse=False)  # per-round loop
+    loop = jax.jit(lambda h: loop_op(h))
+    t_loop = time_fn(loop, h, iters=5)
+    oracle = np.asarray(loop(h))
+    for impl in ("roll", "matmul"):
+        mix = mixing.circulant_mix_op(sched, N, R, impl=impl)
+        fused = jax.jit(lambda h: mix(h))
+        np.testing.assert_allclose(np.asarray(fused(h)), oracle,
+                                   rtol=1e-5, atol=1e-5)
+        t_fused = time_fn(fused, h, iters=5)
+        emit(f"consensus/circulant/{topo}/N{N}_R{R}_{impl}", t_fused,
+             f"loop_us={t_loop:.1f};speedup={t_loop / t_fused:.2f}x")
+
+
+def run() -> None:
+    for N, R in ((16, 8), (16, 16), (64, 8)):
+        _dense(N, R)
+    for N, R in ((16, 8), (16, 16), (64, 8)):
+        _circulant(N, R, "ring")

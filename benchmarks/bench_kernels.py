@@ -13,7 +13,9 @@ from repro.kernels import ref
 
 
 def run() -> None:
-    # Krasulina xi: memory-bound BLAS-2 pass (2*B*d flops over B*d*2 bytes bf16)
+    # Krasulina xi: memory-bound BLAS-2 pass — 4*B*d flops (two fused matvecs)
+    # over one streamed read of Z; bytes follow the ACTUAL array dtype (f32
+    # here, 4 B/elem), so ai = 1 flop/byte at f32 and 2 at bf16
     for B, d in ((1024, 512), (4096, 3072)):
         kw, kz = jax.random.split(jax.random.PRNGKey(0))
         w = jax.random.normal(kw, (d,), jnp.float32)
@@ -21,7 +23,7 @@ def run() -> None:
         f = jax.jit(ref.krasulina_xi_ref)
         us = time_fn(f, w, z)
         flops = 4 * B * d
-        bytes_ = B * d * 4
+        bytes_ = z.size * z.dtype.itemsize
         emit(f"kernel/krasulina/B{B}_d{d}", us,
              f"ai={flops / bytes_:.2f}flops_per_byte")
 

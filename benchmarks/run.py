@@ -13,17 +13,20 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma-separated subset: rates,dmb,krasulina,dsgd,kernels,roofline")
+                    help="comma-separated subset: "
+                         "rates,dmb,krasulina,dsgd,consensus,kernels,roofline")
     args = ap.parse_args()
 
-    from benchmarks import (bench_dmb, bench_dsgd, bench_kernels,
-                            bench_krasulina, bench_rates, bench_roofline)
+    from benchmarks import (bench_consensus, bench_dmb, bench_dsgd,
+                            bench_kernels, bench_krasulina, bench_rates,
+                            bench_roofline)
 
     suites = {
         "rates": bench_rates.run,       # Fig. 5
         "dmb": bench_dmb.run,           # Fig. 6
         "krasulina": bench_krasulina.run,  # Figs. 7-8
         "dsgd": bench_dsgd.run,         # Fig. 9
+        "consensus": bench_consensus.run,  # fused engine vs per-round loop
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,  # deliverable (g)
     }

@@ -6,47 +6,50 @@ the gradient pytree (sharded over the mesh's data axes), so averaging modes are
 pure array programs whose collectives are visible in the lowered HLO:
 
 * exact        -- mean over the node axis == AllReduce (DMB, Section IV)
-* gossip       -- R rounds of circulant consensus: weighted `jnp.roll`s, which
-                  XLA lowers to `collective-permute` chains (Section V, eq. 17)
+* gossip       -- R rounds of circulant consensus (Section V, eq. 17), executed
+                  through `core.mixing.CirculantMixOp`: with quantization off
+                  the R-round operator is precomputed once and applied in a
+                  single pass (weighted `jnp.roll`s / one circulant matmul /
+                  the fused Pallas kernel on TPU)
 * hierarchical -- exact within pod, gossip across pods (TPU adaptation)
 
-Optional message quantization (Section VI) compresses each round's messages.
+Optional message quantization (Section VI) compresses each round's messages;
+quantized configs keep the exact per-round loop (the compressor is nonlinear,
+so the operator must not be collapsed).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AveragingConfig
-from repro.core.mixing import schedule
-from repro.core.quantize import COMPRESSORS
+from repro.core.mixing import CirculantMixOp, circulant_mix_op, schedule
 
 Tree = Any
 
 
-def _roll_mix(x: jax.Array, sched, compress) -> jax.Array:
-    """One consensus round over axis 0 of x via weighted circular shifts."""
-    out = None
-    for shift, w in sched:
-        msg = x if shift == 0 else compress(jnp.roll(x, shift, axis=0))
-        term = w * msg
-        out = term if out is None else out + term
-    return out
+def make_gossip_mix(cfg: AveragingConfig, n_nodes: int, *,
+                    impl: str = "roll") -> CirculantMixOp:
+    """Build the consensus engine for a config — once, outside the train step.
+    For `mode="hierarchical"` pass the pod count as `n_nodes`.
 
-
-def gossip_average(tree: Tree, n_nodes: int, cfg: AveragingConfig) -> Tree:
-    """R rounds of doubly-stochastic consensus over the leading node axis."""
+    Defaults to the "roll" execution (single fused pass of weighted rolls):
+    the node axis here is typically SHARDED over mesh data axes, and rolls are
+    the form GSPMD partitions into collective-permute chains — the Pallas
+    kernel and dense-matmul impls have no partitioning rule and are opt-in
+    for unsharded layouts."""
     sched = schedule(cfg.topology, n_nodes, cfg.self_weight)
-    compress = COMPRESSORS[cfg.quantization]
+    return circulant_mix_op(sched, n_nodes, cfg.rounds,
+                            quantization=cfg.quantization, impl=impl)
 
-    def mix(g):
-        for _ in range(cfg.rounds):
-            g = _roll_mix(g, sched, compress)
-        return g
 
+def gossip_average(tree: Tree, n_nodes: int, cfg: AveragingConfig,
+                   mix: Optional[CirculantMixOp] = None) -> Tree:
+    """R rounds of doubly-stochastic consensus over the leading node axis."""
+    if mix is None:
+        mix = make_gossip_mix(cfg, n_nodes)
     return jax.tree.map(mix, tree)
 
 
@@ -56,29 +59,37 @@ def exact_average(tree: Tree) -> Tree:
 
 
 def hierarchical_average(tree: Tree, pods: int, per_pod: int,
-                         cfg: AveragingConfig) -> Tree:
+                         cfg: AveragingConfig,
+                         mix: Optional[CirculantMixOp] = None) -> Tree:
     """Exact psum within each pod (fast ICI), gossip across pods (slow DCN)."""
-    def mix(g):
+    if mix is None:
+        mix = make_gossip_mix(cfg, pods)
+
+    def hmix(g):
         shp = g.shape
         g = g.reshape(pods, per_pod, *shp[1:])
         g = jnp.broadcast_to(jnp.mean(g, axis=1, keepdims=True), g.shape)
-        gp = gossip_average(g[:, 0], pods, cfg)
+        gp = mix(g[:, 0])
         g = jnp.broadcast_to(gp[:, None], g.shape)
         return g.reshape(shp)
 
-    return jax.tree.map(mix, tree)
+    return jax.tree.map(hmix, tree)
 
 
 def average_gradients(tree: Tree, cfg: AveragingConfig, *, n_nodes: int,
-                      pods: int = 1) -> Tree:
-    """Dispatch on the paper's averaging mode. `tree` leaves: [n_nodes, ...]."""
+                      pods: int = 1,
+                      mix: Optional[CirculantMixOp] = None) -> Tree:
+    """Dispatch on the paper's averaging mode. `tree` leaves: [n_nodes, ...].
+
+    `mix` is the prebuilt consensus engine (gossip: over `n_nodes`;
+    hierarchical: over `pods`); built from `cfg` on the fly when omitted."""
     if cfg.mode == "exact":
         return exact_average(tree)
     if cfg.mode == "gossip":
-        return gossip_average(tree, n_nodes, cfg)
+        return gossip_average(tree, n_nodes, cfg, mix)
     if cfg.mode == "hierarchical":
         assert n_nodes % pods == 0
-        return hierarchical_average(tree, pods, n_nodes // pods, cfg)
+        return hierarchical_average(tree, pods, n_nodes // pods, cfg, mix)
     raise ValueError(f"unknown averaging mode {cfg.mode!r}")
 
 

@@ -6,6 +6,12 @@ Decentralized-parameter model: every node keeps its own iterate; the state is
 [N, d]. Consensus mixes the *gradients* (Alg. 3 steps 7-10). D-SGD additionally
 maintains the stepsize-weighted Polyak-Ruppert average per node (step 13);
 AD-SGD maintains the (u, v, w) Nesterov triple per node (Alg. 4).
+
+The consensus hot path goes through `core.mixing.MixOp`: the effective R-round
+operator A^R is precomputed once outside the training scan, so each step costs
+one [N, N] matmul instead of R. Drivers are wrapped in a top-level `jax.jit`
+with buffer donation so long-horizon streaming runs update the [N, d] state
+in place instead of re-allocating it every step.
 """
 from __future__ import annotations
 
@@ -13,6 +19,8 @@ from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.mixing import DenseMixOp, dense_mix_op
 
 
 class DSGDResult(NamedTuple):
@@ -23,13 +31,26 @@ class DSGDResult(NamedTuple):
 
 
 def consensus(h: jax.Array, A: jax.Array, rounds: int) -> jax.Array:
-    """R rounds of averaging consensus: h <- A h (eq. 17). h: [N, d]."""
+    """R rounds of averaging consensus: h <- A h (eq. 17). h: [N, d].
+
+    Per-round oracle form — the fused engine (`core.mixing.dense_mix_op`)
+    matches this to float accuracy with a single precomputed matmul."""
     def body(h, _):
         return A @ h, None
     if rounds == 0:
         return h
     h, _ = jax.lax.scan(body, h, None, length=rounds)
     return h
+
+
+def jit_driver(fn: Callable) -> Callable:
+    """Top-level jit for a scan driver `fn(init, ts)`, donating the carry
+    buffers where the backend supports it (CPU does not — donating there only
+    emits warnings). Compiles per driver invocation (the closure is fresh each
+    call) — same as the pre-jit tracing cost; the win is in-place [N, d] state
+    updates across the steps *within* a run."""
+    donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+    return jax.jit(fn, donate_argnums=donate)
 
 
 def run_dsgd(
@@ -46,6 +67,7 @@ def run_dsgd(
     trace_metric: Optional[Callable] = None,
     accelerated: bool = False,
     beta: Optional[Callable] = None,  # AD-SGD beta_t (default (t+1)/2)
+    mix: Optional[DenseMixOp] = None,  # override the consensus engine
     seed: int = 0,
 ) -> DSGDResult:
     N = A.shape[0]
@@ -53,18 +75,23 @@ def run_dsgd(
     proj = project or (lambda w: w)
     metric = trace_metric or (lambda w: jnp.zeros(()))
     beta_fn = beta or (lambda t: (t + 1.0) / 2.0)
+    # the R-round operator, precomputed ONCE outside the scan
+    mix = mix if mix is not None else dense_mix_op(A, rounds)
 
     def local_grads(w_nodes, key):
         z = draw(key, B)
         z = jax.tree.map(lambda a: a.reshape(N, B // N, *a.shape[1:]), z)
         return jax.vmap(lambda w, zn: grad_fn(w, *jax.tree.leaves(zn)))(w_nodes, z)
 
+    ts = jnp.arange(1, steps + 1)
+    t_prime = ts * B
+
     if not accelerated:
         def round_fn(carry, t):
             w, w_av, eta_sum, key = carry
             key, kd = jax.random.split(key)
             g = local_grads(w, kd)  # [N, d] (steps 2-6)
-            h = consensus(g, A, rounds)  # steps 7-10
+            h = mix(g)  # steps 7-10, one fused pass
             eta = stepsize(t)
             w_new = jax.vmap(proj)(w - eta * h)  # step 12
             eta_sum_new = eta_sum + eta
@@ -73,9 +100,8 @@ def run_dsgd(
 
         w_nodes = jnp.tile(w0[None], (N, 1))
         init = (w_nodes, jnp.zeros_like(w_nodes), jnp.zeros(()), jax.random.PRNGKey(seed))
-        (w, w_av, _, _), metrics = jax.lax.scan(round_fn, init,
-                                                jnp.arange(1, steps + 1))
-        t_prime = jnp.arange(1, steps + 1) * B
+        drive = jit_driver(lambda init, ts: jax.lax.scan(round_fn, init, ts))
+        (w, w_av, _, _), metrics = drive(init, ts)
         return DSGDResult(w, w_av, t_prime, metrics)
 
     def round_fn(carry, t):
@@ -84,15 +110,16 @@ def run_dsgd(
         b = beta_fn(t)
         u = v / b + (1.0 - 1.0 / b) * w  # step 2 (eq. 9)
         g = local_grads(u, kd)  # steps 3-7 (gradients at u)
-        h = consensus(g, A, rounds)  # steps 8-11
+        h = mix(g)  # steps 8-11, one fused pass
         v_new = jax.vmap(proj)(u - stepsize(t) * h)  # step 13 (eq. 10)
         w_new = v_new / b + (1.0 - 1.0 / b) * w  # step 14 (eq. 11)
         return (v_new, w_new, key), metric(w_new[0])
 
     w_nodes = jnp.tile(w0[None], (N, 1))
-    init = (w_nodes, w_nodes, jax.random.PRNGKey(seed))
-    (v, w, _), metrics = jax.lax.scan(round_fn, init, jnp.arange(1, steps + 1))
-    t_prime = jnp.arange(1, steps + 1) * B
+    # v and w need distinct buffers: the donated carry writes each in place
+    init = (w_nodes, jnp.array(w_nodes), jax.random.PRNGKey(seed))
+    drive = jit_driver(lambda init, ts: jax.lax.scan(round_fn, init, ts))
+    (v, w, _), metrics = drive(init, ts)
     return DSGDResult(w, w, t_prime, metrics)
 
 
@@ -108,7 +135,8 @@ def run_local_sgd(grad_fn, draw, w0, *, N, B, steps, stepsize, project=None,
 
 def run_dgd(
     grad_fn, draw, w0, A, *, B, steps, stepsize, project=None,
-    trace_metric=None, mode: str = "minibatched", rho: float = 1.0, seed: int = 0,
+    trace_metric=None, mode: str = "minibatched", rho: float = 1.0,
+    mix: Optional[DenseMixOp] = None, seed: int = 0,
 ) -> DSGDResult:
     """Communications-constrained DGD adaptation (Section V-C, eq. 18):
     one consensus round on the *iterates* per step, gradient on local data.
@@ -122,6 +150,7 @@ def run_dgd(
     proj = project or (lambda w: w)
     Bn = max(1, B // N) if mode == "minibatched" else 1
     drawn = N * Bn
+    mix = mix if mix is not None else dense_mix_op(A, 1)
 
     def round_fn(carry, t):
         w, key = carry
@@ -129,12 +158,13 @@ def run_dgd(
         z = draw(kd, drawn)
         z = jax.tree.map(lambda a: a.reshape(N, Bn, *a.shape[1:]), z)
         g = jax.vmap(lambda wn, zn: grad_fn(wn, *jax.tree.leaves(zn)))(w, z)
-        w_new = jax.vmap(proj)(A @ w - stepsize(t) * g)  # eq. (18)
+        w_new = jax.vmap(proj)(mix(w) - stepsize(t) * g)  # eq. (18)
         return (w_new, key), metric(w_new[0])
 
     w_nodes = jnp.tile(w0[None], (N, 1))
-    (w, _), metrics = jax.lax.scan(round_fn, (w_nodes, jax.random.PRNGKey(seed)),
-                                   jnp.arange(1, steps + 1))
+    drive = jit_driver(lambda init, ts: jax.lax.scan(round_fn, init, ts))
+    (w, _), metrics = drive((w_nodes, jax.random.PRNGKey(seed)),
+                            jnp.arange(1, steps + 1))
     # in the naive mode the system still *receives* B samples per step
     t_prime = jnp.arange(1, steps + 1) * B
     return DSGDResult(w, w, t_prime, metrics)

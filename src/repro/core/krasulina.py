@@ -1,6 +1,10 @@
 """Algorithm 2 — DM-Krasulina [75]: distributed mini-batch Krasulina's method for
 streaming 1-PCA, with exact averaging of the per-node pseudo-gradients xi and
 support for mu discarded samples per round (under-provisioned regime).
+
+The per-node pseudo-gradient goes through `kernels.ops.krasulina_xi`, so the
+fused single-HBM-pass Pallas kernel is on the hot path on TPU (the jnp
+reference path serves CPU).
 """
 from __future__ import annotations
 
@@ -9,7 +13,8 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.problems import krasulina_xi
+from repro.core.dsgd import jit_driver
+from repro.kernels.ops import krasulina_xi
 
 
 class KrasulinaResult(NamedTuple):
@@ -42,8 +47,10 @@ def run_dm_krasulina(
         w_new = w + stepsize(t) * xi  # step 7
         return (w_new, key), metric(w_new)
 
-    (w, _), metrics = jax.lax.scan(
-        round_fn, (w0, jax.random.PRNGKey(seed)), jnp.arange(1, steps + 1))
+    drive = jit_driver(lambda init, ts: jax.lax.scan(round_fn, init, ts))
+    # copy w0: the carry is donated, and the caller keeps ownership of w0
+    (w, _), metrics = drive((jnp.array(w0), jax.random.PRNGKey(seed)),
+                            jnp.arange(1, steps + 1))
     t_prime = jnp.arange(1, steps + 1) * (B + mu)
     return KrasulinaResult(w, t_prime, metrics)
 

@@ -1,5 +1,5 @@
 """Doubly-stochastic mixing matrices / topologies for averaging consensus
-(paper eq. 17 and Section V).
+(paper eq. 17 and Section V), plus the fused consensus engine (`MixOp`).
 
 Two representations:
 
@@ -9,12 +9,24 @@ Two representations:
 * **Shift schedules** (circulant topologies) for the device-mesh gossip path —
   consumed by `core.averaging` as weighted `jnp.roll`s over the data axis, which
   XLA lowers to `collective-permute` chains on the TPU ICI torus.
+
+`MixOp` makes R rounds of eq. 17 cost ~1 round: because the R-round operator is
+linear when no message compression is applied, it can be precomputed ONCE
+outside the training scan — `A_R = A^R` for dense matrices, the R-fold
+convolution of the shift schedule for circulants — and applied as a single
+matmul / weighted-shift pass per step. Quantized configs are nonlinear
+per-round, so they keep the exact per-round loop (bit-identical semantics).
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core.quantize import COMPRESSORS
 
 Schedule = Tuple[Tuple[int, float], ...]  # ((shift, weight), ...) includes shift 0
 
@@ -145,3 +157,181 @@ def is_doubly_stochastic(A: np.ndarray, tol: float = 1e-8) -> bool:
         and np.allclose(A.sum(0), 1.0, atol=1e-6)
         and np.allclose(A.sum(1), 1.0, atol=1e-6)
     )
+
+
+# ---------------------------------------------------------------------------
+# Fused consensus engine (MixOp)
+# ---------------------------------------------------------------------------
+
+
+def roll_mix(x: jax.Array, sched: Schedule,
+             compress: Callable[[jax.Array], jax.Array]) -> jax.Array:
+    """One consensus round over axis 0 of x via weighted circular shifts.
+    `compress` models the wire format: applied to every non-self message."""
+    out = None
+    for shift, w in sched:
+        msg = x if shift == 0 else compress(jnp.roll(x, shift, axis=0))
+        term = w * msg
+        out = term if out is None else out + term
+    return out
+
+
+def _identity(x: jax.Array) -> jax.Array:
+    return x
+
+
+def compose_schedule(sched: Schedule, rounds: int, n: int) -> Schedule:
+    """The effective one-pass schedule of `rounds` consensus rounds: the R-fold
+    circular convolution of the shift schedule (shifts add mod n, weights
+    multiply). Exactly the circulant form of `schedule_matrix(sched, n)**R`.
+
+    The result has at most n terms, so even for large R a single pass costs no
+    more than one full circulant application."""
+    cur = {0: 1.0}
+    for _ in range(rounds):
+        nxt: dict = {}
+        for s1, w1 in cur.items():
+            for s2, w2 in sched:
+                k = (s1 + s2) % n
+                nxt[k] = nxt.get(k, 0.0) + w1 * w2
+        cur = nxt
+    # canonical form: shifts in (-n/2, n/2], self term first, then ascending
+    out = []
+    for s, w in cur.items():
+        s = s if s <= n // 2 else s - n
+        out.append((int(s), float(w)))
+    out.sort(key=lambda sw: (sw[0] != 0, sw[0]))
+    return tuple(out)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DenseMixOp:
+    """Precomputed R-round dense consensus operator (paper eq. 17).
+
+    When `A_eff` is set (the default, quantization-free path) the R sequential
+    `A @ h` matmuls collapse to the single matmul `A_eff @ h` with
+    `A_eff = A^R` — computed once at construction, outside any training scan.
+    With `A_eff=None` the per-round scan is preserved (oracle / fallback).
+    """
+
+    A: Any  # [N, N] one-round doubly-stochastic matrix
+    A_eff: Any  # [N, N] effective R-round operator A^R, or None (per-round)
+    rounds: int
+
+    def __call__(self, h: jax.Array) -> jax.Array:
+        if self.rounds == 0:
+            return h
+        if self.A_eff is not None:
+            return self.A_eff @ h
+        def body(h, _):
+            return self.A @ h, None
+        h, _ = jax.lax.scan(body, h, None, length=self.rounds)
+        return h
+
+    def tree_flatten(self):
+        return (self.A, self.A_eff), (self.rounds,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+
+def dense_mix_op(A, rounds: int, *, fuse: bool = True) -> DenseMixOp:
+    """Build the dense-path MixOp; `fuse=False` keeps the per-round scan."""
+    A = jnp.asarray(A)
+    A_eff = None
+    if fuse and rounds > 0:
+        A_eff = jnp.linalg.matrix_power(A, rounds) if rounds > 1 else A
+    return DenseMixOp(A, A_eff, rounds)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CirculantMixOp:
+    """Precomputed R-round circulant consensus operator (device gossip path).
+
+    Quantization off: `fused_sched` (the R-fold convolution of the one-round
+    schedule) is applied in ONE weighted-shift pass, replacing the
+    (deg+1)*R-roll per-step loop. `impl` selects the execution strategy:
+
+    * "roll"   — one `jnp.roll` pass over `fused_sched` (sharding-friendly:
+                 lowers to collective-permute on TPU meshes).
+    * "matmul" — apply the dense circulant `A_eff` [n, n] as one matmul over
+                 the flattened node axis (fastest single-host XLA path, but
+                 gathers a sharded node axis — unsharded layouts only).
+    * "kernel" — Pallas TPU kernel: the node block is tiled into VMEM once and
+                 all R rounds run in-register (one HBM read+write per leaf).
+                 Single-device arrays only (no GSPMD partitioning rule).
+    * "auto"   — the always-correct choice: "roll" (safe whether or not the
+                 node axis is sharded). Perf-sensitive unsharded callers
+                 should opt into "matmul" (CPU/GPU) or "kernel" (TPU).
+
+    Quantization on: the compressor is nonlinear, so operator collapsing would
+    change semantics; the exact per-round `roll_mix` loop is preserved
+    bit-identically.
+    """
+
+    sched: Schedule  # one-round schedule (per-round / kernel path)
+    fused_sched: Optional[Schedule]  # R-round schedule; None = per-round loop
+    #   (quantized configs, or fuse=False in `circulant_mix_op`)
+    A_eff: Any  # [n, n] dense form of fused_sched (matmul impl), or None
+    n: int
+    rounds: int
+    quantization: str = "none"
+    impl: str = "auto"
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        assert x.shape[0] == self.n, (
+            f"MixOp built for n={self.n} applied to node axis {x.shape[0]}")
+        if self.rounds == 0 or self.n == 1:
+            return x
+        if self.fused_sched is None:  # quantized: exact per-round semantics
+            compress = COMPRESSORS[self.quantization]
+            for _ in range(self.rounds):
+                x = roll_mix(x, self.sched, compress)
+            return x
+        impl = "roll" if self.impl == "auto" else self.impl
+        if impl == "kernel":
+            # an explicit "kernel" choice means the Pallas kernel — interpret
+            # mode off-TPU, per the documented fallback
+            from repro.kernels.ops import gossip_mix
+            return gossip_mix(x, self.sched, self.rounds, force_pallas=True)
+        if impl == "matmul":
+            flat = x.reshape(self.n, -1)
+            out = jnp.asarray(self.A_eff, x.dtype) @ flat
+            return out.reshape(x.shape)
+        if impl != "roll":
+            raise ValueError(f"unknown MixOp impl {self.impl!r}")
+        return roll_mix(x, self.fused_sched, _identity)
+
+    def tree_flatten(self):
+        return (self.A_eff,), (self.sched, self.fused_sched, self.n,
+                               self.rounds, self.quantization, self.impl)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        sched, fused_sched, n, rounds, quantization, impl = aux
+        return cls(sched, fused_sched, children[0], n, rounds, quantization, impl)
+
+
+def circulant_mix_op(sched: Schedule, n: int, rounds: int, *,
+                     quantization: str = "none",
+                     impl: str = "auto", fuse: bool = True) -> CirculantMixOp:
+    """Build the circulant-path MixOp from a one-round schedule.
+
+    The R-round operator is precomputed here, once, so constructing the op
+    outside `jax.lax.scan` / `jit` keeps the per-step cost at ~one round.
+    `fuse=False` keeps the per-round loop (oracle / baseline), as does any
+    quantized config (nonlinear compressor — collapsing would change it)."""
+    if impl not in ("auto", "roll", "matmul", "kernel"):
+        raise ValueError(f"unknown MixOp impl {impl!r}")
+    if quantization != "none" or not fuse:
+        return CirculantMixOp(sched, None, None, n, rounds, quantization, impl)
+    fused = compose_schedule(sched, rounds, n) if rounds > 0 else ((0, 1.0),)
+    # the dense [n, n] operator is only needed by the matmul impl; the others
+    # skip the O(n^2) build and the device pin. Kept as host numpy — it
+    # crosses to device as a jit constant on first use.
+    A_eff = (np.asarray(schedule_matrix(fused, n), np.float32)
+             if impl == "matmul" else None)
+    return CirculantMixOp(sched, fused, A_eff, n, rounds, quantization, impl)

@@ -10,12 +10,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.consensus import gossip_mix_pallas
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.krasulina_update import krasulina_xi_pallas
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def gossip_mix(x: jax.Array, sched, rounds: int, *,
+               force_pallas: bool = False) -> jax.Array:
+    """R rounds of circulant gossip consensus over axis 0 (eq. 17), fused into
+    a single HBM pass on TPU. `sched`: ((shift, weight), ...) one-round
+    schedule. Unquantized path only — quantized gossip keeps the per-round
+    loop in `core.mixing.CirculantMixOp`."""
+    shifts = tuple(s for s, _ in sched)
+    weights = tuple(w for _, w in sched)
+    if _on_tpu() or force_pallas:
+        return gossip_mix_pallas(x, shifts, weights, rounds,
+                                 interpret=not _on_tpu())
+    return ref.gossip_mix_ref(x, sched, rounds)
 
 
 def krasulina_xi(w: jax.Array, z: jax.Array, *, force_pallas: bool = False) -> jax.Array:

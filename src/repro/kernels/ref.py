@@ -22,6 +22,19 @@ def krasulina_xi_ref(w: jax.Array, z: jax.Array) -> jax.Array:
     return xi.astype(w.dtype)
 
 
+def gossip_mix_ref(x: jax.Array, sched, rounds: int) -> jax.Array:
+    """R sequential rounds of weighted circular shifts over axis 0 — the
+    uncompressed gossip oracle the fused consensus kernel is validated against.
+    """
+    for _ in range(rounds):
+        out = None
+        for shift, w in sched:
+            term = w * (x if shift == 0 else jnp.roll(x, shift, axis=0))
+            out = term if out is None else out + term
+        x = out
+    return x
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: int = 0, chunk: int = 0,
                   scale: Optional[float] = None) -> jax.Array:

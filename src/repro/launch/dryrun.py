@@ -62,6 +62,15 @@ _COLLECTIVE_RE = re.compile(
 _UPCAST_RE = re.compile(r"\(param_[\w.]+: bf16\[([\d,]+)\]\) -> f32\[")
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Version-portable `compiled.cost_analysis()`: jax <= 0.4.x returns a
+    per-device list of dicts, newer jax a single dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def parse_cpu_upcasts(hlo: str) -> float:
     """Bytes of hoisted bf16->f32 parameter upcasts. The CPU backend has no
     native bf16 GEMM, so it converts whole weight tensors to f32 before the
@@ -328,7 +337,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         "peak_gib": (ma.argument_size_in_bytes + ma.output_size_in_bytes
                      + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30,
     }
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     rec["cost"] = {"flops": ca.get("flops", 0.0),
                    "bytes": ca.get("bytes accessed", 0.0)}
     hlo_text = compiled.as_text()

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import RunConfig
-from repro.core.averaging import average_gradients, consensus_error
+from repro.core.averaging import (average_gradients, consensus_error,
+                                  make_gossip_mix)
 from repro.launch import sharding as shlib
 from repro.launch.mesh import data_axes, n_data_nodes
 from repro.models import registry
@@ -119,6 +120,11 @@ def build_train_step(run: RunConfig, mesh) -> Tuple[Callable, Callable]:
         return train_step, partial(_state_specs, run=run, mesh=mesh, node_axes=None)
 
     node_axes = data_axes(mesh)
+    # the consensus engine: the R-round mixing operator is precomputed HERE,
+    # once per build, not once per round inside the jitted step (the default
+    # roll impl keeps the collective-permute lowering over the sharded axis)
+    gossip_n = pods if run.averaging.mode == "hierarchical" else n_nodes
+    mix = make_gossip_mix(run.averaging, gossip_n)
 
     def train_step(state: TrainState, batch):
         # batch leaves: [n_nodes, B/n_nodes, ...]
@@ -126,7 +132,8 @@ def build_train_step(run: RunConfig, mesh) -> Tuple[Callable, Callable]:
             return jax.value_and_grad(loss, has_aux=True)(params, node_batch)
 
         (l, metrics), grads = jax.vmap(node_loss_grad)(state.params, batch)
-        mixed = average_gradients(grads, run.averaging, n_nodes=n_nodes, pods=pods)
+        mixed = average_gradients(grads, run.averaging, n_nodes=n_nodes,
+                                  pods=pods, mix=mix)
         cerr = consensus_error(mixed)
         new_params, new_opt = jax.vmap(update)(mixed, state.opt, state.params)
         metrics = jax.tree.map(jnp.mean, metrics)

@@ -1,0 +1,77 @@
+"""Property-test shim: uses `hypothesis` when installed; otherwise falls back
+to a deterministic fixed-seed sweep expressed as pytest parametrization, so the
+suite collects and runs (with reduced case counts) in minimal environments.
+
+Usage in test modules:  ``from _prop import given, settings, st``
+"""
+from __future__ import annotations
+
+import inspect
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _FALLBACK_EXAMPLES = 8  # per-test cap for the seed sweep
+
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10, **_kw):
+            def sample(rng):
+                k = int(rng.integers(min_size, max_size + 1))
+                return [elem.sample(rng) for _ in range(k)]
+            return _Strategy(sample)
+
+
+    st = _Strategies()
+
+
+    def settings(max_examples=_FALLBACK_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+        return deco
+
+
+    def given(*strats):
+        def deco(fn):
+            n = min(getattr(fn, "_prop_max_examples", _FALLBACK_EXAMPLES),
+                    _FALLBACK_EXAMPLES)
+            rng = np.random.default_rng(0)
+            # hypothesis binds positional strategies to the RIGHTMOST test
+            # parameters (fixtures etc. stay on the left) — match that
+            names = list(inspect.signature(fn).parameters)[-len(strats):]
+            cases = [[s.sample(rng) for s in strats] for _ in range(n)]
+            if len(strats) == 1:
+                return pytest.mark.parametrize(
+                    names[0], [c[0] for c in cases])(fn)
+            return pytest.mark.parametrize(
+                ",".join(names), [tuple(c) for c in cases])(fn)
+        return deco

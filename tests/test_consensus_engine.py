@@ -1,0 +1,244 @@
+"""Tests for the fused consensus engine (core.mixing.MixOp + the Pallas gossip
+kernel): the precomputed R-round operator must match the per-round oracle
+(`schedule_matrix` + `np.linalg.matrix_power`), the kernel must match the
+per-round `roll_mix` loop, and quantized configs must keep exact per-round
+semantics (no operator collapsing)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AveragingConfig
+from repro.core import averaging, dsgd, mixing
+from repro.core.quantize import COMPRESSORS
+from repro.kernels.consensus import gossip_mix_pallas
+from repro.kernels.ops import gossip_mix
+
+
+def _x(n, d=24, seed=0, dtype=np.float32):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(n, d)).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Dense engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,rounds", [(8, 1), (16, 4), (16, 8), (24, 13)])
+def test_dense_mix_op_matches_matrix_power(n, rounds):
+    A = mixing.random_regular_expander(n, deg=4, seed=1)
+    h = _x(n)
+    want = np.linalg.matrix_power(A, rounds) @ np.asarray(h)
+    mix = mixing.dense_mix_op(jnp.asarray(A, jnp.float32), rounds)
+    np.testing.assert_allclose(np.asarray(mix(h)), want, rtol=1e-5, atol=1e-5)
+    # the unfused fallback is the original per-round scan
+    unfused = mixing.dense_mix_op(jnp.asarray(A, jnp.float32), rounds, fuse=False)
+    assert unfused.A_eff is None
+    np.testing.assert_allclose(np.asarray(unfused(h)), want, rtol=1e-5, atol=1e-5)
+
+
+def test_dense_mix_op_zero_rounds_is_identity():
+    h = _x(6)
+    mix = mixing.dense_mix_op(jnp.eye(6), 0)
+    assert mix(h) is h
+
+
+def test_consensus_oracle_agrees_with_mix_op():
+    n, rounds = 16, 8
+    A = jnp.asarray(mixing.random_regular_expander(n, deg=6, seed=0), jnp.float32)
+    h = _x(n)
+    np.testing.assert_allclose(np.asarray(dsgd.consensus(h, A, rounds)),
+                               np.asarray(mixing.dense_mix_op(A, rounds)(h)),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Circulant engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", ["ring", "circulant2", "torus"])
+@pytest.mark.parametrize("n,rounds", [(8, 1), (12, 3), (16, 8), (17, 5)])
+def test_compose_schedule_matches_matrix_power(topo, n, rounds):
+    sched = mixing.schedule(topo, n)
+    fused = mixing.compose_schedule(sched, rounds, n)
+    got = mixing.schedule_matrix(fused, n)
+    want = np.linalg.matrix_power(mixing.schedule_matrix(sched, n), rounds)
+    np.testing.assert_allclose(got, want, atol=1e-12)
+    # composition preserves double stochasticity and never exceeds n terms
+    assert mixing.is_doubly_stochastic(got)
+    assert len(fused) <= n
+
+
+@pytest.mark.parametrize("impl", ["roll", "matmul", "kernel"])
+@pytest.mark.parametrize("topo,rounds", [("ring", 8), ("circulant2", 3),
+                                         ("torus", 5)])
+def test_circulant_mix_op_matches_oracle(impl, topo, rounds):
+    n = 16
+    sched = mixing.schedule(topo, n)
+    h = _x(n)
+    want = np.linalg.matrix_power(mixing.schedule_matrix(sched, n), rounds) @ \
+        np.asarray(h)
+    op = mixing.circulant_mix_op(sched, n, rounds, impl=impl)
+    np.testing.assert_allclose(np.asarray(op(h)), want, rtol=1e-5, atol=1e-5)
+    # the unfused escape hatch is the original per-round loop
+    loop_op = mixing.circulant_mix_op(sched, n, rounds, fuse=False)
+    assert loop_op.fused_sched is None
+    np.testing.assert_allclose(np.asarray(loop_op(h)), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_circulant_mix_op_high_rank_leaves():
+    """Trainer-style leaves [n, a, b] flatten correctly under every impl."""
+    n, rounds = 8, 4
+    sched = mixing.schedule("ring", n)
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(n, 3, 5)).astype(np.float32))
+    outs = [np.asarray(mixing.circulant_mix_op(sched, n, rounds, impl=impl)(x))
+            for impl in ("roll", "matmul", "kernel")]
+    A_R = np.linalg.matrix_power(mixing.schedule_matrix(sched, n), rounds)
+    want = (A_R @ np.asarray(x).reshape(n, -1)).reshape(n, 3, 5)
+    for got in outs:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d", [(8, 64), (16, 512), (16, 700), (5, 33)])
+@pytest.mark.parametrize("topo,rounds", [("ring", 1), ("ring", 8),
+                                         ("circulant2", 4)])
+def test_gossip_kernel_matches_roll_mix(n, d, topo, rounds):
+    sched = mixing.schedule(topo, n)
+    x = _x(n, d, seed=4)
+    got = gossip_mix(x, sched, rounds, force_pallas=True)
+    want = x
+    for _ in range(rounds):
+        want = mixing.roll_mix(want, sched, lambda m: m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gossip_kernel_bf16():
+    n, d = 16, 256
+    sched = mixing.schedule("ring", n)
+    x = _x(n, d, seed=5, dtype=np.float32).astype(jnp.bfloat16)
+    got = gossip_mix_pallas(x, tuple(s for s, _ in sched),
+                            tuple(w for _, w in sched), 4, interpret=True)
+    assert got.dtype == jnp.bfloat16
+    want = np.asarray(x, np.float32)
+    A4 = np.linalg.matrix_power(mixing.schedule_matrix(sched, n), 4)
+    np.testing.assert_allclose(np.asarray(got, np.float32), A4 @ want,
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_gossip_kernel_small_block_tiling():
+    """Grid tiling over d must be seam-free."""
+    n, d = 8, 130
+    sched = mixing.schedule("ring", n)
+    x = _x(n, d, seed=6)
+    got = gossip_mix_pallas(x, tuple(s for s, _ in sched),
+                            tuple(w for _, w in sched), 3,
+                            block_d=32, interpret=True)
+    want = x
+    for _ in range(3):
+        want = mixing.roll_mix(want, sched, lambda m: m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Quantized configs: per-round semantics, bit-identical to pre-refactor code
+# ---------------------------------------------------------------------------
+
+def _legacy_gossip_average(tree, n_nodes, cfg):
+    """The pre-refactor implementation, verbatim (per-round roll loop with the
+    compressor applied to every non-self message, every round)."""
+    sched = mixing.schedule(cfg.topology, n_nodes, cfg.self_weight)
+    compress = COMPRESSORS[cfg.quantization]
+
+    def _roll_mix(x):
+        out = None
+        for shift, w in sched:
+            msg = x if shift == 0 else compress(jnp.roll(x, shift, axis=0))
+            term = w * msg
+            out = term if out is None else out + term
+        return out
+
+    def mix(g):
+        for _ in range(cfg.rounds):
+            g = _roll_mix(g)
+        return g
+
+    return jax.tree.map(mix, tree)
+
+
+@pytest.mark.parametrize("quant", ["sign", "int8"])
+@pytest.mark.parametrize("topo", ["ring", "circulant2"])
+def test_quantized_gossip_bit_identical_to_legacy(quant, topo):
+    n = 8
+    cfg = AveragingConfig(mode="gossip", rounds=5, topology=topo,
+                          quantization=quant)
+    tree = {"g": _x(n, 40, seed=7), "h": _x(n, 9, seed=8)}
+    got = averaging.gossip_average(tree, n, cfg)
+    want = _legacy_gossip_average(tree, n, cfg)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(want[k]))
+
+
+def test_quantized_mix_op_keeps_per_round_operator():
+    """No collapsing under quantization: the fused operator must be absent,
+    and the result must differ from applying the (linear) collapsed operator."""
+    n, rounds = 8, 5
+    sched = mixing.schedule("ring", n)
+    op = mixing.circulant_mix_op(sched, n, rounds, quantization="sign")
+    assert op.fused_sched is None and op.A_eff is None
+    x = _x(n, 16, seed=9)
+    collapsed = mixing.circulant_mix_op(sched, n, rounds)(x)
+    assert not np.allclose(np.asarray(op(x)), np.asarray(collapsed), atol=1e-4)
+
+
+def test_unquantized_gossip_average_matches_legacy_loop():
+    """Fused (default) unquantized gossip == per-round loop to float accuracy."""
+    n = 12
+    cfg = AveragingConfig(mode="gossip", rounds=8, topology="torus")
+    tree = {"g": _x(n, 30, seed=10)}
+    got = averaging.gossip_average(tree, n, cfg)["g"]
+    want = _legacy_gossip_average(tree, n, cfg)["g"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_hierarchical_average_uses_engine():
+    n, pods = 8, 2
+    v = _x(n, 4, seed=11)
+    cfg = AveragingConfig(mode="hierarchical", rounds=50, topology="ring")
+    out = np.asarray(averaging.hierarchical_average({"g": v}, pods, n // pods,
+                                                    cfg)["g"])
+    np.testing.assert_allclose(out, np.tile(np.asarray(v).mean(0), (n, 1)),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Driver integration: run_dsgd through the fused engine
+# ---------------------------------------------------------------------------
+
+def test_run_dsgd_fused_matches_unfused():
+    from repro.core import problems
+    rng = np.random.default_rng(12)
+    n, d, B = 8, 5, 16
+    A = jnp.asarray(mixing.random_regular_expander(n, deg=4, seed=2), jnp.float32)
+    w_star = jnp.asarray(rng.normal(size=(d + 1,)).astype(np.float32))
+
+    def draw(key, m):
+        x = jax.random.normal(key, (m, d))
+        y = jnp.sign(x @ w_star[:-1] + w_star[-1])
+        return x, y
+
+    grad = lambda w, x, y: problems.logistic_grad(w, x, y)
+    kw = dict(B=B, rounds=6, steps=20, stepsize=lambda t: 0.5 / jnp.sqrt(t),
+              seed=3)
+    w0 = jnp.zeros(d + 1)
+    fused = dsgd.run_dsgd(grad, draw, w0, A, **kw)
+    unfused = dsgd.run_dsgd(grad, draw, w0, A,
+                            mix=mixing.dense_mix_op(A, 6, fuse=False), **kw)
+    np.testing.assert_allclose(np.asarray(fused.w), np.asarray(unfused.w),
+                               rtol=1e-4, atol=1e-5)

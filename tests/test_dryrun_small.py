@@ -32,14 +32,14 @@ base = C.SHAPES[shape]
 tiny = dataclasses.replace(base, seq_len=256, global_batch=8)
 dr.SHAPES = dict(C.SHAPES); dr.SHAPES[shape] = tiny
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 rules = shlib.activation_rules(mesh, tiny)
 with mesh_rules(mesh, rules):
     fn, args, _ = dr.build_lowerable(arch, shape, mesh, "exact", 1, microbatches=1)
     compiled = fn.lower(*args).compile()
 ma = compiled.memory_analysis()
-ca = compiled.cost_analysis() or {}
+ca = dr.cost_analysis_dict(compiled)
 print(json.dumps({
     "temp_gib": ma.temp_size_in_bytes / 2**30,
     "flops": ca.get("flops", 0.0),

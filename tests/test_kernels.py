@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.problems import krasulina_xi as core_xi
 from repro.kernels import ref
@@ -26,9 +26,11 @@ def test_krasulina_kernel_matches_ref(B, d, dtype):
     z = jax.random.normal(kz, (B, d), dtype)
     got = krasulina_xi_pallas(w, z, interpret=True)
     want = ref.krasulina_xi_ref(w, z)
-    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    # f32 bound scales with the d-length accumulations (summation-order noise
+    # between the tiled kernel and the one-shot reference)
+    rtol, atol = (1e-4, 5e-4) if dtype == jnp.float32 else (5e-2, 5e-2)
     np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+                               np.asarray(want, np.float32), rtol=rtol, atol=atol)
 
 
 def test_krasulina_ref_matches_core_problems():

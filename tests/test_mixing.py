@@ -4,7 +4,7 @@ schedule with its dense-matrix form.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 import jax.numpy as jnp
 

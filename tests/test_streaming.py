@@ -3,7 +3,7 @@
 of the pipeline bookkeeping."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.configs.base import StreamConfig
 from repro.core.streaming import make_governed_stream
