@@ -54,7 +54,16 @@ def _circulant(N: int, R: int, topo: str) -> None:
              f"loop_us={t_loop:.1f};speedup={t_loop / t_fused:.2f}x")
 
 
-def run() -> None:
+def run(quick: bool = False) -> None:
+    global D
+    if quick:  # dispatch-dominated at smoke scale: keep timings, drop contracts
+        D_full, D = D, 4_096
+        try:
+            _dense(8, 4)
+            _circulant(8, 4, "ring")
+        finally:
+            D = D_full
+        return
     for N, R in ((16, 8), (16, 16), (64, 8)):
         _dense(N, R)
     for N, R in ((16, 8), (16, 16), (64, 8)):

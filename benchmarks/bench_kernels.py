@@ -12,11 +12,11 @@ from benchmarks.common import emit, time_fn
 from repro.kernels import ref
 
 
-def run() -> None:
+def run(quick: bool = False) -> None:
     # Krasulina xi: memory-bound BLAS-2 pass — 4*B*d flops (two fused matvecs)
     # over one streamed read of Z; bytes follow the ACTUAL array dtype (f32
     # here, 4 B/elem), so ai = 1 flop/byte at f32 and 2 at bf16
-    for B, d in ((1024, 512), (4096, 3072)):
+    for B, d in (((256, 128),) if quick else ((1024, 512), (4096, 3072))):
         kw, kz = jax.random.split(jax.random.PRNGKey(0))
         w = jax.random.normal(kw, (d,), jnp.float32)
         z = jax.random.normal(kz, (B, d), jnp.float32)
@@ -28,7 +28,7 @@ def run() -> None:
              f"ai={flops / bytes_:.2f}flops_per_byte")
 
     # blockwise attention reference path
-    for S in (512, 1024):
+    for S in ((128,) if quick else (512, 1024)):
         ks = jax.random.split(jax.random.PRNGKey(1), 3)
         q = jax.random.normal(ks[0], (1, 8, S, 64), jnp.float32)
         k = jax.random.normal(ks[1], (1, 8, S, 64), jnp.float32)

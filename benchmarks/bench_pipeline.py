@@ -1,0 +1,155 @@
+"""Streaming-engine benchmark: steps/s and samples/s for the three execution
+modes of the training loop, across superstep sizes K in {1, 4, 16}.
+
+* sync-per-round        -- the pre-engine loop: one jitted step per Python
+                           iteration with host-side sample synthesis, a
+                           blocking H2D copy, and a blocking metric fetch in
+                           between (the self-inflicted R_p throttle of ISSUE 2)
+* superstep             -- K rounds folded into one jitted lax.scan
+                           (train.trainer.build_superstep); dispatch + metric
+                           fetch amortized over K
+* superstep+prefetch    -- same, plus the async device-prefetch ring
+                           (data.pipeline.DevicePrefetcher): host synthesis
+                           and H2D staging overlap device compute
+
+The contract row asserts superstep+prefetch at K=16 is >= 2x the sync-per-round
+baseline in rounds/s on this container (reduced config). A decentralized
+(gossip, emulated N=8 nodes) superstep row exercises the vmap'd node-axis path
+through the same engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config, reduced
+from repro.configs.base import AveragingConfig, RunConfig, SHAPES
+from repro.data.lm import MarkovTokenStream
+from repro.data.pipeline import StreamingPipeline
+from repro.launch.mesh import make_mesh
+from repro.launch.sharding import activation_rules
+from repro.models.common import mesh_rules
+from repro.train.driver import EngineConfig, StreamingDriver
+from repro.train.trainer import (build_train_step, init_state,
+                                 replicate_for_nodes)
+
+SEQ = 16
+BATCH = 4
+REPEATS = 3  # best-of: the 2-vCPU container is noisy; min is the honest rate
+
+
+def _run_cfg(mode: str = "exact", rounds: int = 1) -> RunConfig:
+    # micro-scale LM: per-round device compute ~1 ms on the CPU container, so
+    # the benchmark isolates the engine's fixed-cost amortization (dispatch,
+    # metric fetch, host synthesis) rather than XLA kernel throughput
+    cfg = dataclasses.replace(
+        reduced(get_config("granite-8b"), layers=1, d_model=16), vocab_size=32,
+        d_ff=32)
+    return RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                     averaging=AveragingConfig(mode, rounds),
+                     optimizer="adam", learning_rate=1e-3,
+                     param_dtype="float32", remat=False)
+
+
+def _sample_fn(vocab: int):
+    data = MarkovTokenStream(vocab, seed=0)
+
+    def draw(rng: np.random.Generator, n: int):
+        toks = data.sample(rng, n, SEQ + 1)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    return draw
+
+
+def _sync_per_round(run_cfg: RunConfig, mesh, rounds: int) -> float:
+    """The pre-engine loop, timed per round (after a warm-up compile round)."""
+    sample = _sample_fn(run_cfg.model.vocab_size)
+    pipe = StreamingPipeline(sample, run_cfg.stream, 1, run_cfg.averaging.rounds,
+                             batch=BATCH)
+    with mesh_rules(mesh, activation_rules(mesh, run_cfg.shape)):
+        state = init_state(run_cfg, jax.random.PRNGKey(0))
+        step, _ = build_train_step(run_cfg, mesh)
+        step = jax.jit(step)
+
+        def one_round(state):
+            batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+            state, metrics = step(state, batch)
+            float(metrics["loss"])  # the per-round blocking fetch
+            return state
+
+        # two warm-up rounds: the first compiles against the freshly-built
+        # (uncommitted) state, the second against the committed device state —
+        # both signatures must be cached before the timed region
+        state = one_round(one_round(state))
+        best = float("inf")
+        for _ in range(REPEATS):
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                state = one_round(state)
+            best = min(best, (time.perf_counter() - t0) / rounds)
+        return best
+
+
+def _engine(run_cfg: RunConfig, mesh, k: int, prefetch: int, rounds: int,
+            n_nodes: int = 1) -> float:
+    """Driver-based loop, timed per round (after a warm-up superstep)."""
+    sample = _sample_fn(run_cfg.model.vocab_size)
+    decentralized = run_cfg.averaging.mode != "exact"
+    with mesh_rules(mesh, activation_rules(mesh, run_cfg.shape,
+                                           node_axis=decentralized)):
+        state = init_state(run_cfg, jax.random.PRNGKey(0))
+        if decentralized:
+            state = replicate_for_nodes(state, n_nodes)
+        engine = EngineConfig(superstep=k, prefetch_depth=prefetch,
+                              replan_every=0)
+        with StreamingDriver(run_cfg, mesh, state, sample, engine=engine,
+                             batch=BATCH * n_nodes, n_nodes=n_nodes) as driver:
+            # two warm-up supersteps (uncommitted- and committed-state jit
+            # signatures); the persistent ring stays hot for the timed runs
+            driver.run(2)
+            n_super = max(1, rounds // k)
+            best = float("inf")
+            for _ in range(REPEATS):
+                t0 = time.perf_counter()
+                driver.run(n_super)
+                best = min(best, (time.perf_counter() - t0) / (n_super * k))
+            return best
+
+
+def run(quick: bool = False) -> None:
+    mesh = make_mesh((1, 1), ("data", "model"))
+    run_cfg = _run_cfg()
+    # non-quick: 96 rounds = 6 supersteps at K=16, well past the depth-2 ring
+    # a warm-up can leave full — the timed window measures steady-state
+    # producer/consumer throughput, not pre-staged batches
+    rounds = 8 if quick else 96
+    ks = (1, 4) if quick else (1, 4, 16)
+
+    t_sync = _sync_per_round(run_cfg, mesh, rounds)
+    emit("pipeline/sync_per_round", t_sync * 1e6,
+         f"rounds_per_s={1 / t_sync:.1f};samples_per_s={BATCH / t_sync:.0f}")
+
+    speedups = {}
+    for k in ks:
+        for label, prefetch in (("superstep", 0), ("superstep+prefetch", 2)):
+            t = _engine(run_cfg, mesh, k, prefetch, rounds)
+            speedups[(label, k)] = t_sync / t
+            emit(f"pipeline/{label}/K{k}", t * 1e6,
+                 f"rounds_per_s={1 / t:.1f};samples_per_s={BATCH / t:.0f};"
+                 f"speedup_vs_sync={t_sync / t:.2f}x")
+
+    # decentralized node axis through the same engine (emulated N=8 on 1 device)
+    k_dec = ks[-1]
+    t = _engine(_run_cfg("gossip", rounds=2), mesh, k_dec, 2, rounds, n_nodes=8)
+    emit(f"pipeline/gossip_superstep+prefetch/K{k_dec}", t * 1e6,
+         f"rounds_per_s={1 / t:.1f};samples_per_s={8 * BATCH / t:.0f}")
+
+    if not quick:
+        assert speedups[("superstep+prefetch", 16)] >= 2.0, (
+            "superstep+prefetch at K=16 must be >= 2x sync-per-round",
+            speedups)

@@ -11,7 +11,9 @@ from benchmarks.common import emit
 from repro.core import rates
 
 
-def run() -> None:
+def run(quick: bool = False) -> None:
+    # pure rate-model arithmetic — already smoke-scale; `quick` is accepted
+    # for harness uniformity and changes nothing
     N, Rs, Rp, R = 10, 1e6, 1.25e5, 10
     for Rc in (1e3, 1e4):
         crossed = None

@@ -9,7 +9,8 @@ from benchmarks.common import emit
 from repro import roofline
 
 
-def run() -> None:
+def run(quick: bool = False) -> None:
+    # reads dry-run artifacts (or skips gracefully) — same cost either way
     recs = roofline.load_artifacts()
     if not recs:
         emit("roofline/missing", 0.0, "run `python -m repro.launch.sweep` first")

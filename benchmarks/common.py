@@ -1,15 +1,19 @@
-"""Shared helpers for the benchmark harness: timing and CSV emission."""
+"""Shared helpers for the benchmark harness: timing, CSV emission, and the
+machine-readable record log behind `run.py --json`."""
 from __future__ import annotations
 
 import time
-from typing import Callable, Iterable, List
+from typing import Callable, Dict, Iterable, List
 
 ROWS: List[str] = []
+RECORDS: List[Dict[str, object]] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.3f},{derived}"
     ROWS.append(row)
+    RECORDS.append({"name": name, "us_per_call": us_per_call,
+                    "derived": derived})
     print(row, flush=True)
 
 

@@ -1,11 +1,17 @@
 """Benchmark harness entrypoint: one module per paper table/figure plus the
-kernel micro-benchmarks and the roofline report.
+kernel micro-benchmarks, the streaming-engine pipeline suite, and the roofline
+report.
 
-Prints ``name,us_per_call,derived`` CSV (benchmarks.common.emit).
+Prints ``name,us_per_call,derived`` CSV (benchmarks.common.emit). `--json OUT`
+additionally writes the rows as a machine-readable artifact
+(BENCH_pipeline.json-style) so the perf trajectory is diffable across PRs.
+`--quick` runs every suite at smoke scale (tiny shapes, paper-regime asserts
+off) — the tier-1 test suite executes it to catch benchmark bit-rot.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -14,12 +20,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset: "
-                         "rates,dmb,krasulina,dsgd,consensus,kernels,roofline")
+                         "rates,dmb,krasulina,dsgd,consensus,kernels,pipeline,"
+                         "roofline")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: tiny shapes, no paper-regime asserts")
+    ap.add_argument("--json", default="", metavar="OUT",
+                    help="write rows as a JSON artifact to this path")
     args = ap.parse_args()
 
     from benchmarks import (bench_consensus, bench_dmb, bench_dsgd,
-                            bench_kernels, bench_krasulina, bench_rates,
-                            bench_roofline)
+                            bench_kernels, bench_krasulina, bench_pipeline,
+                            bench_rates, bench_roofline, common)
 
     suites = {
         "rates": bench_rates.run,       # Fig. 5
@@ -28,6 +39,7 @@ def main() -> None:
         "dsgd": bench_dsgd.run,         # Fig. 9
         "consensus": bench_consensus.run,  # fused engine vs per-round loop
         "kernels": bench_kernels.run,
+        "pipeline": bench_pipeline.run,  # streaming engine (superstep/prefetch)
         "roofline": bench_roofline.run,  # deliverable (g)
     }
     chosen = [s.strip() for s in args.only.split(",") if s.strip()] or list(suites)
@@ -35,10 +47,25 @@ def main() -> None:
     failed = []
     for name in chosen:
         try:
-            suites[name]()
+            suites[name](quick=args.quick)
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    if args.json:
+        import jax
+
+        artifact = {
+            "schema": "repro-bench-v1",
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "quick": args.quick,
+            "suites": chosen,
+            "failed": failed,
+            "rows": common.RECORDS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"json artifact -> {args.json}", file=sys.stderr)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

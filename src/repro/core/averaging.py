@@ -11,7 +11,9 @@ pure array programs whose collectives are visible in the lowered HLO:
                   the R-round operator is precomputed once and applied in a
                   single pass (weighted `jnp.roll`s / one circulant matmul /
                   the fused Pallas kernel on TPU)
-* hierarchical -- exact within pod, gossip across pods (TPU adaptation)
+* hierarchical -- exact within pod, gossip across pods in reduce-scatter form
+                  (each intra-pod lane gossips one chunk of the pod mean over
+                  DCN, then the pod all-gathers; TPU adaptation)
 
 Optional message quantization (Section VI) compresses each round's messages;
 quantized configs keep the exact per-round loop (the compressor is nonlinear,
@@ -31,18 +33,21 @@ Tree = Any
 
 
 def make_gossip_mix(cfg: AveragingConfig, n_nodes: int, *,
-                    impl: str = "roll") -> CirculantMixOp:
+                    impl: str = "auto", mesh: Any = None) -> CirculantMixOp:
     """Build the consensus engine for a config — once, outside the train step.
     For `mode="hierarchical"` pass the pod count as `n_nodes`.
 
-    Defaults to the "roll" execution (single fused pass of weighted rolls):
-    the node axis here is typically SHARDED over mesh data axes, and rolls are
-    the form GSPMD partitions into collective-permute chains — the Pallas
-    kernel and dense-matmul impls have no partitioning rule and are opt-in
-    for unsharded layouts."""
+    `impl="auto"` resolves per layout (`core.mixing.resolve_auto_impl`):
+    "roll" whenever the node axis is — or may be — sharded over mesh data
+    axes (rolls are the form GSPMD partitions into collective-permute
+    chains), the dense-matmul fast path on unsharded CPU/GPU layouts, and
+    the fused Pallas kernel on single-device TPU. Pass the mesh the op will
+    run under so sharded layouts are detected; without it, multi-device
+    hosts conservatively get "roll"."""
     sched = schedule(cfg.topology, n_nodes, cfg.self_weight)
     return circulant_mix_op(sched, n_nodes, cfg.rounds,
-                            quantization=cfg.quantization, impl=impl)
+                            quantization=cfg.quantization, impl=impl,
+                            mesh=mesh)
 
 
 def gossip_average(tree: Tree, n_nodes: int, cfg: AveragingConfig,
@@ -61,16 +66,37 @@ def exact_average(tree: Tree) -> Tree:
 def hierarchical_average(tree: Tree, pods: int, per_pod: int,
                          cfg: AveragingConfig,
                          mix: Optional[CirculantMixOp] = None) -> Tree:
-    """Exact psum within each pod (fast ICI), gossip across pods (slow DCN)."""
+    """Exact averaging within each pod (fast ICI), gossip across pods (slow
+    DCN) — in reduce-scatter form.
+
+    Instead of materializing the full pod mean on every node and gossiping
+    whole vectors from one lane per pod (broadcast-then-gossip), the pod mean
+    is reduce-SCATTERED: lane j of each pod ends up owning chunk j of the pod
+    mean, the cross-pod gossip mixes only each lane's own chunk (so each DCN
+    link carries 1/per_pod of the vector, in parallel across lanes), and an
+    intra-pod all-gather reassembles the mixed mean — halving-or-better the
+    serialized cross-pod traffic relative to the broadcast form. The result is
+    numerically the same consensus (the mix is applied chunkwise over the pod
+    axis); feature dims are zero-padded up to a multiple of per_pod, which for
+    quantized configs slightly perturbs global compressor statistics relative
+    to the unpadded broadcast form (wire-format modeling, Section VI).
+    """
     if mix is None:
         mix = make_gossip_mix(cfg, pods)
 
     def hmix(g):
         shp = g.shape
-        g = g.reshape(pods, per_pod, *shp[1:])
-        g = jnp.broadcast_to(jnp.mean(g, axis=1, keepdims=True), g.shape)
-        gp = mix(g[:, 0])
-        g = jnp.broadcast_to(gp[:, None], g.shape)
+        flat = g.reshape(pods, per_pod, -1)  # [P, M, F]
+        pod_mean = jnp.mean(flat, axis=1)  # reduce ...
+        f = pod_mean.shape[-1]
+        chunk = -(-f // per_pod)
+        pad = chunk * per_pod - f
+        if pad:
+            pod_mean = jnp.pad(pod_mean, ((0, 0), (0, pad)))
+        scattered = pod_mean.reshape(pods, per_pod, chunk)  # ... scatter
+        mixed = mix(scattered)  # cross-pod gossip, one chunk per lane
+        gathered = mixed.reshape(pods, 1, chunk * per_pod)[..., :f]  # all-gather
+        g = jnp.broadcast_to(gathered, (pods, per_pod, f))
         return g.reshape(shp)
 
     return jax.tree.map(hmix, tree)

@@ -263,9 +263,12 @@ class CirculantMixOp:
     * "kernel" — Pallas TPU kernel: the node block is tiled into VMEM once and
                  all R rounds run in-register (one HBM read+write per leaf).
                  Single-device arrays only (no GSPMD partitioning rule).
-    * "auto"   — the always-correct choice: "roll" (safe whether or not the
-                 node axis is sharded). Perf-sensitive unsharded callers
-                 should opt into "matmul" (CPU/GPU) or "kernel" (TPU).
+    * "auto"   — resolved at build time by `circulant_mix_op` via
+                 `resolve_auto_impl(mesh)`: the fast path ("matmul" on
+                 CPU/GPU, "kernel" on TPU) when the node axis is provably
+                 unsharded, "roll" otherwise. An op constructed with a
+                 literal impl="auto" (bypassing the factory) falls back to
+                 "roll" at call time — always safe.
 
     Quantization on: the compressor is nonlinear, so operator collapsing would
     change semantics; the exact per-round `roll_mix` loop is preserved
@@ -315,17 +318,55 @@ class CirculantMixOp:
         return cls(sched, fused_sched, children[0], n, rounds, quantization, impl)
 
 
+def resolve_auto_impl(mesh: Any = None) -> str:
+    """Pick the fastest *safe* execution strategy for `impl="auto"`.
+
+    The node axis is sharded over the mesh's data axes in the trainer layout,
+    so any nontrivial data extent forces "roll" (the only impl with a
+    GSPMD partitioning rule: weighted rolls lower to collective-permute
+    chains). On an unsharded node axis the dense circulant matmul is the
+    3-10x fast path on CPU/GPU; on TPU the fused Pallas kernel is, but only
+    for genuinely single-device arrays (it has no partitioning rule at all).
+    With no mesh information and multiple local devices the layout is
+    unknowable at build time, so "auto" stays conservative."""
+    if mesh is not None:
+        node_extent = 1
+        for a in mesh.axis_names:
+            if a in ("pod", "data"):
+                node_extent *= mesh.shape[a]
+        if node_extent > 1:
+            return "roll"  # node axis sharded
+        single_device = mesh.devices.size == 1
+    else:
+        single_device = jax.device_count() == 1
+        if not single_device:
+            return "roll"  # unknown multi-device layout: stay sharding-safe
+    if not single_device:
+        # node axis local but other dims sharded (e.g. model-parallel mesh):
+        # the matmul impl flattens trailing dims and would gather them
+        return "roll"
+    return "kernel" if jax.default_backend() == "tpu" else "matmul"
+
+
 def circulant_mix_op(sched: Schedule, n: int, rounds: int, *,
                      quantization: str = "none",
-                     impl: str = "auto", fuse: bool = True) -> CirculantMixOp:
+                     impl: str = "auto", fuse: bool = True,
+                     mesh: Any = None) -> CirculantMixOp:
     """Build the circulant-path MixOp from a one-round schedule.
 
     The R-round operator is precomputed here, once, so constructing the op
     outside `jax.lax.scan` / `jit` keeps the per-step cost at ~one round.
     `fuse=False` keeps the per-round loop (oracle / baseline), as does any
-    quantized config (nonlinear compressor — collapsing would change it)."""
+    quantized config (nonlinear compressor — collapsing would change it).
+
+    `impl="auto"` resolves at build time via `resolve_auto_impl(mesh)`:
+    "matmul" (CPU/GPU) or the Pallas "kernel" (TPU) on unsharded
+    single-device layouts, "roll" whenever the node axis is (or may be)
+    sharded."""
     if impl not in ("auto", "roll", "matmul", "kernel"):
         raise ValueError(f"unknown MixOp impl {impl!r}")
+    if impl == "auto":
+        impl = resolve_auto_impl(mesh)
     if quantization != "none" or not fuse:
         return CirculantMixOp(sched, None, None, n, rounds, quantization, impl)
     fused = compose_schedule(sched, rounds, n) if rounds > 0 else ((0, 1.0),)

@@ -10,6 +10,7 @@ mu = R_s/R_e - B samples per round (Algorithms 1-2, steps 9-10).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Optional
@@ -17,9 +18,15 @@ from typing import Optional
 from repro.configs.base import StreamConfig
 
 
+def _comm_time(R: int, Rc: float) -> float:
+    """Per-round communication time R/R_c; R_c <= 0 means 'no comms model'
+    (infinitely fast network), not a zero-rate one."""
+    return R / Rc if Rc > 0 else 0.0
+
+
 def effective_rate(B: float, N: int, R: int, Rp: float, Rc: float) -> float:
     """Mini-batches per second the network can process (eq. 4)."""
-    return 1.0 / (B / (N * Rp) + R / Rc)
+    return 1.0 / (B / (N * Rp) + _comm_time(R, Rc))
 
 
 def max_rounds(B: float, N: int, Rs: float, Rp: float, Rc: float) -> int:
@@ -57,7 +64,7 @@ def plan(stream: StreamConfig, N: int, R: int, *, B: Optional[int] = None,
         if denom <= 0:
             raise ValueError(
                 f"stream faster than total compute: R_s={Rs} >= N*R_p={N * Rp}")
-        B = max(N, math.ceil((Rs * R / Rc) / denom))
+        B = max(N, math.ceil(Rs * _comm_time(R, Rc) / denom))
         B = ((B + N - 1) // N) * N  # B must split evenly across nodes
     if horizon_samples:
         ceiling = max(N, int(math.sqrt(horizon_samples)))
@@ -70,6 +77,66 @@ def plan(stream: StreamConfig, N: int, R: int, *, B: Optional[int] = None,
     Re = effective_rate(B, N, R, Rp, Rc)
     return Plan(B=B, mu=mu, R=R,
                 Re=Re, regime="resourceful" if mu == 0 else "under-provisioned")
+
+
+def measured_processing_rate(B: int, N: int, R: int, wall_s_per_round: float,
+                             Rc: float = 0.0) -> float:
+    """Invert eq. 4: recover the per-node compute rate R_p actually achieved
+    from an observed per-round wall time.
+
+    The round time decomposes as T = B/(N*R_p) + R/R_c; subtracting the
+    modeled communication term leaves the compute term. With no comms model
+    (Rc <= 0) the whole wall time is attributed to compute, which makes the
+    recovered R_p a conservative (pessimistic) estimate. If the observed wall
+    time is at or below the modeled comm floor R/R_c, the measurement has
+    disproven the comms constant — the whole wall time is attributed to
+    compute rather than trusting the model over the observation (which would
+    yield an absurd R_p)."""
+    comm_s = _comm_time(R, Rc)
+    if wall_s_per_round <= comm_s:
+        comm_s = 0.0
+    compute_s = max(wall_s_per_round - comm_s, 1e-12)
+    return B / (N * compute_s)
+
+
+def measured_effective_rate(wall_s_per_round: float) -> float:
+    """Observed R_e: mini-batches per second actually completed."""
+    return 1.0 / max(wall_s_per_round, 1e-12)
+
+
+def replan(stream: StreamConfig, N: int, R: int, B: int,
+           wall_s_per_round: float, *,
+           horizon_samples: Optional[float] = None) -> Plan:
+    """Closed-loop governor step: re-derive (B, mu) from the *measured* round
+    time instead of the config's nominal R_p (Nokleby & Bajwa 2017 style
+    adaptation of the DMB plan).
+
+    B is held fixed — changing it would change batch shapes and force a
+    recompile of the jitted superstep — so the adaptation shows up purely in
+    mu, the number of samples the splitter must discard per round to keep up
+    with R_s at the rate the hardware is actually delivering.
+
+    A user-pinned `forced_mu >= 0` stays in force (the experiment knob wins
+    over the feedback loop); the re-plan then only refreshes the measured
+    Re / regime diagnosis."""
+    if wall_s_per_round <= _comm_time(R, stream.comms_rate):
+        # the round finished faster than the modeled comm floor: the R_c
+        # constant is disproven by observation — drop the comm term entirely
+        # instead of letting it dominate the re-planned R_e
+        stream = dataclasses.replace(stream, comms_rate=0.0)
+    Rp = measured_processing_rate(B, N, R, wall_s_per_round, stream.comms_rate)
+    observed = dataclasses.replace(stream, processing_rate=Rp)
+    return plan(observed, N, R, B=B, horizon_samples=horizon_samples)
+
+
+def checked_plan_swap(current: Plan, new: Plan) -> Plan:
+    """Guard for closed-loop plan swaps (`update_plan` on the governed
+    streams): B must stay fixed because the node-split batch shape feeds
+    compiled code; only mu and the Re/regime diagnosis may adapt."""
+    if new.B != current.B:
+        raise ValueError(
+            f"closed-loop replan must keep B fixed: {current.B} -> {new.B}")
+    return new
 
 
 def dmb_stepsize(t: int, L: float, sigma: float, D_W: float) -> float:

@@ -14,7 +14,7 @@ from typing import Callable, Iterator, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import StreamConfig
-from repro.core.rates import Plan, plan
+from repro.core.rates import Plan, checked_plan_swap, plan
 
 
 @dataclasses.dataclass
@@ -31,6 +31,12 @@ class GovernedStream:
         self.samples_discarded = 0
         self.rounds = 0
 
+    def update_plan(self, new_plan: Plan) -> None:
+        """Closed-loop governor hook (see `core.rates.replan`): adopt a plan
+        re-derived from measured rates (B fixed, mu adapts — see
+        `core.rates.checked_plan_swap`); counters carry over."""
+        self.plan = checked_plan_swap(self.plan, new_plan)
+
     def __iter__(self) -> Iterator:
         return self
 
@@ -46,6 +52,14 @@ class GovernedStream:
         if isinstance(take, tuple):
             return tuple(reshape(a) for a in take)
         return reshape(take)
+
+    def next_superstep(self, k: int):
+        """K governed rounds stacked on a leading K axis:
+        [K, N, B/N, ...] leaves, ready for the K-round device scan."""
+        rounds = [next(self) for _ in range(k)]
+        if isinstance(rounds[0], tuple):
+            return tuple(np.stack(parts) for parts in zip(*rounds))
+        return np.stack(rounds)
 
 
 def make_governed_stream(draw: Callable, stream_cfg: StreamConfig, n_nodes: int,

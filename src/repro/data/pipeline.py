@@ -5,15 +5,39 @@ The governor decides (B, mu) from the rate model; the pipeline yields
 device-ready batches of exactly B samples per round, discarding mu, and tracks
 t' (samples arrived) so training curves can be plotted against the paper's
 x-axis.
+
+Two streaming-engine extensions (see train.driver for the full picture):
+
+* **Supersteps** — `next_superstep(K)` draws K governed rounds and stacks them
+  on a new leading K axis, feeding the K-round `lax.scan` inside the jitted
+  train step so dispatch and metric-fetch overhead is paid once per K rounds.
+* **Async prefetch** — `DevicePrefetcher` runs the governed splitter in a
+  background thread and stages the *next* superstep onto devices
+  (`jax.device_put`) while the current one computes, overlapping host sample
+  synthesis + H2D with device work (the compute/stream overlap of Fig. 4).
+  Each staged item carries a counter snapshot so consumer-visible accounting
+  (`samples_arrived`, `samples_discarded`, `rounds`) stays coherent with the
+  batch being trained on, not with how far ahead the producer has run.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Iterator, Optional
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, NamedTuple, Optional
 
 import numpy as np
 
 from repro.configs.base import StreamConfig
-from repro.core.rates import Plan, plan as make_plan
+from repro.core.rates import Plan, checked_plan_swap, plan as make_plan
+
+
+class StreamCounters(NamedTuple):
+    """Splitter accounting as of a specific round (the paper's t' bookkeeping)."""
+
+    samples_arrived: int
+    samples_consumed: int
+    samples_discarded: int
+    rounds: int
 
 
 class StreamingPipeline:
@@ -27,11 +51,24 @@ class StreamingPipeline:
         else:
             self.plan = Plan(B=batch or n_nodes, mu=max(stream_cfg.forced_mu, 0),
                              R=rounds_R, Re=float("inf"), regime="resourceful")
+        self.stream_cfg = stream_cfg
         self.sample_fn = sample_fn
         self.n_nodes = n_nodes
         self._rng = np.random.default_rng(seed)
         self.samples_arrived = 0
+        self.samples_consumed = 0
+        self.samples_discarded = 0
         self.rounds = 0
+
+    def update_plan(self, new_plan: Plan) -> None:
+        """Closed-loop governor hook: swap in a re-derived plan mid-stream
+        (B fixed, mu adapts — see `core.rates.checked_plan_swap`); counters
+        are preserved across the swap."""
+        self.plan = checked_plan_swap(self.plan, new_plan)
+
+    def counters(self) -> StreamCounters:
+        return StreamCounters(self.samples_arrived, self.samples_consumed,
+                              self.samples_discarded, self.rounds)
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         return self
@@ -41,5 +78,110 @@ class StreamingPipeline:
         batch = self.sample_fn(self._rng, B + mu)
         batch = {k: v[:B] for k, v in batch.items()}  # splitter discards mu
         self.samples_arrived += B + mu
+        self.samples_consumed += B
+        self.samples_discarded += mu
         self.rounds += 1
         return batch
+
+    def next_superstep(self, k: int) -> Dict[str, np.ndarray]:
+        """Draw K governed rounds and stack them: leaves [K, B, ...]."""
+        rounds = [next(self) for _ in range(k)]
+        return {key: np.stack([r[key] for r in rounds]) for key in rounds[0]}
+
+
+class _Stop:
+    pass
+
+
+class _Raise(NamedTuple):
+    exc: BaseException
+
+
+class DevicePrefetcher:
+    """Depth-bounded prefetch ring between a host-side producer and the
+    training loop: a daemon thread repeatedly calls `produce()` (host sample
+    synthesis through the governed splitter) and `stage()` (sharded
+    `jax.device_put`) so the next superstep's H2D transfer happens while the
+    current superstep computes.
+
+    `counters()` is sampled immediately after each produce; `__next__` returns
+    the staged batch after adopting that snapshot into `self.counters`, so the
+    consumer sees exactly the accounting a synchronous loop would have seen at
+    that round — regardless of how far ahead the producer ring has run.
+    """
+
+    def __init__(self, produce: Callable[[], Any], *,
+                 stage: Optional[Callable[[Any], Any]] = None,
+                 counters: Optional[Callable[[], StreamCounters]] = None,
+                 depth: int = 2):
+        if depth < 1:
+            raise ValueError("prefetch depth must be >= 1")
+        self._produce = produce
+        self._stage = stage or (lambda x: x)
+        self._counters = counters or (lambda: None)
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._final: Optional[Any] = None  # latched _Stop/_Raise terminal state
+        self.counters: Optional[StreamCounters] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="device-prefetch")
+        self._thread.start()
+
+    def _put_stopaware(self, item: Any) -> None:
+        """Bounded-ring put that wakes promptly when close() sets the stop
+        event (a plain blocking put could deadlock against close()'s drain)."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return
+            except queue.Full:
+                continue
+
+    def _worker(self) -> None:
+        try:
+            while not self._stop.is_set():
+                try:
+                    item = self._produce()
+                except StopIteration:
+                    break
+                snap = self._counters()
+                staged = self._stage(item)
+                self._put_stopaware((staged, snap))
+        except BaseException as e:  # surface producer failures at the consumer
+            self._put_stopaware(_Raise(e))
+            return
+        self._put_stopaware(_Stop())
+
+    def __iter__(self) -> "DevicePrefetcher":
+        return self
+
+    def __next__(self):
+        # once the worker has signalled termination, nothing will ever be
+        # enqueued again — keep resolving without touching the queue
+        got = self._final if self._final is not None else self._q.get()
+        if isinstance(got, _Stop):
+            self._final = got
+            raise StopIteration
+        if isinstance(got, _Raise):
+            self._final = got
+            raise got.exc
+        staged, snap = got
+        if snap is not None:
+            self.counters = snap
+        return staged
+
+    def close(self) -> None:
+        self._stop.set()
+        # drain so a blocked producer can observe the stop event
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "DevicePrefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

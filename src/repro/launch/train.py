@@ -1,4 +1,6 @@
-"""Production training launcher.
+"""Production training launcher, wired onto the superstep streaming engine
+(`train.driver`): K-round device scans, async device prefetch, and the
+closed-loop (B, mu) governor.
 
 On real hardware this runs the full assigned config on the production mesh; on
 this CPU container use --reduced to train the family-faithful reduced variant
@@ -6,35 +8,33 @@ end-to-end (the full configs are exercised via launch.dryrun).
 
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch granite-8b --reduced \
-      --steps 50 --batch 8 --seq 256 --averaging gossip --rounds 4
+      --steps 48 --batch 8 --seq 256 --averaging gossip --rounds 4 \
+      --superstep 8 --prefetch 2
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SHAPES, get_config, reduced as reduce_cfg
 from repro.configs.base import AveragingConfig, RunConfig, StreamConfig
 from repro.data.lm import MarkovTokenStream
-from repro.data.pipeline import StreamingPipeline
 from repro.launch import sharding as shlib
 from repro.launch.mesh import make_host_mesh, make_production_mesh, n_data_nodes
 from repro.models.common import mesh_rules
 from repro.train import checkpoint as ckpt
-from repro.train.trainer import (TrainState, build_train_step, init_state,
-                                 make_node_batch, replicate_for_nodes)
+from repro.train.driver import EngineConfig, StreamingDriver
+from repro.train.trainer import init_state, replicate_for_nodes
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--steps", type=int, default=100,
+                    help="total rounds (rounded up to whole supersteps)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -48,7 +48,15 @@ def main():
     ap.add_argument("--comms-rate", type=float, default=0.0)
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--checkpoint", default="")
-    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--log-every", type=int, default=1,
+                    help="log every this many supersteps")
+    ap.add_argument("--superstep", type=int, default=8,
+                    help="K: rounds folded into one jitted device scan")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="async prefetch ring depth (0 = synchronous staging)")
+    ap.add_argument("--replan-every", type=int, default=1,
+                    help="supersteps between closed-loop (B, mu) re-plans; "
+                         "0 disables the governor feedback")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 mesh (requires 256 devices)")
     args = ap.parse_args()
@@ -67,36 +75,41 @@ def main():
     n_nodes = n_data_nodes(mesh)
     decentralized = args.averaging != "exact"
     rules = shlib.activation_rules(mesh, run.shape, node_axis=decentralized)
+    engine = EngineConfig(superstep=args.superstep,
+                          prefetch_depth=args.prefetch,
+                          replan_every=args.replan_every)
+    supersteps = -(-args.steps // engine.superstep)
 
     data = MarkovTokenStream(cfg.vocab_size, seed=0)
-    pipeline = StreamingPipeline(
-        lambda rng, n: next(iter([_draw(data, rng, n, args.seq)])),
-        run.stream, n_nodes, args.rounds, batch=args.batch)
-    print(f"plan: B={pipeline.plan.B} mu={pipeline.plan.mu} "
-          f"regime={pipeline.plan.regime} nodes={n_nodes}")
+    sample_fn = lambda rng, n: _draw(data, rng, n, args.seq)
 
     with mesh_rules(mesh, rules):
         state = init_state(run, jax.random.PRNGKey(run.seed))
         if decentralized:
             state = replicate_for_nodes(state, n_nodes)
-        step, _ = build_train_step(run, mesh)
-        step = jax.jit(step, donate_argnums=0)
-        t0 = time.time()
-        for i, batch in zip(range(args.steps), pipeline):
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            if decentralized:
-                batch = make_node_batch(batch, n_nodes)
-            state, metrics = step(state, batch)
-            if i % args.log_every == 0 or i == args.steps - 1:
-                m = {k: float(v) for k, v in metrics.items()}
-                print(f"step {i:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
-                      f"consensus_err {m['consensus_err']:.2e} "
-                      f"t'={pipeline.samples_arrived} "
-                      f"({time.time() - t0:.1f}s)", flush=True)
+        with StreamingDriver(run, mesh, state, sample_fn, engine=engine,
+                             batch=args.batch) as driver:
+            plan = driver.pipeline.plan
+            print(f"plan: B={plan.B} mu={plan.mu} regime={plan.regime} "
+                  f"nodes={n_nodes} K={engine.superstep} "
+                  f"prefetch={engine.prefetch_depth}")
+            state, history = driver.run(supersteps, log_fn=_log,
+                                        log_every=args.log_every)
     if args.checkpoint:
-        ckpt.save(args.checkpoint, state, step=args.steps,
+        ckpt.save(args.checkpoint, state, step=supersteps * engine.superstep,
                   meta={"arch": args.arch, "reduced": args.reduced})
         print(f"checkpoint -> {args.checkpoint}")
+
+
+def _log(rec):
+    m = rec["metrics"]
+    c = rec["counters"]
+    plan = rec.get("replanned", rec["plan"])
+    print(f"round {rec['round']:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+          f"consensus_err {m['consensus_err']:.2e} "
+          f"t'={c.samples_arrived} mu={plan.mu} "
+          f"({rec['rounds_per_s']:.1f} rounds/s, "
+          f"{rec['samples_per_s']:.0f} samples/s)", flush=True)
 
 
 def _draw(data: MarkovTokenStream, rng: np.random.Generator, n: int, seq: int):

@@ -1,0 +1,217 @@
+"""Superstep streaming engine: the execution loop that keeps the device fed at
+the rate the paper's analysis assumes.
+
+The paper's Fig. 3(c) splits a streaming learner into a *splitter* (one node
+receives the stream and deals B samples per round, discarding mu) and the
+*compute network* (N nodes process their B/N shares, then average). Fig. 4
+shows why the split matters: whenever the stream outpaces the effective
+processing rate R_e (eq. 4), samples pile up or drop. A naive training loop —
+one jitted step per Python iteration with host-side sample synthesis, a
+blocking H2D copy, and a blocking metric fetch between steps — throttles R_p
+far below hardware and makes that mismatch self-inflicted. This driver removes
+it with three stages:
+
+1. **Splitter (host thread)** — `data.pipeline.StreamingPipeline` runs the
+   governed splitter of Fig. 3(c): per round it draws B + mu samples, keeps B,
+   and stacks K rounds into one superstep batch (leading K axis).
+2. **Stage (H2D overlap)** — `data.pipeline.DevicePrefetcher` stages the
+   *next* superstep onto devices (sharded `jax.device_put`) from a background
+   thread while the current superstep computes — the overlap of sample arrival
+   with processing in Fig. 4's timeline, so host synthesis and transfer time
+   disappear from the critical path.
+3. **Compute (device)** — `train.trainer.build_superstep` folds the K rounds
+   into a single `lax.scan` inside one jitted call (TrainState donated where
+   the backend supports it); dispatch and metric-fetch overhead is paid once
+   per K rounds instead of once per round.
+
+Closing the loop, the driver times every superstep, inverts eq. 4 to get the
+*measured* R_p / R_e (`core.rates.measured_processing_rate`), and re-plans
+(B, mu) via `core.rates.replan` — so an under-provisioned run discards the mu
+its hardware actually requires (Fig. 4's drop rule), not what nominal config
+constants predicted. B stays fixed across re-plans to keep batch shapes (and
+the compiled superstep) stable; the adaptation lands entirely in mu.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.core import rates
+from repro.data.pipeline import DevicePrefetcher, StreamCounters, StreamingPipeline
+from repro.launch.mesh import data_axes, n_data_nodes
+from repro.train.trainer import TrainState, build_superstep, make_node_batch
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Knobs of the streaming engine (all host-side; no retrace on change)."""
+
+    superstep: int = 8  # K: rounds folded into one device scan
+    prefetch_depth: int = 2  # staged supersteps in flight; 0 = synchronous
+    replan_every: int = 1  # supersteps between governor re-plans; 0 = open loop
+    # supersteps whose timings the governor ignores: the first two calls pay
+    # XLA compilation (one per jit signature — freshly-built then committed
+    # state), and treating compile time as processing time would make replan
+    # discard thousands of samples for a one-off cost
+    warmup_supersteps: int = 2
+
+
+class StreamingDriver:
+    """Owns the three-stage loop: governed splitter -> prefetch ring ->
+    K-round device scan, plus the closed-loop (B, mu) governor.
+
+    Call `run()` under the same `mesh_rules` context the initial state was
+    built in. `clock` is injectable so tests can fake slow hardware and watch
+    the governor raise mu.
+    """
+
+    def __init__(self, run_cfg: RunConfig, mesh, state: TrainState,
+                 sample_fn: Callable[[np.random.Generator, int], Dict[str, np.ndarray]],
+                 *, engine: EngineConfig = EngineConfig(),
+                 batch: Optional[int] = None, horizon: Optional[float] = None,
+                 n_nodes: Optional[int] = None, seed: int = 0,
+                 clock: Callable[[], float] = time.perf_counter):
+        if engine.superstep < 1:
+            raise ValueError("superstep K must be >= 1")
+        self.run_cfg = run_cfg
+        self.mesh = mesh
+        self.state = state
+        self.engine = engine
+        self.clock = clock
+        self.decentralized = run_cfg.averaging.mode != "exact"
+        self.n_nodes = n_nodes or n_data_nodes(mesh)
+        self.pipeline = StreamingPipeline(
+            sample_fn, run_cfg.stream, self.n_nodes, run_cfg.averaging.rounds,
+            batch=batch, horizon=horizon, seed=seed)
+        superstep, _ = build_superstep(run_cfg, mesh, n_nodes=self.n_nodes)
+        # donation updates TrainState in place across supersteps; CPU lacks
+        # donation support and would only warn (see core.dsgd.jit_driver)
+        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        self._superstep = jax.jit(superstep, donate_argnums=donate)
+        self._sharding = self._batch_sharding()
+        self._prefetcher: Optional[DevicePrefetcher] = None
+        self._supersteps_done = 0  # across run() calls (governor warm-up gate)
+        self.history: List[Dict[str, Any]] = []
+
+    # ---------------------------------------------------------------- stages
+
+    def _host_superstep(self) -> Dict[str, np.ndarray]:
+        """Stage 1: K governed splitter rounds, stacked [K, B, ...] (exact)
+        or split [K, N, B/N, ...] (decentralized node axis)."""
+        batch = self.pipeline.next_superstep(self.engine.superstep)
+        if self.decentralized:
+            batch = make_node_batch(batch, self.n_nodes, axis=1)
+        return batch
+
+    def _batch_sharding(self) -> Optional[NamedSharding]:
+        """Leading-K batches shard their second axis (global batch / node) over
+        the data axes; on a single-device mesh a plain `device_put` suffices."""
+        if self.mesh is None or self.mesh.devices.size == 1:
+            return None
+        dp = data_axes(self.mesh)
+        extent = 1
+        for a in dp:
+            extent *= self.mesh.shape[a]
+        if extent == 1 or (self.decentralized and self.n_nodes % extent != 0):
+            return None
+        return NamedSharding(self.mesh, P(None, dp))
+
+    def _stage(self, batch: Dict[str, np.ndarray]):
+        """Stage 2: H2D — runs on the prefetch thread when depth > 0."""
+        if self._sharding is None:
+            return jax.device_put(batch)
+        return jax.device_put(batch, self._sharding)
+
+    # ------------------------------------------------------------- main loop
+
+    def run(self, supersteps: int, *,
+            log_fn: Optional[Callable[[Dict[str, Any]], None]] = None,
+            log_every: int = 1) -> Tuple[TrainState, List[Dict[str, Any]]]:
+        """Drive `supersteps` supersteps (K rounds each). Returns the final
+        TrainState and the per-superstep history of metrics, throughput, and
+        governor decisions.
+
+        The prefetch ring persists across calls (it keeps staging between
+        runs, bounded at `prefetch_depth`), so a warm-up `run()` leaves the
+        ring hot for a subsequent timed one; call `close()` (or use the
+        driver as a context manager) when done."""
+        if self.engine.prefetch_depth > 0 and self._prefetcher is None:
+            self._prefetcher = DevicePrefetcher(
+                self._host_superstep, stage=self._stage,
+                counters=self.pipeline.counters,
+                depth=self.engine.prefetch_depth)
+        source = self._prefetcher
+        for i in range(supersteps):
+            # the timed window covers batch acquisition too: when the HOST is
+            # the bottleneck (prefetch ring empty, slow synthesis), that wait
+            # must show up in measured_Re or the governor would keep calling
+            # an input-bound run "resourceful"
+            t0 = self.clock()
+            if source is not None:
+                staged = next(source)
+                counters = source.counters
+            else:
+                staged = self._stage(self._host_superstep())
+                counters = self.pipeline.counters()
+            self.state, metrics = self._superstep(self.state, staged)
+            metrics = jax.device_get(metrics)  # one fetch per K rounds
+            wall_s = max(self.clock() - t0, 1e-12)
+            rec = self._observe(metrics, wall_s, counters)
+            if log_fn and (i % log_every == 0 or i == supersteps - 1):
+                log_fn(rec)
+        return self.state, self.history
+
+    def close(self) -> None:
+        """Stop the prefetch thread (idempotent)."""
+        if self._prefetcher is not None:
+            self._prefetcher.close()
+            self._prefetcher = None
+
+    def __enter__(self) -> "StreamingDriver":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -------------------------------------------------------------- governor
+
+    def _observe(self, metrics: Dict[str, np.ndarray], wall_s: float,
+                 counters: Optional[StreamCounters]) -> Dict[str, Any]:
+        i = self._supersteps_done
+        self._supersteps_done += 1
+        K = self.engine.superstep
+        plan = self.pipeline.plan
+        round_s = wall_s / K
+        stream = self.run_cfg.stream
+        measured_Rp = rates.measured_processing_rate(
+            plan.B, self.n_nodes, plan.R, round_s, stream.comms_rate)
+        rec: Dict[str, Any] = {
+            "superstep": i,
+            "round": (i + 1) * K,
+            # last round of the scan == what a per-round loop would print
+            "metrics": {k: float(np.asarray(v)[-1]) for k, v in metrics.items()},
+            "wall_s": wall_s,
+            "rounds_per_s": K / wall_s,
+            "samples_per_s": K * plan.B / wall_s,
+            "measured_Rp": measured_Rp,
+            "measured_Re": rates.measured_effective_rate(round_s),
+            "plan": plan,
+            "counters": counters,
+        }
+        every = self.engine.replan_every
+        if (stream.streaming_rate > 0 and every > 0 and (i + 1) % every == 0
+                and i >= self.engine.warmup_supersteps):
+            new_plan = rates.replan(stream, self.n_nodes, plan.R, plan.B, round_s)
+            # Re is measured and jitters every superstep; only an actual
+            # change of the governor's *decision* (mu / regime) counts
+            if (new_plan.mu, new_plan.regime) != (plan.mu, plan.regime):
+                self.pipeline.update_plan(new_plan)
+                rec["replanned"] = new_plan
+        self.history.append(rec)
+        return rec

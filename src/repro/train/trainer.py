@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,15 +57,22 @@ def replicate_for_nodes(state: TrainState, n_nodes: int) -> TrainState:
                         state)
 
 
-def build_train_step(run: RunConfig, mesh) -> Tuple[Callable, Callable]:
+def build_train_step(run: RunConfig, mesh, *,
+                     n_nodes: Optional[int] = None) -> Tuple[Callable, Callable]:
     """Returns (train_step, state_spec_fn).
 
     train_step(state, batch) -> (state, metrics); call under `mesh_rules`.
+
+    `n_nodes` overrides the mesh-derived decentralized node count: passing
+    N > n_data_nodes(mesh) emulates the paper's N-node network on fewer
+    devices (the vmap'd node axis is then partly or fully local), which is how
+    the CPU container exercises gossip semantics and the pipeline benchmark
+    drives decentralized supersteps on one device.
     """
     cfg = run.model
     update = make_optimizer(run.optimizer, run.learning_rate,
                             weight_decay=run.weight_decay)
-    n_nodes = n_data_nodes(mesh)
+    n_nodes = n_nodes or n_data_nodes(mesh)
     pods = mesh.shape.get("pod", 1)
     decentralized = run.averaging.mode != "exact"
 
@@ -121,10 +128,11 @@ def build_train_step(run: RunConfig, mesh) -> Tuple[Callable, Callable]:
 
     node_axes = data_axes(mesh)
     # the consensus engine: the R-round mixing operator is precomputed HERE,
-    # once per build, not once per round inside the jitted step (the default
-    # roll impl keeps the collective-permute lowering over the sharded axis)
+    # once per build, not once per round inside the jitted step; the mesh
+    # lets impl="auto" keep the collective-permute roll lowering on sharded
+    # node axes and take the matmul/kernel fast path on single-device runs
     gossip_n = pods if run.averaging.mode == "hierarchical" else n_nodes
-    mix = make_gossip_mix(run.averaging, gossip_n)
+    mix = make_gossip_mix(run.averaging, gossip_n, mesh=mesh)
 
     def train_step(state: TrainState, batch):
         # batch leaves: [n_nodes, B/n_nodes, ...]
@@ -169,7 +177,32 @@ def _state_specs(state_shapes: TrainState, *, run: RunConfig, mesh, node_axes):
                                       v_spec, master_spec))
 
 
-def make_node_batch(batch: Dict[str, jax.Array], n_nodes: int) -> Dict[str, jax.Array]:
-    """[B, ...] -> [n_nodes, B/n_nodes, ...] (the splitter of Fig. 3(c))."""
-    return jax.tree.map(
-        lambda a: a.reshape(n_nodes, a.shape[0] // n_nodes, *a.shape[1:]), batch)
+def build_superstep(run: RunConfig, mesh, *,
+                    n_nodes: Optional[int] = None) -> Tuple[Callable, Callable]:
+    """The K-round device scan: fold K consecutive train steps into ONE jitted
+    call via `lax.scan` (paper Fig. 4's amortization of fixed per-round costs).
+
+    Returns (superstep, state_spec_fn) where
+    `superstep(state, batches) -> (state, metrics)`: batch leaves carry a
+    leading K axis ([K, B, ...] exact / [K, N, B/N, ...] decentralized) and
+    metric leaves come back stacked [K] — accumulated on-device, so the host
+    pays one dispatch and one metric fetch per K rounds instead of per round.
+    K is read from the batch shapes at trace time; each distinct K compiles
+    once (jit caches by shape), so pick K once per run.
+    """
+    train_step, spec_fn = build_train_step(run, mesh, n_nodes=n_nodes)
+
+    def superstep(state: TrainState, batches):
+        return jax.lax.scan(train_step, state, batches)
+
+    return superstep, spec_fn
+
+
+def make_node_batch(batch: Dict[str, jax.Array], n_nodes: int,
+                    axis: int = 0) -> Dict[str, jax.Array]:
+    """[B, ...] -> [n_nodes, B/n_nodes, ...] (the splitter of Fig. 3(c)).
+    `axis=1` splits superstep batches [K, B, ...] -> [K, n_nodes, B/n_nodes, ...]."""
+    def split(a):
+        shp = a.shape
+        return a.reshape(*shp[:axis], n_nodes, shp[axis] // n_nodes, *shp[axis + 1:])
+    return jax.tree.map(split, batch)

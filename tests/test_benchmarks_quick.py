@@ -1,0 +1,32 @@
+"""Tier-1 guard against benchmark bit-rot: `benchmarks/run.py --quick` must
+execute every suite at smoke scale and produce a parseable --json artifact."""
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(__file__)
+ROOT = os.path.abspath(os.path.join(HERE, ".."))
+
+
+def test_run_quick_all_suites(tmp_path):
+    out = tmp_path / "bench_quick.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    p = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--quick", "--json", str(out)],
+        capture_output=True, text=True, timeout=600, cwd=ROOT, env=env)
+    assert p.returncode == 0, (p.stdout[-2000:], p.stderr[-3000:])
+
+    artifact = json.loads(out.read_text())
+    assert artifact["schema"] == "repro-bench-v1"
+    assert artifact["quick"] is True
+    assert artifact["failed"] == []
+    names = [r["name"] for r in artifact["rows"]]
+    # every suite contributed at least one row
+    for prefix in ("fig5/", "fig6a/", "fig7a/", "fig9/", "consensus/",
+                   "kernel/", "pipeline/"):
+        assert any(n.startswith(prefix) for n in names), (prefix, names)
+    # the engine rows carry machine-readable throughput
+    pipe = [r for r in artifact["rows"] if r["name"].startswith("pipeline/")]
+    assert all("rounds_per_s=" in r["derived"] for r in pipe)

@@ -1,0 +1,302 @@
+"""Streaming-engine tests (train.driver + the superstep/prefetch machinery):
+
+* superstep(K) == K sequential train steps — bit-identical in exact mode,
+  within tolerance for decentralized (gossip) mode
+* the async prefetch ring preserves sample order and keeps the splitter
+  counters (samples_arrived, discards) coherent with the consumed batch
+* the closed-loop governor raises mu when the measured rate is artificially
+  slowed (injected clock), and the rate inversion round-trips eq. 4
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import AveragingConfig, RunConfig, SHAPES, StreamConfig
+from repro.core import rates
+from repro.data.lm import MarkovTokenStream
+from repro.data.pipeline import DevicePrefetcher, StreamingPipeline
+from repro.launch.mesh import make_mesh
+from repro.launch.sharding import activation_rules
+from repro.models.common import mesh_rules
+from repro.train.driver import EngineConfig, StreamingDriver
+from repro.train.trainer import (build_superstep, build_train_step, init_state,
+                                 make_node_batch, replicate_for_nodes)
+
+SEQ = 16
+BATCH = 4
+
+
+def _run_cfg(mode="exact", rounds=1, stream=StreamConfig()):
+    cfg = dataclasses.replace(
+        reduced(get_config("granite-8b"), layers=1, d_model=16),
+        vocab_size=32, d_ff=32)
+    return RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                     averaging=AveragingConfig(mode, rounds), stream=stream,
+                     optimizer="adam", learning_rate=1e-3,
+                     param_dtype="float32", remat=False)
+
+
+def _sample_fn(vocab=32, seed=0):
+    data = MarkovTokenStream(vocab, seed=seed)
+
+    def draw(rng, n):
+        toks = data.sample(rng, n, SEQ + 1)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    return draw
+
+
+def _rounds(k, batch=BATCH, seed=0):
+    draw = _sample_fn(seed=seed)
+    rng = np.random.default_rng(seed)
+    return [{kk: jnp.asarray(v) for kk, v in draw(rng, batch).items()}
+            for _ in range(k)]
+
+
+def _stack(batches):
+    return {k: jnp.stack([b[k] for b in batches]) for k in batches[0]}
+
+
+# ---------------------------------------------------------------------------
+# Superstep parity
+# ---------------------------------------------------------------------------
+
+def test_superstep_exact_mode_bit_identical():
+    """K-round superstep == K sequential jitted steps, bitwise (exact mode)."""
+    run_cfg = _run_cfg("exact")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    K = 4
+    batches = _rounds(K)
+    with mesh_rules(mesh, activation_rules(mesh, run_cfg.shape)):
+        state0 = init_state(run_cfg, jax.random.PRNGKey(0))
+        step = jax.jit(build_train_step(run_cfg, mesh)[0])
+        superstep = jax.jit(build_superstep(run_cfg, mesh)[0])
+
+        seq_state, seq_losses = state0, []
+        for b in batches:
+            seq_state, m = step(seq_state, b)
+            seq_losses.append(np.asarray(m["loss"]))
+        sup_state, sup_metrics = superstep(state0, _stack(batches))
+
+    for a, b in zip(jax.tree.leaves(seq_state), jax.tree.leaves(sup_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # on-device metric accumulation: stacked [K], same values per round
+    assert sup_metrics["loss"].shape == (K,)
+    np.testing.assert_array_equal(np.stack(seq_losses),
+                                  np.asarray(sup_metrics["loss"]))
+
+
+def test_superstep_decentralized_matches_sequential():
+    """Gossip mode (emulated N=4 nodes on one device): same trajectory within
+    float tolerance."""
+    run_cfg = _run_cfg("gossip", rounds=2)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    n_nodes, K = 4, 3
+    batches = [make_node_batch(b, n_nodes) for b in _rounds(K, batch=4 * BATCH)]
+    with mesh_rules(mesh, activation_rules(mesh, run_cfg.shape, node_axis=True)):
+        state0 = replicate_for_nodes(
+            init_state(run_cfg, jax.random.PRNGKey(0)), n_nodes)
+        step = jax.jit(build_train_step(run_cfg, mesh, n_nodes=n_nodes)[0])
+        superstep = jax.jit(build_superstep(run_cfg, mesh, n_nodes=n_nodes)[0])
+
+        seq_state = state0
+        for b in batches:
+            seq_state, m = step(seq_state, b)
+        sup_state, ms = superstep(state0, _stack(batches))
+
+    assert float(ms["consensus_err"][-1]) > 0.0  # inexact averaging is live
+    for a, b in zip(jax.tree.leaves(seq_state), jax.tree.leaves(sup_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Prefetch ring
+# ---------------------------------------------------------------------------
+
+def test_prefetch_preserves_order_and_counters():
+    """Prefetched stream == synchronous stream, and each consumed batch comes
+    with the counter snapshot a synchronous loop would have observed."""
+    def mk_pipe():
+        return StreamingPipeline(
+            lambda rng, n: {"x": rng.normal(size=(n, 2))},
+            StreamConfig(forced_mu=3), n_nodes=2, rounds_R=1, batch=8, seed=7)
+
+    sync_pipe, pre_pipe = mk_pipe(), mk_pipe()
+    n_steps, K = 6, 2
+
+    sync_batches, sync_counts = [], []
+    for _ in range(n_steps):
+        sync_batches.append(sync_pipe.next_superstep(K))
+        sync_counts.append(sync_pipe.counters())
+
+    staged_log = []
+    pf = DevicePrefetcher(lambda: pre_pipe.next_superstep(K),
+                         stage=lambda b: (staged_log.append(True), b)[1],
+                         counters=pre_pipe.counters, depth=2)
+    with pf:
+        for want, want_c in zip(sync_batches, sync_counts):
+            got = next(pf)
+            np.testing.assert_array_equal(got["x"], want["x"])
+            assert pf.counters == want_c
+    # staging ran on the producer side for every consumed superstep
+    assert len(staged_log) >= n_steps
+    # coherence: consumer-visible counters lag the producer's read-ahead
+    assert pf.counters.samples_arrived <= pre_pipe.samples_arrived
+
+
+def test_prefetch_finite_source_and_errors():
+    it = iter(range(5))
+    pf = DevicePrefetcher(lambda: next(it), depth=2)
+    assert list(pf) == [0, 1, 2, 3, 4]
+    # exhausted ring keeps raising instead of blocking on the dead worker
+    with pytest.raises(StopIteration):
+        next(pf)
+    pf.close()
+
+    def boom():
+        raise RuntimeError("producer died")
+
+    pf = DevicePrefetcher(boom, depth=1)
+    for _ in range(2):  # the error is latched, not one-shot
+        with pytest.raises(RuntimeError, match="producer died"):
+            next(pf)
+    pf.close()
+
+
+def test_pipeline_update_plan_keeps_B_fixed():
+    pipe = StreamingPipeline(lambda rng, n: {"x": rng.normal(size=(n, 2))},
+                             StreamConfig(), 2, 1, batch=8)
+    new = dataclasses.replace(pipe.plan, mu=5)
+    pipe.update_plan(new)
+    assert pipe.plan.mu == 5
+    next(pipe)
+    assert pipe.samples_arrived == 13 and pipe.samples_discarded == 5
+    with pytest.raises(ValueError):
+        pipe.update_plan(dataclasses.replace(pipe.plan, B=16))
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop governor
+# ---------------------------------------------------------------------------
+
+def test_measured_rate_inverts_effective_rate():
+    B, N, R, Rp, Rc = 64, 4, 3, 1e4, 1e5
+    round_s = B / (N * Rp) + R / Rc  # eq. 4 timeline
+    got = rates.measured_processing_rate(B, N, R, round_s, Rc)
+    assert got == pytest.approx(Rp, rel=1e-9)
+    assert rates.measured_effective_rate(round_s) == pytest.approx(
+        rates.effective_rate(B, N, R, Rp, Rc), rel=1e-9)
+
+
+def test_replan_raises_mu_when_slow():
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    nominal = rates.plan(stream, N=2, R=1, B=8)
+    assert nominal.mu == 0  # config constants claim the system keeps up
+    fast = rates.replan(stream, 2, 1, 8, wall_s_per_round=1e-3)
+    slow = rates.replan(stream, 2, 1, 8, wall_s_per_round=1.0)
+    assert fast.mu == 0
+    assert slow.mu > 0 and slow.regime == "under-provisioned"
+    assert slow.B == nominal.B  # shape-stable adaptation
+
+
+def test_replan_distrusts_disproven_comms_model():
+    """A round observed FASTER than the modeled comm floor R/R_c proves the
+    comms constant wrong; the re-plan must attribute wall time to compute
+    (mu = 0 for a run that keeps up), not discard real samples on the model's
+    say-so."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e3)
+    R, B, N = 10, 8, 2  # modeled comm floor: R/Rc = 10 ms
+    got = rates.replan(stream, N, R, B, wall_s_per_round=2e-3)
+    assert got.mu == 0 and got.regime == "resourceful"
+    Rp = rates.measured_processing_rate(B, N, R, 2e-3, stream.comms_rate)
+    assert Rp == pytest.approx(B / (N * 2e-3))  # sane, not clamp-driven 1e12
+
+
+def test_replan_honors_forced_mu():
+    """A user-pinned mu is an experiment knob; the feedback loop must not
+    silently overwrite it."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6, forced_mu=7)
+    slow = rates.replan(stream, 2, 1, 8, wall_s_per_round=1.0)
+    assert slow.mu == 7
+
+
+class _FakeClock:
+    """Monotonic clock that jumps `dt` seconds per reading."""
+
+    def __init__(self, dt):
+        self.t, self.dt = 0.0, dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+@pytest.mark.parametrize("dt,expect_discard", [(1e-4, False), (50.0, True)])
+def test_driver_closed_loop_adapts_mu(dt, expect_discard):
+    """With an artificially slow clock the governor must re-plan mu > 0; with
+    a fast one it must keep mu = 0 (nominal config already keeps up)."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    run_cfg = _run_cfg(stream=stream)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with mesh_rules(mesh, activation_rules(mesh, run_cfg.shape)):
+        state = init_state(run_cfg, jax.random.PRNGKey(0))
+        driver = StreamingDriver(
+            run_cfg, mesh, state, _sample_fn(), batch=BATCH,
+            engine=EngineConfig(superstep=2, prefetch_depth=0, replan_every=1,
+                                warmup_supersteps=0),
+            clock=_FakeClock(dt))
+        assert driver.pipeline.plan.mu == 0
+        _, history = driver.run(3)
+    assert len(history) == 3
+    if expect_discard:
+        assert driver.pipeline.plan.mu > 0
+        assert driver.pipeline.plan.regime == "under-provisioned"
+        assert driver.pipeline.samples_discarded > 0  # later rounds paid mu
+    else:
+        assert driver.pipeline.plan.mu == 0
+        assert driver.pipeline.samples_discarded == 0
+
+
+def test_driver_governor_skips_compile_warmup():
+    """Default warm-up gating: the (slow) compile supersteps must not feed the
+    governor, even when their wall time screams under-provisioned."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    run_cfg = _run_cfg(stream=stream)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with mesh_rules(mesh, activation_rules(mesh, run_cfg.shape)):
+        state = init_state(run_cfg, jax.random.PRNGKey(0))
+        driver = StreamingDriver(
+            run_cfg, mesh, state, _sample_fn(), batch=BATCH,
+            engine=EngineConfig(superstep=2, prefetch_depth=0, replan_every=1),
+            clock=_FakeClock(50.0))
+        _, history = driver.run(2)
+        assert all("replanned" not in rec for rec in history)
+        assert driver.pipeline.plan.mu == 0
+        # warm-up over (also across run() calls): the governor engages
+        driver.run(1)
+    assert driver.pipeline.plan.mu > 0
+
+
+def test_driver_runs_with_prefetch_and_counts_rounds():
+    run_cfg = _run_cfg()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with mesh_rules(mesh, activation_rules(mesh, run_cfg.shape)):
+        state = init_state(run_cfg, jax.random.PRNGKey(0))
+        with StreamingDriver(
+                run_cfg, mesh, state, _sample_fn(), batch=BATCH,
+                engine=EngineConfig(superstep=3, prefetch_depth=2,
+                                    replan_every=0)) as driver:
+            _, history = driver.run(2)
+    assert [rec["round"] for rec in history] == [3, 6]
+    assert history[-1]["counters"].samples_consumed == 6 * BATCH
+    assert all(np.isfinite(rec["metrics"]["loss"]) for rec in history)

@@ -84,6 +84,65 @@ def test_consensus_error_diagnostic():
     assert e1 < 1e-3
 
 
+@pytest.mark.parametrize("per_pod,feat", [(4, 8), (3, 7), (4, 5)])
+def test_hierarchical_reduce_scatter_matches_broadcast_form(per_pod, feat):
+    """The reduce-scatter formulation must equal the legacy broadcast-then-
+    gossip pod mean (gossip is linear and chunkwise over the pod axis),
+    including when the feature dim needs padding to a multiple of per_pod."""
+    pods = 4
+    n = pods * per_pod
+    rng = np.random.default_rng(6)
+    v = rng.normal(size=(n, feat)).astype(np.float32)
+    cfg = AveragingConfig(mode="hierarchical", rounds=3, topology="ring")
+    got = np.asarray(averaging.hierarchical_average({"g": jnp.asarray(v)},
+                                                    pods, per_pod, cfg)["g"])
+    # oracle: pod means -> dense R-round gossip over pods -> broadcast
+    pm = v.reshape(pods, per_pod, feat).mean(1)
+    A = mixing.schedule_matrix(mixing.schedule("ring", pods), pods)
+    mixed = np.linalg.matrix_power(A, 3) @ pm
+    want = np.repeat(mixed, per_pod, axis=0)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+class _FakeMesh:
+    """Just enough of jax.sharding.Mesh for resolve_auto_impl."""
+
+    def __init__(self, shape):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+        self.devices = np.empty(tuple(shape.values()), dtype=object)
+
+
+def test_resolve_auto_impl_layouts():
+    # sharded node axis (data/pod extent > 1): always the roll lowering
+    assert mixing.resolve_auto_impl(_FakeMesh({"data": 8, "model": 1})) == "roll"
+    assert mixing.resolve_auto_impl(
+        _FakeMesh({"pod": 2, "data": 4, "model": 2})) == "roll"
+    # node axis local but model-sharded trailing dims: matmul would flatten
+    # (and so gather) them — must stay on roll
+    assert mixing.resolve_auto_impl(_FakeMesh({"data": 1, "model": 4})) == "roll"
+    # single-device mesh on this CPU container: the dense-matmul fast path
+    assert mixing.resolve_auto_impl(
+        _FakeMesh({"data": 1, "model": 1})) == "matmul"
+    # no mesh info, single local device: fast path is provably safe
+    assert mixing.resolve_auto_impl(None) == "matmul"
+
+
+@pytest.mark.parametrize("rounds", [1, 4])
+def test_auto_impl_matches_oracle_on_single_device(rounds):
+    """impl='auto' resolves to the matmul fast path here and must agree with
+    the dense matrix-power oracle."""
+    n = 12
+    sched = mixing.schedule("ring", n)
+    op = mixing.circulant_mix_op(sched, n, rounds, impl="auto")
+    assert op.impl == "matmul" and op.A_eff is not None
+    v = np.random.default_rng(8).normal(size=(n, 6)).astype(np.float32)
+    want = np.linalg.matrix_power(
+        mixing.schedule_matrix(sched, n), rounds) @ v
+    np.testing.assert_allclose(np.asarray(op(jnp.asarray(v))), want,
+                               rtol=2e-5, atol=2e-6)
+
+
 def test_quantized_gossip_still_averages_approximately():
     n = 8
     v = jnp.asarray(np.random.default_rng(5).normal(size=(n, 16)).astype(np.float32))

@@ -46,6 +46,32 @@ def test_pipeline_invariants(nodes_pow, rounds, mu):
     assert pipe.samples_arrived == B + mu
 
 
+def test_governed_stream_superstep_and_replan():
+    sc = StreamConfig(forced_mu=4)
+    gs = make_governed_stream(_draw, sc, n_nodes=2, rounds_R=1, B=8)
+    sup = gs.next_superstep(3)
+    assert sup.shape == (3, 2, 4, 3)  # [K, N, B/N, d]
+    assert gs.samples_arrived == 3 * 12 and gs.rounds == 3
+    # closed-loop plan swap: counters carry over, B must stay fixed
+    import dataclasses
+    gs.update_plan(dataclasses.replace(gs.plan, mu=10))
+    next(gs)
+    assert gs.samples_arrived == 3 * 12 + 18
+    with pytest.raises(ValueError):
+        gs.update_plan(dataclasses.replace(gs.plan, B=16))
+
+
+def test_pipeline_superstep_counters():
+    sc = StreamConfig(forced_mu=2)
+    pipe = StreamingPipeline(lambda rng, n: {"x": rng.normal(size=(n, 2))},
+                             sc, n_nodes=2, rounds_R=1, batch=6)
+    sup = pipe.next_superstep(4)
+    assert sup["x"].shape == (4, 6, 2)
+    c = pipe.counters()
+    assert (c.samples_arrived, c.samples_consumed, c.samples_discarded,
+            c.rounds) == (32, 24, 8, 4)
+
+
 def test_pipeline_with_rate_planner():
     sc = StreamConfig(streaming_rate=2e5, processing_rate=1e5, comms_rate=1e4)
     pipe = StreamingPipeline(lambda rng, n: {"x": rng.normal(size=(n, 2))},
