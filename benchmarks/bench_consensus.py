@@ -1,21 +1,38 @@
 """Consensus engine benchmark: per-step consensus wall time vs R, per-round
-loop vs the precomputed fused operator (core.mixing.MixOp).
+loop vs the precomputed fused operator (core.mixing.MixOp), plus the packed
+flat-buffer + quantized suites and the tile-vs-global compressor accuracy
+study (PR 3).
 
-The per-round loop is the slowest-possible form of eq. 17 — R sequential dense
-matmuls (dense path) or (deg+1)*R weighted rolls (circulant path) per step.
-The fused engine precomputes the R-round operator once outside the step, so
-per-step cost is ~one round. Rows emit the fused time with the loop time and
-speedup in the derived column; the dense rows assert the >=2x contract at
-R>=8, N>=16 and allclose(1e-5) against the per-round oracle.
+Suites:
+
+* dense / circulant — the PR 1 contract: R sequential matmuls / (deg+1)*R
+  weighted rolls vs the precomputed R-round operator (>=2x at R>=8, N>=16).
+* packed — unquantized gossip on a many-leaf pytree: per-leaf dispatch
+  (`packed=False`) vs ONE flat [N, D] buffer per step (`core.packing`).
+* quantized — the per-leaf per-round quantized loop (the pre-PR path: global
+  stats, one roll/compress chain per leaf per round) vs the packed buffer
+  with tile-statistics fused execution (`quant_stats="tile"`; the Pallas
+  kernel on TPU, the single-dispatch XLA tile chain here). Contract: >=5x
+  steady-state on the many-tiny-leaf tree in full mode. The segment-stats
+  middle tier (per-leaf scales, packed execution) is timed alongside.
+* quant_accuracy — convergence of quantized decentralized logistic regression
+  (the paper's Fig. 9 conditional-Gaussian problem) under global vs tile
+  compressor statistics: final excess risk and consensus error per config,
+  the Section VI semantics study the tile fusion requires.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core import dsgd, mixing
+from repro.configs.base import AveragingConfig
+from repro.configs.paper_logreg import FIG9
+from repro.core import averaging, dsgd, mixing, problems
+from repro.data.synthetic import make_logreg_stream
 
 D = 65_536  # per-node state width: big enough that work, not dispatch, is timed
 
@@ -54,6 +71,124 @@ def _circulant(N: int, R: int, topo: str) -> None:
              f"loop_us={t_loop:.1f};speedup={t_loop / t_fused:.2f}x")
 
 
+# ---------------------------------------------------------------------------
+# Packed + quantized suites (many-leaf pytrees)
+# ---------------------------------------------------------------------------
+
+_WIDTHS = (8, 16, 32, 64, 12, 24)  # tiny-leaf regime: biases/norms/projections
+
+
+def _leafy_tree(n: int, n_leaves: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {f"l{i}": jnp.asarray(
+        rng.normal(size=(n, _WIDTHS[i % len(_WIDTHS)])).astype(np.float32))
+        for i in range(n_leaves)}
+
+
+def _tmin(fn, *args) -> float:
+    """Speedup-contract timing: min over a longer loop (scheduler noise on
+    this container only ever inflates)."""
+    return time_fn(fn, *args, warmup=2, iters=9, agg="min")
+
+
+def _packed(N: int, R: int, n_leaves: int) -> None:
+    """Unquantized gossip: per-leaf tree.map dispatch vs one packed buffer."""
+    tree = _leafy_tree(N, n_leaves)
+    cfg = AveragingConfig(mode="gossip", rounds=R)
+    mix = averaging.make_gossip_mix(cfg, N)
+    per_leaf_cfg = dataclasses.replace(cfg, packed=False)
+    per_leaf = jax.jit(lambda t: averaging.gossip_average(t, N, per_leaf_cfg, mix))
+    packed = jax.jit(lambda t: averaging.gossip_average(t, N, cfg, mix))
+    a, b = per_leaf(tree), packed(tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=1e-5, atol=1e-5)
+    t_leaf = _tmin(per_leaf, tree)
+    t_packed = _tmin(packed, tree)
+    emit(f"consensus/packed/N{N}_R{R}_leaves{n_leaves}", t_packed,
+         f"per_leaf_us={t_leaf:.1f};speedup={t_leaf / t_packed:.2f}x")
+
+
+def _quantized(N: int, R: int, n_leaves: int, quant: str,
+               assert_contract: bool) -> None:
+    """Quantized gossip: the pre-PR per-leaf per-round loop (global stats)
+    vs the packed flat buffer through segment stats and the fused tile path."""
+    tree = _leafy_tree(N, n_leaves)
+    base_cfg = AveragingConfig(mode="gossip", rounds=R, quantization=quant,
+                               packed=False)
+    base_mix = averaging.make_gossip_mix(base_cfg, N)
+    base = jax.jit(lambda t: averaging.gossip_average(t, N, base_cfg, base_mix))
+    t_base = _tmin(base, tree)
+    for stats in ("segment", "tile"):
+        cfg = AveragingConfig(mode="gossip", rounds=R, quantization=quant,
+                              quant_stats=stats)
+        mix = averaging.make_gossip_mix(cfg, N)
+        fused = jax.jit(lambda t: averaging.gossip_average(t, N, cfg, mix))
+        t_fused = _tmin(fused, tree)
+        speedup = t_base / t_fused
+        emit(f"consensus/quantized/{quant}/{stats}/N{N}_R{R}_leaves{n_leaves}",
+             t_fused, f"per_leaf_loop_us={t_base:.1f};speedup={speedup:.2f}x")
+        if assert_contract and stats == "tile":
+            # the PR 3 acceptance contract: packed + fused tile kernel >=5x
+            # over the per-leaf per-round baseline on a many-leaf pytree
+            assert speedup >= 5.0, (quant, N, R, n_leaves, speedup)
+
+
+# ---------------------------------------------------------------------------
+# Accuracy study: global vs tile compressor statistics (Section VI semantics)
+# ---------------------------------------------------------------------------
+
+
+def _quant_accuracy(steps: int, block_d: int) -> None:
+    """Decentralized logistic regression (paper Fig. 9 generator, d=20) with
+    quantized ring gossip: identical streams/init, compressor statistics as
+    the only variable. Emits final excess risk and consensus error per
+    config; `stats="global"` is the paper-faithful oracle, `stats="tile"` is
+    the fused-kernel semantics at tile width `block_d` (< d+1, so the scale
+    really is per-tile)."""
+    N, B, R = 16, 64, 2
+    stream = make_logreg_stream(FIG9)
+    d = FIG9.dim + 1
+    w0 = jnp.zeros((N, d))
+    key_eval = jax.random.PRNGKey(99)
+    x_eval, y_eval = stream.draw(key_eval, 20_000)
+    risk_star = float(problems.logistic_loss(stream.w_star, x_eval, y_eval))
+
+    def run(cfg: AveragingConfig):
+        mix = averaging.make_gossip_mix(cfg, N)
+
+        def step(carry, t):
+            w, key = carry
+            key, kd = jax.random.split(key)
+            x, y = stream.draw(kd, B)
+            xs = x.reshape(N, B // N, -1)
+            ys = y.reshape(N, B // N)
+            g = jax.vmap(lambda wn, xn, yn: problems.logistic_grad(wn, xn, yn))(
+                w, xs, ys)
+            h = mix(g)
+            w = w - (0.5 / jnp.sqrt(t)) * h
+            return (w, key), None
+
+        (w, _), _ = jax.lax.scan(step, (w0, jax.random.PRNGKey(7)),
+                                 jnp.arange(1., steps + 1.))
+        risk = float(problems.logistic_loss(jnp.mean(w, 0), x_eval, y_eval))
+        cerr = float(averaging.consensus_error({"w": w}))
+        return risk - risk_star, cerr
+
+    base, cerr0 = run(AveragingConfig(mode="gossip", rounds=R))
+    emit(f"consensus/quant_accuracy/none/global/steps{steps}", 0.0,
+         f"excess_risk={base:.5f};consensus_err={cerr0:.4f}")
+    for quant in ("sign", "int8", "int8_stoch"):
+        for stats in ("global", "tile"):
+            if quant == "int8_stoch" and stats == "global":
+                continue  # the keyed global path mirrors int8's numerics
+            cfg = AveragingConfig(mode="gossip", rounds=R, quantization=quant,
+                                  quant_stats=stats, quant_block_d=block_d)
+            risk, cerr = run(cfg)
+            emit(f"consensus/quant_accuracy/{quant}/{stats}/steps{steps}", 0.0,
+                 f"excess_risk={risk:.5f};consensus_err={cerr:.4f}")
+
+
 def run(quick: bool = False) -> None:
     global D
     if quick:  # dispatch-dominated at smoke scale: keep timings, drop contracts
@@ -61,9 +196,18 @@ def run(quick: bool = False) -> None:
         try:
             _dense(8, 4)
             _circulant(8, 4, "ring")
+            _packed(4, 2, 24)
+            _quantized(4, 2, 24, "sign", assert_contract=False)
+            _quant_accuracy(steps=30, block_d=8)
         finally:
             D = D_full
         return
+    # packed + quantized first: their contract rows are timing-sensitive and
+    # the dense/circulant suites churn hundreds of MB through the allocator
+    _packed(4, 6, 256)
+    for quant in ("sign", "int8"):
+        _quantized(4, 8, 256, quant, assert_contract=True)
+    _quant_accuracy(steps=400, block_d=8)
     for N, R in ((16, 8), (16, 16), (64, 8)):
         _dense(N, R)
     for N, R in ((16, 8), (16, 16), (64, 8)):

@@ -222,7 +222,17 @@ class AveragingConfig:
     rounds: int = 1  # R
     topology: str = "ring"  # ring | torus | circulant2 (deg-4 expander)
     self_weight: float = 0.0  # 0 -> uniform 1/(deg+1)
-    quantization: str = "none"  # none | sign | int8
+    quantization: str = "none"  # none | sign | int8 | int8_stoch
+    # pack the gradient pytree into one flat [N, D] buffer per dtype so the
+    # mixing operator runs once per step instead of once per leaf
+    # (core.packing); per-leaf fallback when off. Quantized stats="global"
+    # always takes the per-leaf oracle path (bit-identity contract).
+    packed: bool = True
+    # quantizer statistic granularity: global (exact per-round oracle) |
+    # segment (per-leaf scales on the packed buffer) | tile (fused kernel,
+    # per-[N, quant_block_d]-tile scales computed in-register)
+    quant_stats: str = "global"
+    quant_block_d: int = 512
 
 
 @dataclass(frozen=True)

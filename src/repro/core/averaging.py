@@ -15,18 +15,28 @@ pure array programs whose collectives are visible in the lowered HLO:
                   (each intra-pod lane gossips one chunk of the pod mean over
                   DCN, then the pod all-gathers; TPU adaptation)
 
+With `AveragingConfig.packed` (the default) the gossip and hierarchical modes
+flatten the gradient pytree into one contiguous [N, D] buffer per dtype
+(`core.packing`) so the mixing operator — and the consensus-error diagnostic —
+runs ONCE per step instead of once per leaf; a transformer tree with hundreds
+of leaves stops paying hundreds of independent roll/compress chains.
+
 Optional message quantization (Section VI) compresses each round's messages;
-quantized configs keep the exact per-round loop (the compressor is nonlinear,
-so the operator must not be collapsed).
+quantized configs keep the per-round loop (the compressor is nonlinear, so the
+operator must not be collapsed). `AveragingConfig.quant_stats` picks the
+statistic granularity: "global" pins today's exact per-leaf oracle semantics
+(bit-identical, never packed), "segment" reproduces per-leaf scales on the
+packed buffer in one pass, "tile" takes the fused quantized kernel.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AveragingConfig
+from repro.core import packing
 from repro.core.mixing import CirculantMixOp, circulant_mix_op, schedule
 
 Tree = Any
@@ -47,20 +57,61 @@ def make_gossip_mix(cfg: AveragingConfig, n_nodes: int, *,
     sched = schedule(cfg.topology, n_nodes, cfg.self_weight)
     return circulant_mix_op(sched, n_nodes, cfg.rounds,
                             quantization=cfg.quantization, impl=impl,
-                            mesh=mesh)
+                            mesh=mesh, stats=cfg.quant_stats,
+                            block_d=cfg.quant_block_d)
+
+
+def _packable(mix: CirculantMixOp) -> bool:
+    """Quantized global-stats configs pin per-leaf statistics (the bit-identity
+    oracle), so they keep the per-leaf dispatch; everything else packs."""
+    return not (mix.quantization != "none" and mix.stats == "global")
+
+
+def _apply_mix(mix: CirculantMixOp, spec: packing.PackSpec, g: int,
+               buf: jax.Array) -> jax.Array:
+    if mix.quantization != "none" and mix.stats == "segment":
+        widths = tuple(spec.leaf_width(i) for i in spec.groups[g])
+        return mix(buf, seg_widths=widths)
+    return mix(buf)
 
 
 def gossip_average(tree: Tree, n_nodes: int, cfg: AveragingConfig,
                    mix: Optional[CirculantMixOp] = None) -> Tree:
-    """R rounds of doubly-stochastic consensus over the leading node axis."""
+    """R rounds of doubly-stochastic consensus over the leading node axis —
+    one packed pass per dtype group by default, per-leaf when `cfg.packed`
+    is off or the quantized global-stats oracle is selected."""
     if mix is None:
         mix = make_gossip_mix(cfg, n_nodes)
-    return jax.tree.map(mix, tree)
+    if not (cfg.packed and _packable(mix)):
+        return jax.tree.map(mix, tree)
+    bufs, spec = packing.pack_tree(tree)
+    outs = tuple(_apply_mix(mix, spec, g, b) for g, b in enumerate(bufs))
+    return packing.unpack_tree(outs, spec)
 
 
 def exact_average(tree: Tree) -> Tree:
     return jax.tree.map(lambda g: jnp.broadcast_to(
         jnp.mean(g, axis=0, keepdims=True), g.shape), tree)
+
+
+def _hmix_buffer(g: jax.Array, pods: int, per_pod: int,
+                 mix: CirculantMixOp) -> jax.Array:
+    """Reduce-scatter hierarchical consensus on one [N, ...] buffer/leaf."""
+    shp = g.shape
+    flat = g.reshape(pods, per_pod, -1)  # [P, M, F]
+    pod_mean = jnp.mean(flat, axis=1)  # reduce ...
+    f = pod_mean.shape[-1]
+    chunk = -(-f // per_pod)
+    pad = chunk * per_pod - f
+    if pad:
+        pod_mean = jnp.pad(pod_mean, ((0, 0), (0, pad)))
+    scattered = pod_mean.reshape(pods, per_pod, chunk)  # ... scatter
+    # cross-pod gossip, one chunk per lane; pad columns sit at the tail of
+    # the flattened layout and are masked out of compressor statistics
+    mixed = mix(scattered, valid_d=f if pad else None)
+    gathered = mixed.reshape(pods, 1, chunk * per_pod)[..., :f]  # all-gather
+    g = jnp.broadcast_to(gathered, (pods, per_pod, f))
+    return g.reshape(shp)
 
 
 def hierarchical_average(tree: Tree, pods: int, per_pod: int,
@@ -77,29 +128,23 @@ def hierarchical_average(tree: Tree, pods: int, per_pod: int,
     intra-pod all-gather reassembles the mixed mean — halving-or-better the
     serialized cross-pod traffic relative to the broadcast form. The result is
     numerically the same consensus (the mix is applied chunkwise over the pod
-    axis); feature dims are zero-padded up to a multiple of per_pod, which for
-    quantized configs slightly perturbs global compressor statistics relative
-    to the unpadded broadcast form (wire-format modeling, Section VI).
+    axis). Feature dims are zero-padded up to a multiple of per_pod; the pad
+    columns are masked out of quantized compressor statistics, so the padded
+    reduce-scatter form matches the unpadded broadcast form (Section VI wire
+    format) instead of perturbing it. Quantized segment statistics do not
+    survive the chunk-scatter relayout; they degrade to global (masked)
+    statistics over the scattered pod means here.
     """
     if mix is None:
         mix = make_gossip_mix(cfg, pods)
 
     def hmix(g):
-        shp = g.shape
-        flat = g.reshape(pods, per_pod, -1)  # [P, M, F]
-        pod_mean = jnp.mean(flat, axis=1)  # reduce ...
-        f = pod_mean.shape[-1]
-        chunk = -(-f // per_pod)
-        pad = chunk * per_pod - f
-        if pad:
-            pod_mean = jnp.pad(pod_mean, ((0, 0), (0, pad)))
-        scattered = pod_mean.reshape(pods, per_pod, chunk)  # ... scatter
-        mixed = mix(scattered)  # cross-pod gossip, one chunk per lane
-        gathered = mixed.reshape(pods, 1, chunk * per_pod)[..., :f]  # all-gather
-        g = jnp.broadcast_to(gathered, (pods, per_pod, f))
-        return g.reshape(shp)
+        return _hmix_buffer(g, pods, per_pod, mix)
 
-    return jax.tree.map(hmix, tree)
+    if not (cfg.packed and _packable(mix)):
+        return jax.tree.map(hmix, tree)
+    bufs, spec = packing.pack_tree(tree)
+    return packing.unpack_tree(tuple(hmix(b) for b in bufs), spec)
 
 
 def average_gradients(tree: Tree, cfg: AveragingConfig, *, n_nodes: int,
@@ -119,10 +164,69 @@ def average_gradients(tree: Tree, cfg: AveragingConfig, *, n_nodes: int,
     raise ValueError(f"unknown averaging mode {cfg.mode!r}")
 
 
+def average_and_error(tree: Tree, cfg: AveragingConfig, *, n_nodes: int,
+                      pods: int = 1, mix: Optional[CirculantMixOp] = None
+                      ) -> Tuple[Tree, jax.Array]:
+    """Averaging plus the epsilon-consensus diagnostic with ONE pack: the
+    mixed packed buffers feed both the unpack and the fused error reduction,
+    so the trainer stops paying a second per-leaf (or re-pack) sweep."""
+    if cfg.mode == "exact":
+        mixed = exact_average(tree)
+        return mixed, consensus_error(mixed)
+    if cfg.mode not in ("gossip", "hierarchical"):
+        raise ValueError(f"unknown averaging mode {cfg.mode!r}")
+    if mix is None:
+        mix = make_gossip_mix(cfg, pods if cfg.mode == "hierarchical"
+                              else n_nodes)
+    if not (cfg.packed and _packable(mix)):
+        mixed = average_gradients(tree, cfg, n_nodes=n_nodes, pods=pods,
+                                  mix=mix)
+        return mixed, consensus_error(mixed)
+    bufs, spec = packing.pack_tree(tree)
+    if cfg.mode == "gossip":
+        outs = tuple(_apply_mix(mix, spec, g, b) for g, b in enumerate(bufs))
+    else:
+        assert n_nodes % pods == 0
+        outs = tuple(_hmix_buffer(b, pods, n_nodes // pods, mix) for b in bufs)
+    err = _packed_consensus_error(outs, spec)
+    return packing.unpack_tree(outs, spec), err
+
+
+def _packed_consensus_error(bufs: Tuple[jax.Array, ...],
+                            spec: packing.PackSpec) -> jax.Array:
+    """max_leaf max_n ||v_n - v_bar|| / ||v_bar|| on the packed buffers: the
+    squared deviations are computed in one pass over [N, D] and summed per
+    leaf segment by `packing.segment_sums` (static contiguous slices — exact,
+    scatter-free, sharding-friendly), so a hundred-leaf tree stops paying a
+    hundred independent norm chains."""
+    errs = []
+    for g, buf in enumerate(bufs):
+        if buf.shape[-1] == 0:
+            continue
+        widths = [spec.leaf_width(i) for i in spec.groups[g]]
+        b = buf.astype(jnp.float32)
+        bar = jnp.mean(b, axis=0, keepdims=True)
+        d2 = packing.segment_sums((b - bar) ** 2, widths)  # [N, S]
+        num = jnp.max(jnp.sqrt(d2), axis=0)  # [S]
+        den = jnp.sqrt(packing.segment_sums(bar[0] ** 2, widths)) + 1e-30
+        errs.append(jnp.max(num / den))
+    return jnp.max(jnp.stack(errs)) if errs else jnp.zeros(())
+
+
 def consensus_error(tree: Tree) -> jax.Array:
     """max_n ||v_n - v_bar|| / ||v_bar|| across the pytree — the paper's
-    epsilon-accuracy diagnostic for inexact averaging."""
+    epsilon-accuracy diagnostic for inexact averaging. Computed on the packed
+    flat buffer (single fused reduction; `consensus_error_per_leaf` is the
+    per-leaf oracle)."""
+    bufs, spec = packing.pack_tree(tree)
+    return _packed_consensus_error(bufs, spec)
+
+
+def consensus_error_per_leaf(tree: Tree) -> jax.Array:
+    """Per-leaf oracle form of `consensus_error` (one reduction chain per
+    leaf) — kept for verification of the packed reduction."""
     def err(g):
+        g = g.astype(jnp.float32)
         bar = jnp.mean(g, axis=0, keepdims=True)
         num = jnp.max(jnp.sqrt(jnp.sum((g - bar) ** 2, axis=tuple(range(1, g.ndim)))))
         den = jnp.sqrt(jnp.sum(bar**2)) + 1e-30

@@ -8,18 +8,26 @@ per round at the splitter (steps 9-11).
 
 The whole run is a single `lax.scan`; samples are drawn statelessly per round so
 arbitrarily long streams never materialize.
+
+`w0` may be a pytree: it is packed ONCE into a flat buffer (`core.packing`)
+outside the scan, so the update / projection / Polyak-average arithmetic runs
+as single fused elementwise ops on one contiguous vector instead of one chain
+per leaf; `grad_fn`, `project`, and `trace_metric` still see (and return) the
+original tree structure, and the result is unpacked back to it.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
+
 
 class DMBResult(NamedTuple):
-    w: jax.Array
-    w_av: jax.Array  # Polyak-Ruppert average (eq. 7, stepsize-weighted)
+    w: Any
+    w_av: Any  # Polyak-Ruppert average (eq. 7, stepsize-weighted)
     trace_t_prime: jax.Array  # samples *arrived* (consumed + discarded)
     trace_metric: jax.Array
 
@@ -39,6 +47,22 @@ def run_dmb(
     seed: int = 0,
 ) -> DMBResult:
     assert B % N == 0, "B must split evenly across N nodes (Section II-B)"
+    leaves = jax.tree.leaves(w0)
+    is_tree = len(leaves) != 1 or leaves[0] is not w0
+    if is_tree:
+        # pack the parameter pytree once, outside the scan; user callables
+        # keep the tree view via unpack/repack shims at the trace boundary
+        bufs, spec = packing.pack_tree(w0, lead=0)
+        assert len(bufs) == 1, "pytree w0 must share a single dtype"
+        unpack = lambda b: packing.unpack_tree((b,), spec)
+        repack = lambda t: packing.pack_tree(t, spec)[0][0]
+        user_grad, user_proj, user_metric = grad_fn, project, trace_metric
+        grad_fn = lambda w, *z: repack(user_grad(unpack(w), *z))
+        project = ((lambda w: repack(user_proj(unpack(w))))
+                   if user_proj is not None else None)
+        trace_metric = ((lambda w: user_metric(unpack(w)))
+                        if user_metric is not None else None)
+        w0 = bufs[0]
     proj = project or (lambda w: w)
     metric = trace_metric or (lambda w: jnp.zeros(()))
 
@@ -62,4 +86,6 @@ def run_dmb(
     (w, w_av, _, _), metrics = jax.lax.scan(round_fn, init,
                                             jnp.arange(1, steps + 1))
     t_prime = jnp.arange(1, steps + 1) * (B + mu)
+    if is_tree:
+        return DMBResult(unpack(w), unpack(w_av), t_prime, metrics)
     return DMBResult(w, w_av, t_prime, metrics)

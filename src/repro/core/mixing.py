@@ -14,8 +14,20 @@ Two representations:
 linear when no message compression is applied, it can be precomputed ONCE
 outside the training scan — `A_R = A^R` for dense matrices, the R-fold
 convolution of the shift schedule for circulants — and applied as a single
-matmul / weighted-shift pass per step. Quantized configs are nonlinear
-per-round, so they keep the exact per-round loop (bit-identical semantics).
+matmul / weighted-shift pass per step.
+
+Quantized configs are nonlinear per-round, so the operator is never collapsed;
+what IS tunable is the compressor's statistic granularity (`stats`):
+
+* "global"  — whole-array scales, the exact per-round loop shipped since PR 1
+              (bit-identical oracle semantics).
+* "segment" — per-leaf-segment scales on a packed flat buffer
+              (`core.packing`): the per-leaf path's statistics, paid once per
+              buffer instead of once per leaf.
+* "tile"    — per-[n, block_d]-tile scales, fused in-register by the Pallas
+              kernel (`kernels.consensus.gossip_mix_quant_pallas`): quantized
+              gossip drops from (deg+1)*R HBM passes to one read+write per
+              buffer. Accuracy study: `benchmarks/bench_consensus.py`.
 """
 from __future__ import annotations
 
@@ -26,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantize import COMPRESSORS
+from repro.core.quantize import COMPRESSORS, STOCHASTIC, make_compressor
 
 Schedule = Tuple[Tuple[int, float], ...]  # ((shift, weight), ...) includes shift 0
 
@@ -270,9 +282,14 @@ class CirculantMixOp:
                  literal impl="auto" (bypassing the factory) falls back to
                  "roll" at call time — always safe.
 
-    Quantization on: the compressor is nonlinear, so operator collapsing would
-    change semantics; the exact per-round `roll_mix` loop is preserved
-    bit-identically.
+    Quantization on: the compressor is nonlinear, so the operator is never
+    collapsed. `stats` picks the statistic granularity: "global" keeps the
+    exact per-round `roll_mix` loop bit-identically (the oracle); "segment"
+    runs the per-round loop on a packed buffer with per-leaf-segment scales
+    (pass the static `seg_widths` at call time); "tile" executes the fused
+    quantized path — the Pallas kernel on TPU (one HBM read+write per buffer,
+    all R rounds and the per-tile scales in-register), the single-dispatch XLA
+    tile chain elsewhere.
     """
 
     sched: Schedule  # one-round schedule (per-round / kernel path)
@@ -283,16 +300,21 @@ class CirculantMixOp:
     rounds: int
     quantization: str = "none"
     impl: str = "auto"
+    stats: str = "global"  # quantizer statistics: global | segment | tile
+    block_d: int = 512  # tile width for stats="tile"
+    seed: int = 0  # threefry base for stochastic compressors
 
-    def __call__(self, x: jax.Array) -> jax.Array:
+    def __call__(self, x: jax.Array, *, seg_widths: Optional[Tuple[int, ...]] = None,
+                 valid_d: Optional[int] = None) -> jax.Array:
         assert x.shape[0] == self.n, (
             f"MixOp built for n={self.n} applied to node axis {x.shape[0]}")
         if self.rounds == 0 or self.n == 1:
             return x
-        if self.fused_sched is None:  # quantized: exact per-round semantics
-            compress = COMPRESSORS[self.quantization]
+        if self.quantization != "none":
+            return self._quantized(x, seg_widths, valid_d)
+        if self.fused_sched is None:  # fuse=False: per-round oracle loop
             for _ in range(self.rounds):
-                x = roll_mix(x, self.sched, compress)
+                x = roll_mix(x, self.sched, _identity)
             return x
         impl = "roll" if self.impl == "auto" else self.impl
         if impl == "kernel":
@@ -308,14 +330,52 @@ class CirculantMixOp:
             raise ValueError(f"unknown MixOp impl {self.impl!r}")
         return roll_mix(x, self.fused_sched, _identity)
 
+    def _quantized(self, x, seg_widths, valid_d):
+        """Per-round nonlinear consensus. `valid_d` marks trailing flattened
+        columns as padding (masked out of compressor statistics — they must be
+        zero on input); stochastic compressors fold the round index into the
+        threefry key (messages within a round share it)."""
+        key0 = (jax.random.PRNGKey(self.seed)
+                if self.quantization in STOCHASTIC else None)
+        if self.stats == "tile":
+            from repro.kernels.ops import quant_gossip_mix
+            return quant_gossip_mix(x, self.sched, self.rounds,
+                                    self.quantization, block_d=self.block_d,
+                                    valid_d=valid_d, key=key0)
+        if self.stats == "segment" and seg_widths is not None:
+            # compress-once-broadcast: segment scales are invariant under the
+            # node-axis roll (it permutes rows, the stats reduce over them),
+            # so each round quantizes the buffer ONCE and rolls the compressed
+            # copy — (1 compress + deg rolls) per round instead of deg
+            # compress chains
+            for r in range(self.rounds):
+                key = jax.random.fold_in(key0, r) if key0 is not None else None
+                q = make_compressor(self.quantization, key=key,
+                                    seg_widths=seg_widths)(x)
+                out = None
+                for shift, w in self.sched:
+                    term = w * (x if shift == 0 else jnp.roll(q, shift, axis=0))
+                    out = term if out is None else out + term
+                x = out
+            return x
+        mask = None
+        trailing = int(np.prod(x.shape[1:])) if x.ndim > 1 else 1
+        if valid_d is not None and valid_d < trailing:
+            mask = (jnp.arange(trailing) < valid_d).reshape(x.shape[1:])
+        for r in range(self.rounds):
+            key = jax.random.fold_in(key0, r) if key0 is not None else None
+            compress = make_compressor(self.quantization, key=key, mask=mask)
+            x = roll_mix(x, self.sched, compress)
+        return x
+
     def tree_flatten(self):
         return (self.A_eff,), (self.sched, self.fused_sched, self.n,
-                               self.rounds, self.quantization, self.impl)
+                               self.rounds, self.quantization, self.impl,
+                               self.stats, self.block_d, self.seed)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        sched, fused_sched, n, rounds, quantization, impl = aux
-        return cls(sched, fused_sched, children[0], n, rounds, quantization, impl)
+        return cls(aux[0], aux[1], children[0], *aux[2:])
 
 
 def resolve_auto_impl(mesh: Any = None) -> str:
@@ -351,13 +411,17 @@ def resolve_auto_impl(mesh: Any = None) -> str:
 def circulant_mix_op(sched: Schedule, n: int, rounds: int, *,
                      quantization: str = "none",
                      impl: str = "auto", fuse: bool = True,
-                     mesh: Any = None) -> CirculantMixOp:
+                     mesh: Any = None, stats: str = "global",
+                     block_d: int = 512, seed: int = 0) -> CirculantMixOp:
     """Build the circulant-path MixOp from a one-round schedule.
 
     The R-round operator is precomputed here, once, so constructing the op
     outside `jax.lax.scan` / `jit` keeps the per-step cost at ~one round.
     `fuse=False` keeps the per-round loop (oracle / baseline), as does any
-    quantized config (nonlinear compressor — collapsing would change it).
+    quantized config (nonlinear compressor — collapsing would change it);
+    quantized configs instead pick their statistic granularity via `stats`
+    ("global" oracle loop / "segment" packed loop / "tile" fused kernel,
+    tile width `block_d`).
 
     `impl="auto"` resolves at build time via `resolve_auto_impl(mesh)`:
     "matmul" (CPU/GPU) or the Pallas "kernel" (TPU) on unsharded
@@ -365,14 +429,20 @@ def circulant_mix_op(sched: Schedule, n: int, rounds: int, *,
     sharded."""
     if impl not in ("auto", "roll", "matmul", "kernel"):
         raise ValueError(f"unknown MixOp impl {impl!r}")
+    if stats not in ("global", "segment", "tile"):
+        raise ValueError(f"unknown quantizer stats mode {stats!r}")
+    if quantization not in COMPRESSORS:
+        raise ValueError(f"unknown quantization {quantization!r}")
     if impl == "auto":
         impl = resolve_auto_impl(mesh)
     if quantization != "none" or not fuse:
-        return CirculantMixOp(sched, None, None, n, rounds, quantization, impl)
+        return CirculantMixOp(sched, None, None, n, rounds, quantization, impl,
+                              stats, block_d, seed)
     fused = compose_schedule(sched, rounds, n) if rounds > 0 else ((0, 1.0),)
     # the dense [n, n] operator is only needed by the matmul impl; the others
     # skip the O(n^2) build and the device pin. Kept as host numpy — it
     # crosses to device as a jit constant on first use.
     A_eff = (np.asarray(schedule_matrix(fused, n), np.float32)
              if impl == "matmul" else None)
-    return CirculantMixOp(sched, fused, A_eff, n, rounds, quantization, impl)
+    return CirculantMixOp(sched, fused, A_eff, n, rounds, quantization, impl,
+                          stats, block_d, seed)

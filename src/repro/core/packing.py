@@ -1,0 +1,143 @@
+"""Flat-buffer packing of gradient pytrees for the consensus hot path.
+
+A transformer gradient tree has hundreds of leaves; applying the consensus
+engine through `jax.tree.map` issues hundreds of independent roll/compress
+chains per step — the per-leaf dispatch tax the paper's communication-cost
+analysis (Section VI) says the quantized regime can least afford. Packing
+flattens the tree ONCE into contiguous ``[*lead, D]`` buffers (one per dtype,
+so packing is dtype-preserving) with a static leaf-segment map, so every
+averaging mode runs its mixing operator once per step on one buffer, and
+per-leaf reductions (consensus error, per-leaf compressor statistics) become
+single segment-reduced passes over the buffer.
+
+The segment map is host-side / static: column ``j`` of group ``g``'s buffer
+belongs to leaf ``spec.groups[g][spec.segment_ids(g)[j]]``. Leading axes (the
+trainer's node axis; none for the DMB parameter vector) are preserved, so a
+`PackSpec` built from the parameter tree repacks gradient trees of any node
+count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Static description of a packed pytree.
+
+    treedef:   the pytree structure (for unflattening).
+    trailing:  per-leaf shape AFTER the shared leading axes, in leaf order.
+    dtypes:    per-leaf dtype name, in leaf order.
+    lead:      number of shared leading axes preserved by packing (0 or more).
+    groups:    per-buffer tuple of leaf indices; one buffer per distinct dtype,
+               leaves in first-appearance order, so single-dtype trees (the
+               common gradient case) pack into exactly one ``[*lead, D]``
+               buffer.
+    """
+
+    treedef: Any
+    trailing: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    lead: int
+    groups: Tuple[Tuple[int, ...], ...]
+
+    def leaf_width(self, i: int) -> int:
+        return int(np.prod(self.trailing[i], dtype=np.int64)) if self.trailing[i] else 1
+
+    def group_width(self, g: int) -> int:
+        return sum(self.leaf_width(i) for i in self.groups[g])
+
+    def segment_ids(self, g: int) -> np.ndarray:
+        """int32 [D_g]: position-within-group of the leaf owning each column."""
+        widths = [self.leaf_width(i) for i in self.groups[g]]
+        return np.repeat(np.arange(len(widths)), widths).astype(np.int32)
+
+
+def pack_spec(tree: Tree, *, lead: int = 1) -> PackSpec:
+    """Build the static segment map for `tree`. All leaves must share their
+    first `lead` axis sizes (the trainer's node axis)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    trailing, dtypes = [], []
+    lead_shape = None
+    for x in leaves:
+        if x.ndim < lead:
+            raise ValueError(f"leaf rank {x.ndim} < lead={lead}")
+        if lead_shape is None:
+            lead_shape = x.shape[:lead]
+        elif x.shape[:lead] != lead_shape:
+            raise ValueError(
+                f"leaves disagree on leading axes: {x.shape[:lead]} vs {lead_shape}")
+        trailing.append(tuple(x.shape[lead:]))
+        dtypes.append(jnp.dtype(x.dtype).name)
+    groups: dict = {}
+    for i, dt in enumerate(dtypes):
+        groups.setdefault(dt, []).append(i)
+    return PackSpec(treedef, tuple(trailing), tuple(dtypes), lead,
+                    tuple(tuple(g) for g in groups.values()))
+
+
+def pack_tree(tree: Tree, spec: Optional[PackSpec] = None, *,
+              lead: int = 1) -> Tuple[Tuple[jax.Array, ...], PackSpec]:
+    """Flatten `tree` into one contiguous ``[*lead, D]`` buffer per dtype.
+
+    Returns ``(buffers, spec)``. Pass a previously built `spec` to reuse its
+    (static) segment map — the tree must match its structure and trailing
+    shapes; leading axis sizes may differ (params vs grads, emulated N)."""
+    if spec is None:
+        spec = pack_spec(tree, lead=lead)
+    leaves = jax.tree.leaves(tree)
+    if len(leaves) != len(spec.trailing):
+        raise ValueError("tree does not match PackSpec leaf count")
+    bufs = []
+    for group in spec.groups:
+        parts = []
+        for i in group:
+            x = leaves[i]
+            if tuple(x.shape[spec.lead:]) != spec.trailing[i]:
+                raise ValueError(
+                    f"leaf {i} trailing shape {x.shape[spec.lead:]} != "
+                    f"spec {spec.trailing[i]}")
+            parts.append(x.reshape(*x.shape[:spec.lead], -1))
+        bufs.append(parts[0] if len(parts) == 1 else
+                    jnp.concatenate(parts, axis=-1))
+    return tuple(bufs), spec
+
+
+def segment_sums(v: jax.Array, widths) -> jax.Array:
+    """Exact per-segment sums over the last axis of `v` for contiguous
+    segments of static `widths`: one static slice + contiguous reduce per
+    segment, stacked to [..., S].
+
+    Deliberately NOT the cumsum-at-boundaries trick: differences of a float32
+    running sum over a transformer-scale buffer catastrophically cancel, which
+    zeroes (or sign-flips) the statistics of small segments that sit after
+    large ones. The static split keeps every partial sum at segment scale."""
+    widths = np.asarray(widths, np.int64)
+    if widths.size == 0:
+        return jnp.zeros(v.shape[:-1] + (0,), v.dtype)
+    bounds = np.cumsum(widths)[:-1]
+    parts = jnp.split(v, list(bounds), axis=-1)
+    return jnp.stack(
+        [p.sum(-1) if p.shape[-1] else jnp.zeros(v.shape[:-1], v.dtype)
+         for p in parts], axis=-1)
+
+
+def unpack_tree(bufs: Tuple[jax.Array, ...], spec: PackSpec) -> Tree:
+    """Inverse of `pack_tree`: split each buffer at the (static) segment
+    boundaries and restore every leaf's shape and position."""
+    leaves: list = [None] * len(spec.trailing)
+    for g, buf in enumerate(bufs):
+        off = 0
+        for i in spec.groups[g]:
+            w = spec.leaf_width(i)
+            piece = jax.lax.slice_in_dim(buf, off, off + w, axis=buf.ndim - 1)
+            leaves[i] = piece.reshape(*buf.shape[:-1], *spec.trailing[i])
+            off += w
+    return jax.tree.unflatten(spec.treedef, leaves)

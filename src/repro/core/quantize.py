@@ -1,25 +1,237 @@
 """Message compressors for consensus rounds (paper Section VI, "Message
-quantization" — signSGD [125] and int8 stochastic rounding). Beyond-paper
-feature; applied to gossip messages in `core.averaging`.
+quantization" — signSGD [125] and int8 rounding, deterministic and threefry-
+keyed stochastic). Beyond-paper feature; applied to gossip messages in
+`core.averaging` / `core.mixing`.
+
+Three statistics granularities, selected by `core.mixing.CirculantMixOp.stats`:
+
+* **global**  — one scale per message array (`sign_compress` / `int8_compress`
+  exactly as shipped since PR 1: the bit-identity oracle).
+* **segment** — one scale per leaf segment of a packed flat buffer
+  (`core.packing`): reproduces the per-leaf path's statistics on the single
+  packed buffer, so a hundred-leaf tree pays one compressor pass, not hundreds.
+* **tile**    — one scale per `[n, block_d]` column tile (`tile_compress`):
+  the statistics the fused Pallas kernel computes in-register
+  (`kernels.consensus.gossip_mix_quant_pallas`); this XLA form is its oracle
+  and the CPU execution path.
+
+All stat reductions accept an optional validity `mask` so zero-padded columns
+(hierarchical reduce-scatter padding, tile padding) never perturb the scales.
 """
 from __future__ import annotations
 
+from typing import Callable, Optional
+
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-12
+_DEFAULT_SEED = 0x5EED
 
 
-def sign_compress(x: jax.Array) -> jax.Array:
+def _abs_mean(x: jax.Array, mask) -> jax.Array:
+    if mask is None:
+        return jnp.mean(jnp.abs(x))
+    m = jnp.broadcast_to(mask, x.shape)
+    cnt = jnp.maximum(jnp.sum(m.astype(x.dtype)), 1)
+    return jnp.sum(jnp.where(m, jnp.abs(x), 0)) / cnt
+
+
+def _abs_max(x: jax.Array, mask) -> jax.Array:
+    if mask is None:
+        return jnp.max(jnp.abs(x))
+    return jnp.max(jnp.where(mask, jnp.abs(x), 0))
+
+
+def sign_compress(x: jax.Array, *, mask=None) -> jax.Array:
     """1-bit signSGD compressor with the scale-preserving mean-|x| factor."""
-    scale = jnp.mean(jnp.abs(x))
+    scale = _abs_mean(x, mask)
     return jnp.sign(x) * scale
 
 
-def int8_compress(x: jax.Array) -> jax.Array:
+def int8_compress(x: jax.Array, *, mask=None) -> jax.Array:
     """Deterministic symmetric int8 quantization (dequantized back to float —
     models the wire format's precision loss)."""
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    scale = jnp.maximum(_abs_max(x, mask), _EPS) / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127)
     return q * scale
 
 
-COMPRESSORS = {"none": lambda x: x, "sign": sign_compress, "int8": int8_compress}
+def int8_stoch_compress(x: jax.Array, *, key=None, mask=None) -> jax.Array:
+    """Unbiased symmetric int8: threefry-keyed stochastic rounding.
+    floor(v + u), u ~ U[0, 1) rounds v up with probability frac(v), so
+    E[dequant] = x (up to the clip). `key=None` uses a fixed module key —
+    deterministic per call site; the mixing loop folds the round index in."""
+    if key is None:
+        key = jax.random.PRNGKey(_DEFAULT_SEED)
+    scale = jnp.maximum(_abs_max(x, mask), _EPS) / 127.0
+    v = x.astype(jnp.float32) / scale.astype(jnp.float32)
+    u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    q = jnp.clip(jnp.floor(v + u), -127, 127)
+    return (q * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Segment statistics (packed flat buffers, `core.packing`)
+# ---------------------------------------------------------------------------
+
+
+def segment_scales(x: jax.Array, seg_widths, kind: str) -> jax.Array:
+    """Per-column scale vector [D] for a packed buffer x: [..., D] whose
+    trailing axis is the concatenation of contiguous leaf segments of (static)
+    widths `seg_widths`: each segment gets the statistic (`kind`: "mean_abs" |
+    "max_abs") it would get on the per-leaf path.
+
+    Contiguity is the whole trick: per-segment sums are differences of one
+    cumulative sum at static boundaries, and the broadcast back is a static
+    `repeat` — no scatter/gather `segment_sum`, which is the slow path on
+    CPU/TPU backends."""
+    from repro.core.packing import segment_sums
+
+    widths = np.asarray(seg_widths, np.int64)
+    d = int(widths.sum())
+    if x.shape[-1] != d:
+        raise ValueError(f"buffer width {x.shape[-1]} != sum(seg_widths)={d}")
+    bounds = np.cumsum(widths)[:-1]
+    a = jnp.abs(x).reshape(-1, d)
+    rows = a.shape[0]
+    # XLA CPU reduces a strided leading axis poorly; the row count is small
+    # (node axis), so collapse it via gemv (sum) / an unrolled maximum chain
+    # (max) before the cheap per-segment step (static contiguous slices —
+    # exact, unlike a float32 cumsum-difference, which cancels at scale)
+    if kind == "mean_abs":
+        col = jnp.ones((rows,), a.dtype) @ a  # [D], row-sum as gemv
+        per_seg = segment_sums(col, widths) / \
+            jnp.asarray(np.maximum(widths * rows, 1), col.dtype)
+    elif kind == "max_abs":
+        col = _row_max(a)  # [D]
+        parts = jnp.split(col, list(bounds))
+        per_seg = jnp.stack([jnp.max(p) if p.size else jnp.zeros((), col.dtype)
+                             for p in parts])
+    else:
+        raise ValueError(f"unknown statistic {kind!r}")
+    return jnp.repeat(per_seg, widths, total_repeat_length=d)  # [D]
+
+
+def _row_max(a: jax.Array) -> jax.Array:
+    """max over the (small, static) leading axis as an unrolled elementwise
+    chain — row-sequential access instead of XLA's column-strided reduce."""
+    m = a[0]
+    for i in range(1, a.shape[0]):
+        m = jnp.maximum(m, a[i])
+    return m
+
+
+def _segment_compress(x, name, seg_widths, *, key=None):
+    if name == "sign":
+        return jnp.sign(x) * segment_scales(x, seg_widths, "mean_abs")
+    s = jnp.maximum(segment_scales(x, seg_widths, "max_abs"), _EPS) / 127.0
+    if name == "int8":
+        return jnp.clip(jnp.round(x / s), -127, 127) * s
+    if name == "int8_stoch":
+        if key is None:
+            key = jax.random.PRNGKey(_DEFAULT_SEED)
+        v = x.astype(jnp.float32) / s.astype(jnp.float32)
+        u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+        return (jnp.clip(jnp.floor(v + u), -127, 127) * s).astype(x.dtype)
+    raise ValueError(f"unknown compressor {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Tile statistics (the fused kernel's in-register form; XLA oracle/CPU path)
+# ---------------------------------------------------------------------------
+
+
+def tile_valid_counts(d: int, block_d: int, valid_d: Optional[int] = None
+                      ) -> np.ndarray:
+    """Static per-tile count of valid columns for a [*, d] buffer tiled at
+    `block_d` with columns >= `valid_d` being pad."""
+    bd = min(block_d, d)
+    tiles = -(-d // bd)
+    dv = d if valid_d is None else valid_d
+    lo = np.arange(tiles) * bd
+    return np.clip(np.minimum(lo + bd, dv) - lo, 0, bd)
+
+
+def tile_compress(x: jax.Array, name: str, block_d: int, *,
+                  valid_d: Optional[int] = None, key=None) -> jax.Array:
+    """Quantize x: [n, D] with one scale per [n, block_d] column tile.
+
+    Matches `kernels.consensus.gossip_mix_quant_pallas` statistics: f32
+    computation, and the ragged tail / columns >= `valid_d` excluded from
+    every statistic. Pad columns are REQUIRED to be zero (both pad sources —
+    kernel tiling and the hierarchical reduce-scatter — zero-fill), which is
+    what lets the statistics use plain contiguous reductions with static
+    counts instead of runtime masks. Output dtype follows x."""
+    n, d = x.shape
+    bd = min(block_d, d)
+    tiles = -(-d // bd)
+    pad = tiles * bd - d
+    xf = x.astype(jnp.float32)
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad)))
+    xt = xf.reshape(n, tiles, bd)
+    a = jnp.abs(xt)
+    # reduce the contiguous lane axis FIRST, then the tiny remainder — XLA
+    # CPU reduces strided leading axes an order of magnitude slower
+    if name == "sign":
+        cnt = jnp.asarray(
+            np.maximum(tile_valid_counts(d, block_d, valid_d) * n, 1),
+            jnp.float32)
+        scale = a.sum(2).sum(0) / cnt  # [tiles]
+        out = jnp.sign(xt) * scale[None, :, None]
+    else:
+        amax = a.max(2).max(0)  # [tiles]
+        scale = jnp.maximum(amax, _EPS) / 127.0
+        v = xt / scale[None, :, None]
+        if name == "int8":
+            out = jnp.clip(jnp.round(v), -127, 127) * scale[None, :, None]
+        elif name == "int8_stoch":
+            if key is None:
+                key = jax.random.PRNGKey(_DEFAULT_SEED)
+            u = jax.random.uniform(key, v.shape, dtype=jnp.float32)
+            out = jnp.clip(jnp.floor(v + u), -127, 127) * scale[None, :, None]
+        else:
+            raise ValueError(f"unknown compressor {name!r}")
+    out = out.reshape(n, tiles * bd)
+    if pad:
+        out = out[:, :d]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Registry / factory
+# ---------------------------------------------------------------------------
+
+STOCHASTIC = ("int8_stoch",)
+
+COMPRESSORS = {
+    "none": lambda x: x,
+    "sign": sign_compress,
+    "int8": int8_compress,
+    "int8_stoch": int8_stoch_compress,
+}
+
+
+def make_compressor(name: str, *, key=None, mask=None, seg_widths=None
+                    ) -> Callable[[jax.Array], jax.Array]:
+    """Unary message compressor with the requested statistics.
+
+    With every keyword at its default this is exactly ``COMPRESSORS[name]`` —
+    the bit-identity contract of the `stats="global"` oracle path.
+    `seg_widths` (static per-segment widths of a packed buffer) switches to
+    per-leaf-segment statistics; `mask` excludes padded columns from the
+    global statistics; `key` feeds stochastic compressors (ignored by
+    deterministic ones)."""
+    if name == "none":
+        return lambda x: x
+    if name not in COMPRESSORS:
+        raise ValueError(f"unknown compressor {name!r}")
+    if seg_widths is not None:
+        return lambda x: _segment_compress(x, name, seg_widths, key=key)
+    if name == "sign":
+        return lambda x: sign_compress(x, mask=mask)
+    if name == "int8":
+        return lambda x: int8_compress(x, mask=mask)
+    return lambda x: int8_stoch_compress(x, key=key, mask=mask)

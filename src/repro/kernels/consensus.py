@@ -1,22 +1,31 @@
-"""Pallas TPU kernel: fused R-round gossip consensus (paper eq. 17).
+"""Pallas TPU kernels: fused R-round gossip consensus (paper eq. 17),
+unquantized and quantized.
 
 The reference device path applies R rounds of weighted circular shifts over the
 node axis; each round reads and writes the full [N, d] leaf, so one consensus
-step costs (deg+1)*R HBM passes. Since N (the node count) is small, this kernel
-tiles the [N, block_d] slab into VMEM once and runs ALL R rounds of
+step costs (deg+1)*R HBM passes. Since N (the node count) is small, these
+kernels tile the [N, block_d] slab into VMEM once and run ALL R rounds of
 shift/weight/accumulate in-register before writing back — one HBM read and one
-HBM write per leaf regardless of R. The shift schedule and R are static, so the
-round loop fully unrolls into VPU adds plus sublane rotations.
+HBM write per buffer regardless of R. The shift schedule and R are static, so
+the round loop fully unrolls into VPU adds plus sublane rotations.
 
-Message quantization (Section VI) is deliberately NOT fused here: the
-compressors are nonlinear with *global* (whole-leaf) statistics, so a tiled
-in-register pass would change their semantics. Quantized configs keep the exact
-per-round XLA loop (see `core.mixing.CirculantMixOp`).
+Message quantization (Section VI) is fused here too, with **per-tile**
+compressor statistics (`gossip_mix_quant_pallas`): each [n, block_d] tile
+computes its own scale (mean-|x| for sign, max-|x| for int8) in-register, so
+quantized gossip also costs one HBM read+write per buffer instead of
+(deg+1)*R passes. This changes the compressor's statistic granularity relative
+to the whole-array ("global") form — `core.mixing.CirculantMixOp(stats=...)`
+selects between the exact global-stats per-round oracle and this fused tile
+form; `benchmarks/bench_consensus.py` carries the accuracy study. Ragged and
+padded tails are masked out of every statistic (`valid_d`). The stochastic
+int8 compressor stays on the XLA tile path (`core.quantize.tile_compress`) —
+threefry keys, not in-kernel PRNG — so its randomness is identical on every
+backend.
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +71,81 @@ def gossip_mix_pallas(x: jax.Array, shifts: Tuple[int, ...],
     out = pl.pallas_call(
         functools.partial(_kernel, shifts=shifts, weights=weights,
                           rounds=rounds),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((n, block_d), lambda t: (0, t))],
+        out_specs=pl.BlockSpec((n, block_d), lambda t: (0, t)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
+        interpret=interpret,
+    )(flat)
+    if pad:
+        out = out[:, :d]
+    return out.reshape(orig_shape)
+
+
+def _quant_kernel(x_ref, o_ref, *, shifts: Tuple[int, ...],
+                  weights: Tuple[float, ...], rounds: int, quant: str,
+                  block_d: int, valid_d: int):
+    """All R quantized-gossip rounds on one resident [n, block_d] tile.
+
+    Compress-once-broadcast per round: the tile scale is invariant under the
+    node-axis roll (the roll permutes rows, the stat reduces over them), so
+    each round quantizes the resident tile ONCE in-register and accumulates
+    rolled copies of the compressed tile — the `stats="tile"` semantics
+    `core.quantize.tile_compress` oracles. Columns past `valid_d` (ragged
+    tail / caller padding) are zero on input, so they contribute nothing to
+    the sum/max statistics; only the mean's element count needs the mask.
+    """
+    t = pl.program_id(0)
+    h = x_ref[...].astype(jnp.float32)  # [n, block_d]
+    col = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1) + t * block_d
+    nvalid = jnp.maximum(
+        jnp.sum((col < valid_d).astype(jnp.float32)), 1.0)
+    for _ in range(rounds):
+        a = jnp.abs(h)
+        if quant == "sign":
+            q = jnp.sign(h) * (jnp.sum(a) / nvalid)
+        else:  # int8
+            scale = jnp.maximum(jnp.max(a), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(h / scale), -127, 127) * scale
+        acc = None
+        for s, w in zip(shifts, weights):
+            term = w * (h if s == 0 else pltpu.roll(q, s, 0))
+            acc = term if acc is None else acc + term
+        h = acc
+    o_ref[...] = h.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("shifts", "weights", "rounds", "quant",
+                                    "block_d", "valid_d", "interpret"))
+def gossip_mix_quant_pallas(x: jax.Array, shifts: Tuple[int, ...],
+                            weights: Tuple[float, ...], rounds: int,
+                            quant: str, *, block_d: int = 512,
+                            valid_d: int = -1,
+                            interpret: bool = True) -> jax.Array:
+    """R rounds of quantized gossip (tile-statistics compressors) in a single
+    HBM pass. quant: "sign" | "int8" (deterministic — the stochastic variant
+    stays on the XLA path). `valid_d`: flattened columns >= valid_d are pad
+    (must be zero) and are masked out of the compressor statistics; -1 means
+    all columns are valid."""
+    if quant not in ("sign", "int8"):
+        raise ValueError(f"fused quantized kernel supports sign/int8, "
+                         f"got {quant!r}")
+    n = x.shape[0]
+    shifts = tuple(int(s) % n for s in shifts)
+    orig_shape = x.shape
+    flat = x.reshape(n, -1)
+    d = flat.shape[1]
+    dv = d if valid_d < 0 else valid_d
+    block_d = min(block_d, d)
+    n_tiles = (d + block_d - 1) // block_d
+    pad = n_tiles * block_d - d
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    out = pl.pallas_call(
+        functools.partial(_quant_kernel, shifts=shifts, weights=weights,
+                          rounds=rounds, quant=quant, block_d=block_d,
+                          valid_d=dv),
         grid=(n_tiles,),
         in_specs=[pl.BlockSpec((n, block_d), lambda t: (0, t))],
         out_specs=pl.BlockSpec((n, block_d), lambda t: (0, t)),

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.consensus import gossip_mix_pallas
+from repro.kernels.consensus import gossip_mix_pallas, gossip_mix_quant_pallas
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.krasulina_update import krasulina_xi_pallas
 
@@ -23,14 +23,35 @@ def gossip_mix(x: jax.Array, sched, rounds: int, *,
                force_pallas: bool = False) -> jax.Array:
     """R rounds of circulant gossip consensus over axis 0 (eq. 17), fused into
     a single HBM pass on TPU. `sched`: ((shift, weight), ...) one-round
-    schedule. Unquantized path only — quantized gossip keeps the per-round
-    loop in `core.mixing.CirculantMixOp`."""
+    schedule. Unquantized path — quantized gossip goes through
+    `quant_gossip_mix` (tile stats) or the per-round loop in
+    `core.mixing.CirculantMixOp` (global-stats oracle)."""
     shifts = tuple(s for s, _ in sched)
     weights = tuple(w for _, w in sched)
     if _on_tpu() or force_pallas:
         return gossip_mix_pallas(x, shifts, weights, rounds,
                                  interpret=not _on_tpu())
     return ref.gossip_mix_ref(x, sched, rounds)
+
+
+def quant_gossip_mix(x: jax.Array, sched, rounds: int, quantization: str, *,
+                     block_d: int = 512, valid_d=None, key=None,
+                     force_pallas: bool = False) -> jax.Array:
+    """R rounds of QUANTIZED gossip with per-[n, block_d]-tile compressor
+    statistics (the `stats="tile"` fused path), one HBM read+write per buffer
+    on TPU. The stochastic int8 compressor and off-TPU callers take the
+    single-dispatch XLA tile chain (`ref.gossip_mix_quant_ref`) so threefry
+    randomness is backend-independent and CPU keeps XLA performance."""
+    fuse = (_on_tpu() or force_pallas) and quantization in ("sign", "int8")
+    if fuse:
+        shifts = tuple(s for s, _ in sched)
+        weights = tuple(w for _, w in sched)
+        return gossip_mix_quant_pallas(
+            x, shifts, weights, rounds, quantization, block_d=block_d,
+            valid_d=-1 if valid_d is None else valid_d,
+            interpret=not _on_tpu())
+    return ref.gossip_mix_quant_ref(x, sched, rounds, quantization,
+                                    block_d=block_d, valid_d=valid_d, key=key)
 
 
 def krasulina_xi(w: jax.Array, z: jax.Array, *, force_pallas: bool = False) -> jax.Array:

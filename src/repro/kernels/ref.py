@@ -35,6 +35,35 @@ def gossip_mix_ref(x: jax.Array, sched, rounds: int) -> jax.Array:
     return x
 
 
+def gossip_mix_quant_ref(x: jax.Array, sched, rounds: int, quant: str, *,
+                         block_d: int = 512, valid_d: Optional[int] = None,
+                         key=None) -> jax.Array:
+    """R rounds of quantized gossip with per-[n, block_d]-tile compressor
+    statistics — the XLA oracle (and CPU execution path) for
+    `kernels.consensus.gossip_mix_quant_pallas`, plus the keyed stochastic
+    variant the kernel does not fuse. One jitted chain over one flat buffer;
+    per-round nonlinearity is preserved (no operator collapsing).
+
+    Compress-once-broadcast: tile scales are roll-invariant (the roll permutes
+    rows, the stats reduce over them), so each round quantizes the buffer ONCE
+    and rolls the compressed copy — identical in exact arithmetic to
+    compressing every rolled message, at (1 compress + deg rolls) per round."""
+    from repro.core.quantize import tile_compress
+
+    n = x.shape[0]
+    orig_shape = x.shape
+    h = x.reshape(n, -1).astype(jnp.float32)
+    for r in range(rounds):
+        k = jax.random.fold_in(key, r) if key is not None else None
+        q = tile_compress(h, quant, block_d, valid_d=valid_d, key=k)
+        out = None
+        for shift, w in sched:
+            term = w * (h if shift == 0 else jnp.roll(q, shift, axis=0))
+            out = term if out is None else out + term
+        h = out
+    return h.reshape(orig_shape).astype(x.dtype)
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: int = 0, chunk: int = 0,
                   scale: Optional[float] = None) -> jax.Array:

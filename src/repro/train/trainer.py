@@ -24,8 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import RunConfig
-from repro.core.averaging import (average_gradients, consensus_error,
-                                  make_gossip_mix)
+from repro.core.averaging import average_and_error, make_gossip_mix
 from repro.launch import sharding as shlib
 from repro.launch.mesh import data_axes, n_data_nodes
 from repro.models import registry
@@ -140,9 +139,12 @@ def build_train_step(run: RunConfig, mesh, *,
             return jax.value_and_grad(loss, has_aux=True)(params, node_batch)
 
         (l, metrics), grads = jax.vmap(node_loss_grad)(state.params, batch)
-        mixed = average_gradients(grads, run.averaging, n_nodes=n_nodes,
-                                  pods=pods, mix=mix)
-        cerr = consensus_error(mixed)
+        # packed (AveragingConfig.packed, the default): grads are flattened
+        # into one [N, D] buffer per dtype, the consensus engine and the
+        # error diagnostic both run on that buffer — one pack per step,
+        # one mixing pass per buffer instead of one chain per leaf
+        mixed, cerr = average_and_error(grads, run.averaging, n_nodes=n_nodes,
+                                       pods=pods, mix=mix)
         new_params, new_opt = jax.vmap(update)(mixed, state.opt, state.params)
         metrics = jax.tree.map(jnp.mean, metrics)
         metrics = dict(metrics, loss=jnp.mean(l), consensus_err=cerr)

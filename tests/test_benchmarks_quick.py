@@ -23,10 +23,19 @@ def test_run_quick_all_suites(tmp_path):
     assert artifact["quick"] is True
     assert artifact["failed"] == []
     names = [r["name"] for r in artifact["rows"]]
-    # every suite contributed at least one row
+    # every suite contributed at least one row — including the packed,
+    # quantized, and compressor-accuracy consensus sub-suites (PR 3)
     for prefix in ("fig5/", "fig6a/", "fig7a/", "fig9/", "consensus/",
-                   "kernel/", "pipeline/"):
+                   "consensus/packed/", "consensus/quantized/",
+                   "consensus/quant_accuracy/", "kernel/", "pipeline/"):
         assert any(n.startswith(prefix) for n in names), (prefix, names)
     # the engine rows carry machine-readable throughput
     pipe = [r for r in artifact["rows"] if r["name"].startswith("pipeline/")]
     assert all("rounds_per_s=" in r["derived"] for r in pipe)
+    # the quantized rows carry the per-leaf-loop baseline and speedup
+    q = [r for r in artifact["rows"]
+         if r["name"].startswith("consensus/quantized/")]
+    assert q and all("speedup=" in r["derived"] for r in q)
+    acc = [r for r in artifact["rows"]
+           if r["name"].startswith("consensus/quant_accuracy/")]
+    assert acc and all("excess_risk=" in r["derived"] for r in acc)

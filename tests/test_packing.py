@@ -1,0 +1,336 @@
+"""Property tests for `core.packing` (flat-buffer pack/unpack) and the packed
+consensus paths: round-tripping arbitrary mixed-dtype pytrees, packed gossip /
+hierarchical parity with the per-leaf path in exact, roll, matmul, kernel, and
+quantized modes, the packed consensus-error reduction vs the per-leaf oracle,
+and the pytree-parameter DMB driver."""
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AveragingConfig
+from repro.core import averaging, dmb, mixing, packing
+
+DTYPES = ("float32", "bfloat16", "float16", "int32")
+
+
+def _rand_tree(seed, n_leaves, n, dtypes=DTYPES, lead=1):
+    """Random nested pytree; every leaf shares the leading [n] axis (lead=1)
+    or none (lead=0), with mixed trailing ranks and dtypes."""
+    rng = np.random.default_rng(seed)
+    tree = {"sub": {}, "flat": []}
+    for i in range(n_leaves):
+        rank = int(rng.integers(0, 3))
+        shape = ((n,) if lead else ()) + tuple(
+            int(rng.integers(1, 5)) for _ in range(rank))
+        dt = dtypes[int(rng.integers(len(dtypes)))]
+        if dt == "int32":
+            leaf = jnp.asarray(rng.integers(-99, 99, size=shape), jnp.int32)
+        else:
+            leaf = jnp.asarray(rng.normal(size=shape).astype(np.float32), dt)
+        if i % 3 == 0:
+            tree["sub"][f"l{i}"] = leaf
+        else:
+            tree["flat"].append(leaf)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Round-tripping
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 9), st.integers(1, 8), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_pack_roundtrip_mixed_dtypes(n_leaves, n, seed):
+    tree = _rand_tree(seed, n_leaves, n)
+    bufs, spec = packing.pack_tree(tree)
+    # dtype-preserving: one buffer per distinct dtype, every buffer [n, D_g]
+    assert len(bufs) == len({jnp.dtype(d).name for d in spec.dtypes})
+    for g, buf in enumerate(bufs):
+        assert buf.shape == (n, spec.group_width(g))
+        assert jnp.dtype(buf.dtype).name == spec.dtypes[spec.groups[g][0]]
+        assert len(spec.segment_ids(g)) == spec.group_width(g)
+    back = packing.unpack_tree(bufs, spec)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(1, 7), st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_pack_roundtrip_lead0(n_leaves, seed):
+    """lead=0 (the DMB parameter-vector form): whole leaves flatten."""
+    tree = _rand_tree(seed, n_leaves, 1, lead=0)
+    bufs, spec = packing.pack_tree(tree, lead=0)
+    for buf in bufs:
+        assert buf.ndim == 1
+    back = packing.unpack_tree(bufs, spec)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pack_spec_reuse_across_lead_sizes():
+    """A spec built from params [N, ...] must repack grads of another node
+    count (emulated N) — the segment map is leading-axis independent."""
+    t4 = {"a": jnp.ones((4, 3)), "b": jnp.zeros((4, 2, 2))}
+    t9 = {"a": jnp.ones((9, 3)), "b": jnp.zeros((9, 2, 2))}
+    _, spec = packing.pack_tree(t4)
+    bufs, _ = packing.pack_tree(t9, spec)
+    assert bufs[0].shape == (9, 7)
+    back = packing.unpack_tree(bufs, spec)
+    assert back["b"].shape == (9, 2, 2)
+
+
+def test_pack_rejects_mismatched_leading_axes():
+    with pytest.raises(ValueError):
+        packing.pack_tree({"a": jnp.ones((4, 3)), "b": jnp.ones((5, 3))})
+    _, spec = packing.pack_tree({"a": jnp.ones((4, 3))})
+    with pytest.raises(ValueError):
+        packing.pack_tree({"a": jnp.ones((4, 7))}, spec)
+
+
+# ---------------------------------------------------------------------------
+# Packed averaging parity vs the per-leaf path
+# ---------------------------------------------------------------------------
+
+def _float_tree(seed, n_leaves, n):
+    return _rand_tree(seed, n_leaves, n, dtypes=("float32",))
+
+
+def _assert_tree_close(got, want, **kw):
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), **kw)
+
+
+@pytest.mark.parametrize("impl", ["roll", "matmul", "kernel"])
+def test_packed_gossip_matches_per_leaf(impl):
+    n, rounds = 8, 5
+    tree = _float_tree(1, 7, n)
+    cfg = AveragingConfig(mode="gossip", rounds=rounds, topology="circulant2")
+    mix = mixing.circulant_mix_op(mixing.schedule("circulant2", n), n, rounds,
+                                  impl=impl)
+    got = averaging.gossip_average(tree, n, cfg, mix)
+    want = averaging.gossip_average(
+        tree, n, AveragingConfig(mode="gossip", rounds=rounds,
+                                 topology="circulant2", packed=False), mix)
+    _assert_tree_close(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_packed_gossip_unfused_exact_loop():
+    """fuse=False (the per-round oracle loop) through the packed path."""
+    n, rounds = 6, 4
+    tree = _float_tree(2, 5, n)
+    sched = mixing.schedule("ring", n)
+    mix = mixing.circulant_mix_op(sched, n, rounds, fuse=False)
+    cfg = AveragingConfig(mode="gossip", rounds=rounds)
+    got = averaging.gossip_average(tree, n, cfg, mix)
+    A_R = np.linalg.matrix_power(mixing.schedule_matrix(sched, n), rounds)
+    ref = jax.tree.map(
+        lambda g: (A_R @ np.asarray(g).reshape(n, -1)).reshape(g.shape), tree)
+    _assert_tree_close(got, ref, rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("quant", ["sign", "int8", "int8_stoch"])
+def test_packed_quantized_global_stats_is_per_leaf(quant):
+    """stats="global" pins the per-leaf oracle: packed on or off must be
+    BIT-identical (the packed path is required to fall back)."""
+    n = 8
+    tree = _float_tree(3, 6, n)
+    on = AveragingConfig(mode="gossip", rounds=4, quantization=quant)
+    off = AveragingConfig(mode="gossip", rounds=4, quantization=quant,
+                          packed=False)
+    got = averaging.gossip_average(tree, n, on)
+    want = averaging.gossip_average(tree, n, off)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("quant", ["sign", "int8"])
+def test_packed_quantized_segment_stats_matches_per_leaf(quant):
+    """Segment statistics on the packed buffer reproduce the per-leaf path's
+    scales, so one packed pass == N-leaf global-stats loop (fp tolerance)."""
+    n = 8
+    tree = _float_tree(4, 7, n)
+    seg = AveragingConfig(mode="gossip", rounds=4, quantization=quant,
+                          quant_stats="segment")
+    oracle = AveragingConfig(mode="gossip", rounds=4, quantization=quant,
+                             packed=False)
+    got = averaging.gossip_average(tree, n, seg)
+    want = averaging.gossip_average(tree, n, oracle)
+    _assert_tree_close(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_packed_quantized_tile_stats_matches_tile_reference():
+    """stats="tile" routes the packed buffer through the fused quantized path;
+    oracle: the XLA tile chain on the manually packed buffer."""
+    from repro.kernels import ref
+
+    n = 8
+    tree = _float_tree(5, 6, n)
+    cfg = AveragingConfig(mode="gossip", rounds=3, quantization="int8",
+                          quant_stats="tile", quant_block_d=16)
+    got = averaging.gossip_average(tree, n, cfg)
+    bufs, spec = packing.pack_tree(tree)
+    sched = mixing.schedule("ring", n)
+    want = packing.unpack_tree(
+        (ref.gossip_mix_quant_ref(bufs[0], sched, 3, "int8", block_d=16),),
+        spec)
+    _assert_tree_close(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_packed_hierarchical_matches_per_leaf():
+    pods, per_pod = 4, 2
+    n = pods * per_pod
+    tree = _float_tree(6, 6, n)
+    kw = dict(mode="hierarchical", rounds=3)
+    got = averaging.hierarchical_average(
+        tree, pods, per_pod, AveragingConfig(**kw))
+    want = averaging.hierarchical_average(
+        tree, pods, per_pod, AveragingConfig(packed=False, **kw))
+    _assert_tree_close(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_hierarchical_quantized_global_ignores_packed_flag():
+    """Quantized global stats pin per-leaf oracle semantics: the packed flag
+    must be a no-op (bit-identical)."""
+    pods, per_pod = 4, 2
+    tree = _float_tree(8, 5, pods * per_pod)
+    kw = dict(mode="hierarchical", rounds=3, quantization="sign")
+    got = averaging.hierarchical_average(
+        tree, pods, per_pod, AveragingConfig(**kw))
+    want = averaging.hierarchical_average(
+        tree, pods, per_pod, AveragingConfig(packed=False, **kw))
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hierarchical_quantized_packed_buffer_oracle():
+    """Segment-stats quantized hierarchical packs the tree and mixes the one
+    buffer (segment scales degrade to masked-global over the scattered
+    layout); oracle: `_hmix_buffer` on the manually packed buffer."""
+    pods, per_pod = 4, 2
+    tree = _float_tree(6, 6, pods * per_pod)
+    kw = dict(mode="hierarchical", rounds=3, quantization="sign",
+              quant_stats="segment")
+    got = averaging.hierarchical_average(
+        tree, pods, per_pod, AveragingConfig(**kw))
+    bufs, spec = packing.pack_tree(tree)
+    mix = averaging.make_gossip_mix(AveragingConfig(**kw), pods)
+    oracle = packing.unpack_tree(
+        (averaging._hmix_buffer(bufs[0], pods, per_pod, mix),), spec)
+    _assert_tree_close(got, oracle, rtol=1e-6, atol=1e-7)
+
+
+def test_average_and_error_matches_separate_calls():
+    n = 8
+    tree = _float_tree(7, 6, n)
+    cfg = AveragingConfig(mode="gossip", rounds=2)
+    mixed, err = averaging.average_and_error(tree, cfg, n_nodes=n)
+    want = averaging.gossip_average(tree, n, cfg)
+    _assert_tree_close(mixed, want, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(err),
+                               float(averaging.consensus_error_per_leaf(want)),
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Packed consensus error vs per-leaf oracle
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 8), st.integers(2, 9), st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_consensus_error_packed_matches_per_leaf_oracle(n_leaves, n, seed):
+    tree = _rand_tree(seed, n_leaves, n, dtypes=("float32", "bfloat16"))
+    got = float(averaging.consensus_error(tree))
+    want = float(averaging.consensus_error_per_leaf(tree))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_consensus_error_empty_tree():
+    assert float(averaging.consensus_error({})) == 0.0
+
+
+def test_segment_stats_no_cancellation_after_large_leaf():
+    """Regression: a small leaf packed AFTER a transformer-scale leaf must
+    keep exact segment statistics — a float32 running-sum formulation
+    catastrophically cancels here (zero/negative sums for the tail segment)."""
+    from repro.core.quantize import segment_scales
+
+    rng = np.random.default_rng(13)
+    big = jnp.asarray(100.0 * rng.normal(size=(2, 1 << 20)).astype(np.float32))
+    small = jnp.asarray(1e-3 * rng.normal(size=(2, 8)).astype(np.float32))
+    tree = {"a_big": big, "b_small": small}
+    # packed consensus error: finite and matching the per-leaf oracle
+    got = float(averaging.consensus_error(tree))
+    want = float(averaging.consensus_error_per_leaf(tree))
+    assert np.isfinite(got)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+    # sign-compressor segment scale of the tail leaf: exact per-leaf mean|x|
+    bufs, spec = packing.pack_tree(tree)
+    widths = tuple(spec.leaf_width(i) for i in spec.groups[0])
+    scales = segment_scales(bufs[0], widths, "mean_abs")
+    tail = float(scales[-1])
+    np.testing.assert_allclose(tail, float(jnp.mean(jnp.abs(small))),
+                               rtol=1e-5)
+    assert tail > 0.0
+
+
+# ---------------------------------------------------------------------------
+# DMB with pytree parameters (packed once outside the scan)
+# ---------------------------------------------------------------------------
+
+def test_run_dmb_pytree_w_matches_flat():
+    rng = np.random.default_rng(11)
+    d = 4
+    w_star = rng.normal(size=(d,)).astype(np.float32)
+
+    def draw(key, m):
+        x = jax.random.normal(key, (m, d))
+        y = x @ jnp.asarray(w_star)
+        return x, y
+
+    def grad_flat(w, x, y):
+        r = x @ w[:d] + w[d] - y
+        return jnp.concatenate([x.T @ r, jnp.sum(r)[None]]) / x.shape[0]
+
+    def grad_tree(w, x, y):
+        r = x @ w["w"] + w["b"] - y
+        return {"w": x.T @ r / x.shape[0], "b": jnp.mean(r) * jnp.ones(1)}
+
+    kw = dict(N=4, B=8, steps=25, stepsize=lambda t: 0.3 / jnp.sqrt(t), seed=5)
+    flat = dmb.run_dmb(grad_flat, draw, jnp.zeros(d + 1), **kw)
+    tree = dmb.run_dmb(grad_tree, draw,
+                       {"w": jnp.zeros(d), "b": jnp.zeros(1)}, **kw)
+    np.testing.assert_allclose(np.asarray(tree.w["w"]),
+                               np.asarray(flat.w[:d]), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(tree.w_av["w"]),
+                               np.asarray(flat.w_av[:d]), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(tree.w["b"]),
+                               np.asarray(flat.w[d:]), rtol=1e-5, atol=1e-6)
+
+
+def test_run_dmb_pytree_project_and_metric_see_tree():
+    seen = []
+
+    def draw(key, m):
+        return (jax.random.normal(key, (m, 2)),)
+
+    def grad(w, x):
+        return {"w": jnp.mean(x, 0) * 0 + w["w"]}
+
+    def project(w):
+        assert set(w) == {"w"}
+        return jax.tree.map(lambda a: jnp.clip(a, -1, 1), w)
+
+    def metric(w):
+        seen.append(True)
+        return jnp.sum(w["w"])
+
+    res = dmb.run_dmb(grad, draw, {"w": jnp.ones(2)}, N=2, B=4, steps=3,
+                      stepsize=lambda t: 0.1, project=project,
+                      trace_metric=metric)
+    assert set(res.w) == {"w"} and res.w["w"].shape == (2,)
+    assert res.trace_metric.shape == (3,)
