@@ -1,4 +1,4 @@
-"""Figures 7-8: DM-Krasulina for streaming 1-PCA.
+"""Figures 7-8: the D(M)-Krasulina family for streaming 1-PCA.
 
 Fig 7 (synthetic, d=10, lambda_1=1, gap=0.1, t'=2e5 scaled from 1e6):
 (a) B in {1, 10, 100, 1000}: excess risk O(1/t') for B <= (t')^{1-2/c0};
@@ -7,21 +7,104 @@ Fig 7 (synthetic, d=10, lambda_1=1, gap=0.1, t'=2e5 scaled from 1e6):
 Fig 8 (CIFAR-like: synthetic spiked covariance with d=3072 matched to
 CIFAR-10's scale — documented deviation, CIFAR not bundled offline):
 B in {1, 10, 100} at t' = 5e4 (dataset-sized).
+
+Engine suites (PR 4 — the PCA track on the consensus engine):
+
+* fused  — the combined xi+gossip hot path (`kernels.ops.krasulina_xi_gossip`:
+  per-node pseudo-gradients + ALL R consensus rounds in one pass) vs the
+  unfused per-round baseline (vmap'd xi, then R sequential roll_mix rounds).
+  Contract: >=3x at R>=8 on this container (full mode).
+* gossip — convergence of gossip-averaged D-Krasulina vs the exact-averaging
+  oracle on the Fig. 7 config: excess risk and consensus spread per (R,
+  quantization), the PCA analogue of the consensus/quant_accuracy study.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, time_fn
+from repro.configs.base import AveragingConfig
 from repro.configs.paper_pca import FIG7, HIGHD
-from repro.core import krasulina, problems
+from repro.core import krasulina, mixing, problems
 from repro.data.synthetic import make_pca_stream
+from repro.kernels import ops
+
+
+def _tmin(fn, *args) -> float:
+    """Speedup-contract timing: min over a longer loop (scheduler noise on
+    this container only ever inflates)."""
+    return time_fn(fn, *args, warmup=2, iters=9, agg="min")
+
+
+def _fused_xi_gossip(N: int, R: int, d: int, Bn: int,
+                     assert_contract: bool) -> None:
+    """The combined xi+gossip pass vs the unfused per-round baseline: vmap'd
+    per-node xi written out, then R sequential (deg+1)-roll consensus rounds
+    over the [N, d] state (the seed-era dataflow)."""
+    kw = jax.random.PRNGKey(0)
+    w = jax.random.normal(kw, (N, d), jnp.float32)
+    z = jax.random.normal(jax.random.PRNGKey(1), (N, Bn, d), jnp.float32)
+    sched = mixing.schedule("ring", N)
+    loop_op = mixing.circulant_mix_op(sched, N, R, fuse=False)  # per-round
+    baseline = jax.jit(
+        lambda w, z: loop_op(jax.vmap(ops.krasulina_xi)(w, z)))
+    fused = jax.jit(lambda w, z: ops.krasulina_xi_gossip(w, z, sched, R))
+    np.testing.assert_allclose(np.asarray(fused(w, z)),
+                               np.asarray(baseline(w, z)),
+                               rtol=2e-4, atol=2e-5)
+    t_base = _tmin(baseline, w, z)
+    t_fused = _tmin(fused, w, z)
+    speedup = t_base / t_fused
+    emit(f"krasulina/fused/N{N}_R{R}_d{d}_Bn{Bn}", t_fused,
+         f"per_round_us={t_base:.1f};speedup={speedup:.2f}x")
+    if assert_contract:
+        # PR 4 acceptance: the fused xi+gossip path >=3x over the unfused
+        # per-round baseline on this container
+        assert speedup >= 3.0, (N, R, d, Bn, speedup)
+
+
+def _gossip_vs_exact(steps: int, B: int) -> None:
+    """Gossip-averaged D-Krasulina vs the exact oracle on the Fig. 7 stream:
+    same draws/init/stepsize, averaging mode as the only variable."""
+    stream = make_pca_stream(FIG7)
+    metric = lambda w: problems.pca_excess_risk(w, stream.cov, stream.lambda1)
+    w0 = jax.random.normal(jax.random.PRNGKey(0), (FIG7.dim,))
+    w0 = w0 / jnp.linalg.norm(w0)
+    N = 10
+    step = lambda t: 10.0 / t
+
+    ex = krasulina.run_dm_krasulina(stream.draw, w0, N=N, B=B, steps=steps,
+                                    stepsize=step, trace_metric=metric, seed=3)
+    oracle = float(ex.trace_metric[-1])
+    emit(f"krasulina/gossip/exact/steps{steps}", 0.0,
+         f"excess_risk={oracle:.6f};consensus_err=0.0000")
+    for name, avg in (
+            ("ring_R2", AveragingConfig(mode="gossip", rounds=2)),
+            ("ring_R8", AveragingConfig(mode="gossip", rounds=8)),
+            ("ring_R8_sign", AveragingConfig(mode="gossip", rounds=8,
+                                             quantization="sign")),
+    ):
+        res = krasulina.run_d_krasulina(
+            stream.draw, w0, N=N, B=B, steps=steps, stepsize=step,
+            averaging=avg, trace_metric=metric, seed=3)
+        risk = float(res.trace_metric[-1])
+        spread = float(jnp.max(jnp.linalg.norm(
+            res.w_nodes - res.w[None], axis=1)) / jnp.linalg.norm(res.w))
+        emit(f"krasulina/gossip/{name}/steps{steps}", 0.0,
+             f"excess_risk={risk:.6f};consensus_err={spread:.4f}")
 
 
 def run(highd: bool = True, quick: bool = False) -> None:
     if quick:
         highd = False
+        _fused_xi_gossip(8, 4, 4_096, 4, assert_contract=False)
+        _gossip_vs_exact(steps=30, B=50)
+    else:
+        for N, R in ((16, 8), (16, 16)):
+            _fused_xi_gossip(N, R, 32_768, 4, assert_contract=True)
+        _gossip_vs_exact(steps=2_000, B=100)
     stream = make_pca_stream(FIG7)
     metric = lambda w: problems.pca_excess_risk(w, stream.cov, stream.lambda1)
     w0 = jax.random.normal(jax.random.PRNGKey(0), (FIG7.dim,))

@@ -68,24 +68,27 @@ def _packable(mix: CirculantMixOp) -> bool:
 
 
 def _apply_mix(mix: CirculantMixOp, spec: packing.PackSpec, g: int,
-               buf: jax.Array) -> jax.Array:
+               buf: jax.Array, key: Any = None) -> jax.Array:
     if mix.quantization != "none" and mix.stats == "segment":
         widths = tuple(spec.leaf_width(i) for i in spec.groups[g])
-        return mix(buf, seg_widths=widths)
-    return mix(buf)
+        return mix(buf, seg_widths=widths, key=key)
+    return mix(buf, key=key)
 
 
 def gossip_average(tree: Tree, n_nodes: int, cfg: AveragingConfig,
-                   mix: Optional[CirculantMixOp] = None) -> Tree:
+                   mix: Optional[CirculantMixOp] = None, *,
+                   key: Any = None) -> Tree:
     """R rounds of doubly-stochastic consensus over the leading node axis —
     one packed pass per dtype group by default, per-leaf when `cfg.packed`
-    is off or the quantized global-stats oracle is selected."""
+    is off or the quantized global-stats oracle is selected. `key` (optional)
+    is the per-step base key for stochastic compressors — see
+    `CirculantMixOp.__call__`."""
     if mix is None:
         mix = make_gossip_mix(cfg, n_nodes)
     if not (cfg.packed and _packable(mix)):
-        return jax.tree.map(mix, tree)
+        return jax.tree.map(lambda g: mix(g, key=key), tree)
     bufs, spec = packing.pack_tree(tree)
-    outs = tuple(_apply_mix(mix, spec, g, b) for g, b in enumerate(bufs))
+    outs = tuple(_apply_mix(mix, spec, g, b, key) for g, b in enumerate(bufs))
     return packing.unpack_tree(outs, spec)
 
 
@@ -95,7 +98,7 @@ def exact_average(tree: Tree) -> Tree:
 
 
 def _hmix_buffer(g: jax.Array, pods: int, per_pod: int,
-                 mix: CirculantMixOp) -> jax.Array:
+                 mix: CirculantMixOp, key: Any = None) -> jax.Array:
     """Reduce-scatter hierarchical consensus on one [N, ...] buffer/leaf."""
     shp = g.shape
     flat = g.reshape(pods, per_pod, -1)  # [P, M, F]
@@ -108,7 +111,7 @@ def _hmix_buffer(g: jax.Array, pods: int, per_pod: int,
     scattered = pod_mean.reshape(pods, per_pod, chunk)  # ... scatter
     # cross-pod gossip, one chunk per lane; pad columns sit at the tail of
     # the flattened layout and are masked out of compressor statistics
-    mixed = mix(scattered, valid_d=f if pad else None)
+    mixed = mix(scattered, valid_d=f if pad else None, key=key)
     gathered = mixed.reshape(pods, 1, chunk * per_pod)[..., :f]  # all-gather
     g = jnp.broadcast_to(gathered, (pods, per_pod, f))
     return g.reshape(shp)
@@ -116,7 +119,8 @@ def _hmix_buffer(g: jax.Array, pods: int, per_pod: int,
 
 def hierarchical_average(tree: Tree, pods: int, per_pod: int,
                          cfg: AveragingConfig,
-                         mix: Optional[CirculantMixOp] = None) -> Tree:
+                         mix: Optional[CirculantMixOp] = None, *,
+                         key: Any = None) -> Tree:
     """Exact averaging within each pod (fast ICI), gossip across pods (slow
     DCN) — in reduce-scatter form.
 
@@ -139,7 +143,7 @@ def hierarchical_average(tree: Tree, pods: int, per_pod: int,
         mix = make_gossip_mix(cfg, pods)
 
     def hmix(g):
-        return _hmix_buffer(g, pods, per_pod, mix)
+        return _hmix_buffer(g, pods, per_pod, mix, key)
 
     if not (cfg.packed and _packable(mix)):
         return jax.tree.map(hmix, tree)
@@ -149,24 +153,27 @@ def hierarchical_average(tree: Tree, pods: int, per_pod: int,
 
 def average_gradients(tree: Tree, cfg: AveragingConfig, *, n_nodes: int,
                       pods: int = 1,
-                      mix: Optional[CirculantMixOp] = None) -> Tree:
+                      mix: Optional[CirculantMixOp] = None,
+                      key: Any = None) -> Tree:
     """Dispatch on the paper's averaging mode. `tree` leaves: [n_nodes, ...].
 
     `mix` is the prebuilt consensus engine (gossip: over `n_nodes`;
-    hierarchical: over `pods`); built from `cfg` on the fly when omitted."""
+    hierarchical: over `pods`); built from `cfg` on the fly when omitted.
+    `key` is the optional per-step base key for stochastic compressors."""
     if cfg.mode == "exact":
         return exact_average(tree)
     if cfg.mode == "gossip":
-        return gossip_average(tree, n_nodes, cfg, mix)
+        return gossip_average(tree, n_nodes, cfg, mix, key=key)
     if cfg.mode == "hierarchical":
         assert n_nodes % pods == 0
-        return hierarchical_average(tree, pods, n_nodes // pods, cfg, mix)
+        return hierarchical_average(tree, pods, n_nodes // pods, cfg, mix,
+                                    key=key)
     raise ValueError(f"unknown averaging mode {cfg.mode!r}")
 
 
 def average_and_error(tree: Tree, cfg: AveragingConfig, *, n_nodes: int,
-                      pods: int = 1, mix: Optional[CirculantMixOp] = None
-                      ) -> Tuple[Tree, jax.Array]:
+                      pods: int = 1, mix: Optional[CirculantMixOp] = None,
+                      key: Any = None) -> Tuple[Tree, jax.Array]:
     """Averaging plus the epsilon-consensus diagnostic with ONE pack: the
     mixed packed buffers feed both the unpack and the fused error reduction,
     so the trainer stops paying a second per-leaf (or re-pack) sweep."""
@@ -180,14 +187,16 @@ def average_and_error(tree: Tree, cfg: AveragingConfig, *, n_nodes: int,
                               else n_nodes)
     if not (cfg.packed and _packable(mix)):
         mixed = average_gradients(tree, cfg, n_nodes=n_nodes, pods=pods,
-                                  mix=mix)
+                                  mix=mix, key=key)
         return mixed, consensus_error(mixed)
     bufs, spec = packing.pack_tree(tree)
     if cfg.mode == "gossip":
-        outs = tuple(_apply_mix(mix, spec, g, b) for g, b in enumerate(bufs))
+        outs = tuple(_apply_mix(mix, spec, g, b, key)
+                     for g, b in enumerate(bufs))
     else:
         assert n_nodes % pods == 0
-        outs = tuple(_hmix_buffer(b, pods, n_nodes // pods, mix) for b in bufs)
+        outs = tuple(_hmix_buffer(b, pods, n_nodes // pods, mix, key)
+                     for b in bufs)
     err = _packed_consensus_error(outs, spec)
     return packing.unpack_tree(outs, spec), err
 

@@ -1,10 +1,28 @@
-"""Algorithm 2 — DM-Krasulina [75]: distributed mini-batch Krasulina's method for
-streaming 1-PCA, with exact averaging of the per-node pseudo-gradients xi and
-support for mu discarded samples per round (under-provisioned regime).
+"""Algorithm 2 — the D(M)-Krasulina family: distributed mini-batch Krasulina's
+method for streaming 1-PCA, with mu discarded samples per round
+(under-provisioned regime, Theorem 5) and the averaging of the per-node
+pseudo-gradients xi as a first-class knob:
+
+* **exact** (`run_dm_krasulina`, DM-Krasulina [75]): `jnp.mean` over the node
+  axis — Alg. 2 step 6 verbatim. All nodes stay bit-identical, so the state is
+  one shared iterate. This path is the R -> infinity oracle the gossip variant
+  is validated against, and it is kept bit-identical to the seed
+  implementation.
+* **gossip** (`run_d_krasulina` with an `AveragingConfig`): each node keeps its
+  own iterate; the xi's are averaged through the consensus engine
+  (`core.mixing.CirculantMixOp` — precomputed R-round operator, optionally
+  quantized per Section VI) exactly as the convex D-SGD track. On TPU the
+  per-node xi and all R gossip rounds fuse into one kernel pass
+  (`kernels.ops.krasulina_xi_gossip`).
 
 The per-node pseudo-gradient goes through `kernels.ops.krasulina_xi`, so the
 fused single-HBM-pass Pallas kernel is on the hot path on TPU (the jnp
 reference path serves CPU).
+
+`build_krasulina_superstep` packages a K-round `lax.scan` over either variant
+for `train.driver.StreamingDriver`, which provisions the PCA stream with the
+same governed splitter / prefetch ring / closed-loop (B, mu) governor the
+logreg track uses (Fig. 3(c), eq. 4).
 """
 from __future__ import annotations
 
@@ -13,8 +31,12 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import AveragingConfig
+from repro.core.averaging import make_gossip_mix
 from repro.core.dsgd import jit_driver
-from repro.kernels.ops import krasulina_xi
+from repro.core.mixing import CirculantMixOp
+from repro.core.quantize import STOCHASTIC
+from repro.kernels.ops import krasulina_xi, krasulina_xi_gossip
 
 
 class KrasulinaResult(NamedTuple):
@@ -23,36 +45,199 @@ class KrasulinaResult(NamedTuple):
     trace_metric: jax.Array
 
 
-def run_dm_krasulina(
+class DKrasulinaResult(NamedTuple):
+    w_nodes: jax.Array  # [N, d] final per-node iterates
+    w: jax.Array  # [d] node-mean iterate (== w_nodes[i] in exact mode)
+    trace_t_prime: jax.Array
+    trace_metric: jax.Array  # metric of the node-mean iterate per round
+
+
+def _resolve_fuse_xi(mix: CirculantMixOp, fuse_xi: Optional[bool]) -> bool:
+    """The combined xi+gossip kernel replaces `mix(vmap(xi))` when it wins:
+    always on TPU (tile-resident consensus, one HBM write), never by default
+    on CPU/GPU where the MixOp's composed-schedule impl (roll/matmul) is the
+    fast path and the kernel would run in interpret mode. Quantized configs
+    can't fuse (nonlinear per-round compressor)."""
+    if mix.quantization != "none":
+        return False
+    if fuse_xi is not None:
+        return fuse_xi
+    return jax.default_backend() == "tpu"
+
+
+def _gossip_xi(w: jax.Array, z: jax.Array, mix: CirculantMixOp, fused: bool,
+               t: jax.Array) -> jax.Array:
+    """Gossip-averaged pseudo-gradients: xi per node, R consensus rounds.
+    `t` (the round counter) is folded into the MixOp seed so stochastic
+    compressors draw fresh per-round noise every scan step (the fused kernel
+    path only exists for quantization="none", where the key is moot)."""
+    if fused:
+        return krasulina_xi_gossip(w, z, mix.sched, mix.rounds)
+    step_key = None
+    if mix.quantization in STOCHASTIC:
+        step_key = jax.random.fold_in(jax.random.PRNGKey(mix.seed), t)
+    return mix(jax.vmap(krasulina_xi)(w, z), key=step_key)
+
+
+def _check_averaging(averaging: AveragingConfig) -> None:
+    """The PCA track averages one [N, d] vector — pod-structured hierarchical
+    reduce-scatter has no meaning without a mesh; reject it loudly instead of
+    silently running flat gossip with reinterpreted semantics."""
+    if averaging.mode not in ("exact", "gossip"):
+        raise ValueError(
+            f"D-Krasulina supports exact|gossip averaging, got "
+            f"{averaging.mode!r}")
+
+
+def run_d_krasulina(
     draw: Callable,  # draw(key, n) -> z [n, d]
-    w0: jax.Array,
+    w0: jax.Array,  # [d] common init
     *,
     N: int,
     B: int,
     mu: int = 0,
     steps: int,
     stepsize: Callable,  # stepsize(t) -> eta_t (Thm 5: c/(Q+t))
+    averaging: Optional[AveragingConfig] = None,  # None -> exact (DM-Krasulina)
+    mix: Optional[CirculantMixOp] = None,  # prebuilt consensus engine override
+    trace_metric: Optional[Callable] = None,
+    fuse_xi: Optional[bool] = None,  # None -> auto (kernel on TPU)
+    seed: int = 0,
+) -> DKrasulinaResult:
+    """The D-Krasulina family: `averaging=None` (or mode="exact") is
+    DM-Krasulina with exact xi averaging — bit-identical to
+    `run_dm_krasulina`; a gossip `AveragingConfig` replaces step 6 with R
+    rounds of (optionally quantized) circulant consensus through the MixOp
+    engine, with per-node iterates."""
+    assert B % N == 0
+    if averaging is not None:
+        _check_averaging(averaging)
+    metric = trace_metric or (lambda w: jnp.zeros(()))
+    exact = averaging is None or averaging.mode == "exact"
+    ts = jnp.arange(1, steps + 1)
+    t_prime = ts * (B + mu)
+
+    if exact:
+        def round_fn(carry, t):
+            w, key = carry
+            key, kd = jax.random.split(key)
+            z = draw(kd, B + mu)[:B].reshape(N, B // N, -1)
+            xi_n = jax.vmap(lambda zn: krasulina_xi(w, zn))(z)  # steps 3-5
+            xi = jnp.mean(xi_n, axis=0)  # exact averaging (step 6)
+            w_new = w + stepsize(t) * xi  # step 7
+            return (w_new, key), metric(w_new)
+
+        drive = jit_driver(lambda init, ts: jax.lax.scan(round_fn, init, ts))
+        # copy w0: the carry is donated, and the caller keeps ownership of w0
+        (w, _), metrics = drive((jnp.array(w0), jax.random.PRNGKey(seed)), ts)
+        return DKrasulinaResult(jnp.broadcast_to(w[None], (N, w.shape[0])), w,
+                                t_prime, metrics)
+
+    if mix is None:
+        mix = make_gossip_mix(averaging, N)
+    fused = _resolve_fuse_xi(mix, fuse_xi)
+
+    def round_fn(carry, t):
+        w, key = carry  # w: [N, d] per-node iterates
+        key, kd = jax.random.split(key)
+        z = draw(kd, B + mu)[:B].reshape(N, B // N, -1)
+        h = _gossip_xi(w, z, mix, fused, t)  # steps 3-6, consensus form
+        w_new = w + stepsize(t) * h  # step 7, per node
+        return (w_new, key), metric(jnp.mean(w_new, axis=0))
+
+    w_nodes = jnp.tile(w0[None], (N, 1))
+    drive = jit_driver(lambda init, ts: jax.lax.scan(round_fn, init, ts))
+    (w, _), metrics = drive((w_nodes, jax.random.PRNGKey(seed)), ts)
+    return DKrasulinaResult(w, jnp.mean(w, axis=0), t_prime, metrics)
+
+
+def run_dm_krasulina(
+    draw: Callable,
+    w0: jax.Array,
+    *,
+    N: int,
+    B: int,
+    mu: int = 0,
+    steps: int,
+    stepsize: Callable,
     trace_metric: Optional[Callable] = None,
     seed: int = 0,
 ) -> KrasulinaResult:
-    assert B % N == 0
-    metric = trace_metric or (lambda w: jnp.zeros(()))
+    """Exact-averaging DM-Krasulina (Alg. 2 as printed) — the R -> infinity
+    oracle of the gossip family, kept bit-identical to the seed path."""
+    res = run_d_krasulina(draw, w0, N=N, B=B, mu=mu, steps=steps,
+                          stepsize=stepsize, trace_metric=trace_metric,
+                          seed=seed)
+    return KrasulinaResult(res.w, res.trace_t_prime, res.trace_metric)
 
-    def round_fn(carry, t):
-        w, key = carry
-        key, kd = jax.random.split(key)
-        z = draw(kd, B + mu)[:B].reshape(N, B // N, -1)
-        xi_n = jax.vmap(lambda zn: krasulina_xi(w, zn))(z)  # steps 3-5
-        xi = jnp.mean(xi_n, axis=0)  # exact averaging (step 6)
-        w_new = w + stepsize(t) * xi  # step 7
-        return (w_new, key), metric(w_new)
 
-    drive = jit_driver(lambda init, ts: jax.lax.scan(round_fn, init, ts))
-    # copy w0: the carry is donated, and the caller keeps ownership of w0
-    (w, _), metrics = drive((jnp.array(w0), jax.random.PRNGKey(seed)),
-                            jnp.arange(1, steps + 1))
-    t_prime = jnp.arange(1, steps + 1) * (B + mu)
-    return KrasulinaResult(w, t_prime, metrics)
+# ---------------------------------------------------------------------------
+# Superstep integration (train.driver)
+# ---------------------------------------------------------------------------
+
+
+class KrasulinaState(NamedTuple):
+    """Carry of the K-round PCA superstep: the iterate(s) and the global round
+    counter t that Theorem 5's stepsize c/(Q+t) indexes."""
+
+    w: jax.Array  # [d] (exact) or [N, d] (decentralized)
+    t: jax.Array  # scalar int32, rounds completed
+
+
+def init_krasulina_state(w0: jax.Array, averaging: AveragingConfig,
+                         n_nodes: int) -> KrasulinaState:
+    """Initial superstep carry: exact mode shares one iterate, gossip mode
+    replicates it per node (identical copies, like the trainer's
+    `replicate_for_nodes`)."""
+    w0 = jnp.asarray(w0)
+    if averaging.mode != "exact":
+        w0 = jnp.tile(w0[None], (n_nodes, 1))
+    return KrasulinaState(w0, jnp.zeros((), jnp.int32))
+
+
+def build_krasulina_superstep(averaging: AveragingConfig, n_nodes: int,
+                              stepsize: Callable, *,
+                              metric: Optional[Callable] = None,
+                              mix: Optional[CirculantMixOp] = None,
+                              fuse_xi: Optional[bool] = None) -> Callable:
+    """The PCA counterpart of `train.trainer.build_superstep`: one jitted
+    K-round `lax.scan` per dispatch, consumable by
+    `train.driver.StreamingDriver` (pass it as `superstep_fn`).
+
+    superstep(state, batches) -> (state, metrics): batches = {"z": ...} with a
+    leading K axis — [K, B, d] in exact mode, [K, N, B/N, d] decentralized
+    (the driver's splitter does the node split); metric leaves come back
+    stacked [K]. Metrics: `metric` of the node-mean iterate (or zeros) and
+    the consensus spread max_n ||w_n - w_bar|| / ||w_bar||."""
+    _check_averaging(averaging)
+    exact = averaging.mode == "exact"
+    metric_fn = metric or (lambda w: jnp.zeros(()))
+    if not exact and mix is None:
+        mix = make_gossip_mix(averaging, n_nodes)
+    fused = False if exact else _resolve_fuse_xi(mix, fuse_xi)
+
+    def round_fn(state: KrasulinaState, batch):
+        w, t = state
+        t = t + 1
+        z = batch["z"]
+        if exact:
+            zn = z.reshape(n_nodes, z.shape[0] // n_nodes, -1)
+            h = jnp.mean(jax.vmap(lambda zb: krasulina_xi(w, zb))(zn), axis=0)
+            w_new = w + stepsize(t) * h
+            wbar, spread = w_new, jnp.zeros(())
+        else:
+            h = _gossip_xi(w, z, mix, fused, t)
+            w_new = w + stepsize(t) * h
+            wbar = jnp.mean(w_new, axis=0)
+            num = jnp.max(jnp.linalg.norm(w_new - wbar[None], axis=1))
+            spread = num / (jnp.linalg.norm(wbar) + 1e-30)
+        metrics = {"metric": metric_fn(wbar), "consensus_err": spread}
+        return KrasulinaState(w_new, t), metrics
+
+    def superstep(state: KrasulinaState, batches):
+        return jax.lax.scan(round_fn, state, batches)
+
+    return superstep
 
 
 def theorem5_Q(d: int, kappa: float, sigma_B2: float, c: float, delta: float = 0.25):

@@ -305,13 +305,13 @@ class CirculantMixOp:
     seed: int = 0  # threefry base for stochastic compressors
 
     def __call__(self, x: jax.Array, *, seg_widths: Optional[Tuple[int, ...]] = None,
-                 valid_d: Optional[int] = None) -> jax.Array:
+                 valid_d: Optional[int] = None, key: Any = None) -> jax.Array:
         assert x.shape[0] == self.n, (
             f"MixOp built for n={self.n} applied to node axis {x.shape[0]}")
         if self.rounds == 0 or self.n == 1:
             return x
         if self.quantization != "none":
-            return self._quantized(x, seg_widths, valid_d)
+            return self._quantized(x, seg_widths, valid_d, key)
         if self.fused_sched is None:  # fuse=False: per-round oracle loop
             for _ in range(self.rounds):
                 x = roll_mix(x, self.sched, _identity)
@@ -330,13 +330,18 @@ class CirculantMixOp:
             raise ValueError(f"unknown MixOp impl {self.impl!r}")
         return roll_mix(x, self.fused_sched, _identity)
 
-    def _quantized(self, x, seg_widths, valid_d):
+    def _quantized(self, x, seg_widths, valid_d, key=None):
         """Per-round nonlinear consensus. `valid_d` marks trailing flattened
         columns as padding (masked out of compressor statistics — they must be
         zero on input); stochastic compressors fold the round index into the
-        threefry key (messages within a round share it)."""
-        key0 = (jax.random.PRNGKey(self.seed)
-                if self.quantization in STOCHASTIC else None)
+        threefry key (messages within a round share it). `key` overrides the
+        static-seed base key — callers inside a `lax.scan` over steps pass a
+        per-step key (e.g. fold the step counter into their own base) so the
+        per-round noise is fresh every step; `key=None` keeps the
+        seed-derived key bit-identically (same noise sequence each step)."""
+        key0 = None
+        if self.quantization in STOCHASTIC:
+            key0 = jax.random.PRNGKey(self.seed) if key is None else key
         if self.stats == "tile":
             from repro.kernels.ops import quant_gossip_mix
             return quant_gossip_mix(x, self.sched, self.rounds,

@@ -65,6 +65,7 @@ class PCAStream(NamedTuple):
     top_eigvec: jax.Array  # [d]
     lambda1: float
     eigengap: float
+    sqrt_cov: jax.Array  # [d, d] symmetric square root of cov
 
 
 def make_pca_stream(cfg: PCAConfig) -> PCAStream:
@@ -83,4 +84,24 @@ def make_pca_stream(cfg: PCAConfig) -> PCAStream:
     def draw(k, n):
         return jax.random.normal(k, (n, d)) @ sqrt_cov
 
-    return PCAStream(draw, cov, q[:, 0], float(cfg.lambda1), float(cfg.eigengap))
+    return PCAStream(draw, cov, q[:, 0], float(cfg.lambda1),
+                     float(cfg.eigengap), sqrt_cov)
+
+
+def make_pca_host_sampler(stream: PCAStream) -> Callable:
+    """Host-side splitter source for the streaming engine: the same covariance
+    stream as `PCAStream.draw`, but numpy-generated (np.random.Generator in,
+    {"z": [n, d]} dict out) so `data.pipeline.StreamingPipeline` and the
+    `DevicePrefetcher` thread can synthesize samples off the device's critical
+    path (the draws are NOT the same sequence as the threefry-keyed device
+    draw — same distribution, different entropy source)."""
+    import numpy as np
+
+    sqrt_cov = np.asarray(stream.sqrt_cov, np.float32)
+    d = sqrt_cov.shape[0]
+
+    def sample(rng: "np.random.Generator", n: int):
+        z = rng.standard_normal((n, d), dtype=np.float32) @ sqrt_cov
+        return {"z": z}
+
+    return sample

@@ -1,19 +1,29 @@
-"""Pallas TPU kernel: fused mini-batch Krasulina pseudo-gradient.
+"""Pallas TPU kernels: fused mini-batch Krasulina pseudo-gradient, per node
+and — for the decentralized D-Krasulina track — fused with the R-round gossip
+consensus that follows it.
 
 The paper's PCA hot spot (Alg. 2 steps 3-5) is, per node and round, a fused
 BLAS-2 pass over the local mini-batch: s = Z w, then xi = Z^T s / B - (mean(s^2)
 / ||w||^2) w. A naive implementation streams Z from HBM twice (once for s, once
-for Z^T s) or materializes B rank-1 updates. This kernel tiles Z into VMEM once
-per block and accumulates both Z^T s and sum(s^2) in a single pass — arithmetic
-intensity doubles versus the two-pass form, which matters because the op is
-memory-bound (2*B*d flops over B*d*dtype bytes).
+for Z^T s) or materializes B rank-1 updates. `krasulina_xi_pallas` tiles Z into
+VMEM once per block and accumulates both Z^T s and sum(s^2) in a single pass —
+arithmetic intensity doubles versus the two-pass form, which matters because
+the op is memory-bound (2*B*d flops over B*d*dtype bytes).
 
-Grid: one sequential axis over batch tiles; accumulators live in VMEM scratch
-and the epilogue (last tile) applies the w-correction term.
+`krasulina_xi_gossip_pallas` goes one step further for the gossip-averaged
+variant (Alg. 2 step 6 replaced by eq. 17 consensus): the unfused path writes
+the per-node xi [N, d] to HBM and then pays (deg+1)*R more passes over it for
+the R gossip rounds. Here the xi tile is computed in-register per [N, block_d]
+column tile and ALL R rounds of shift/weight/accumulate run on the resident
+tile before the single write-back (the `kernels.consensus` trick applied to a
+producer-consumer pair). The full-d reductions xi needs (s_n = Z_n w_n,
+||w_n||^2) are accumulated by a first grid phase over the same tiles, so the
+kernel streams Z twice and the [N, d] consensus state exactly once.
 """
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,3 +81,90 @@ def krasulina_xi_pallas(w: jax.Array, z: jax.Array, *, block_b: int = 256,
         interpret=interpret,
     )(w[None], z)
     return out[0]
+
+
+def _xi_gossip_kernel(w_ref, z_ref, o_ref, s_ref, nrm2_ref, *,
+                      shifts: Tuple[int, ...], weights: Tuple[float, ...],
+                      rounds: int, batch_n: int):
+    """Grid (2, n_tiles). Phase 0 accumulates the full-d reductions (s = Z w
+    per node, ||w||^2 per node) tile by tile; phase 1 revisits each tile,
+    forms the xi column block for all N nodes and runs every gossip round on
+    the resident [N, block_d] tile before the one write-back."""
+    p, t = pl.program_id(0), pl.program_id(1)
+    w = w_ref[...].astype(jnp.float32)  # [N, bd]
+    z = z_ref[...].astype(jnp.float32)  # [N, Bn, bd]
+
+    @pl.when(p == 0)
+    def _accumulate():
+        @pl.when(t == 0)
+        def _init():
+            s_ref[...] = jnp.zeros_like(s_ref)
+            nrm2_ref[...] = jnp.zeros_like(nrm2_ref)
+
+        # s_n += Z_n[:, tile] @ w_n[tile]  (batched over the node axis)
+        s_ref[...] += jax.lax.dot_general(
+            z, w, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)  # [N, Bn]
+        nrm2_ref[...] += jnp.sum(w * w, axis=1, keepdims=True)  # [N, 1]
+
+    @pl.when(p == 1)
+    def _xi_and_gossip():
+        s = s_ref[...]  # [N, Bn], complete after phase 0
+        nrm2 = jnp.maximum(nrm2_ref[...], 1e-30)  # [N, 1]
+        coeff = jnp.sum(s * s, axis=1, keepdims=True) / (batch_n * nrm2)
+        # xi tile: (1/Bn) Z^T s - (mean(s^2)/||w||^2) w, all nodes at once
+        zts = jax.lax.dot_general(s, z, (((1,), (1,)), ((0,), (0,))),
+                                  preferred_element_type=jnp.float32)  # [N, bd]
+        h = zts / batch_n - coeff * w
+        for _ in range(rounds):
+            acc = None
+            for sh, wt in zip(shifts, weights):
+                msg = h if sh == 0 else pltpu.roll(h, sh, 0)
+                term = wt * msg
+                acc = term if acc is None else acc + term
+            h = acc
+        o_ref[...] = h.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("shifts", "weights", "rounds", "block_d",
+                                    "interpret"))
+def krasulina_xi_gossip_pallas(w: jax.Array, z: jax.Array,
+                               shifts: Tuple[int, ...],
+                               weights: Tuple[float, ...], rounds: int, *,
+                               block_d: int = 512,
+                               interpret: bool = True) -> jax.Array:
+    """w: [N, d] per-node iterates; z: [N, Bn, d] per-node mini-batches ->
+    [N, d] gossip-mixed pseudo-gradients: R rounds of
+    `sum_s w_s * roll(xi, s, axis=0)` applied to xi_n = krasulina_xi(w_n, z_n).
+
+    Pads d up to a multiple of block_d (zero columns contribute nothing to
+    s/||w||^2 and stay zero through the rolls). The whole [N, Bn] s-matrix is
+    kept in VMEM scratch, so Bn is assumed streaming-small (B/N per the
+    splitter), not a full epoch."""
+    n, bn, d = z.shape
+    assert w.shape == (n, d), (w.shape, z.shape)
+    shifts = tuple(int(s) % n for s in shifts)
+    block_d = min(block_d, d)
+    n_tiles = (d + block_d - 1) // block_d
+    pad = n_tiles * block_d - d
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        z = jnp.pad(z, ((0, 0), (0, 0), (0, pad)))
+    out = pl.pallas_call(
+        functools.partial(_xi_gossip_kernel, shifts=shifts, weights=weights,
+                          rounds=rounds, batch_n=bn),
+        grid=(2, n_tiles),
+        in_specs=[
+            pl.BlockSpec((n, block_d), lambda p, t: (0, t)),
+            pl.BlockSpec((n, bn, block_d), lambda p, t: (0, 0, t)),
+        ],
+        out_specs=pl.BlockSpec((n, block_d), lambda p, t: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((n, n_tiles * block_d), w.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((n, bn), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w, z)
+    return out[:, :d] if pad else out

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.consensus import gossip_mix_pallas, gossip_mix_quant_pallas
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.krasulina_update import krasulina_xi_pallas
+from repro.kernels.krasulina_update import (krasulina_xi_gossip_pallas,
+                                            krasulina_xi_pallas)
 
 
 def _on_tpu() -> bool:
@@ -59,6 +60,24 @@ def krasulina_xi(w: jax.Array, z: jax.Array, *, force_pallas: bool = False) -> j
     if _on_tpu() or force_pallas:
         return krasulina_xi_pallas(w, z, interpret=not _on_tpu())
     return ref.krasulina_xi_ref(w, z)
+
+
+def krasulina_xi_gossip(w: jax.Array, z: jax.Array, sched, rounds: int, *,
+                        block_d: int = 512,
+                        force_pallas: bool = False) -> jax.Array:
+    """Fused D-Krasulina hot path: per-node pseudo-gradients (Alg. 2 steps
+    3-5) + ALL R gossip rounds (eq. 17) in one pass. w: [N, d]; z: [N, Bn, d];
+    `sched`: ((shift, weight), ...) one-round circulant schedule. On TPU the
+    Pallas kernel keeps each [N, block_d] xi tile resident through every
+    round (one HBM write of the consensus state); off-TPU the XLA reference
+    applies the composed R-round schedule in a single weighted-roll pass."""
+    if _on_tpu() or force_pallas:
+        shifts = tuple(s for s, _ in sched)
+        weights = tuple(w_ for _, w_ in sched)
+        return krasulina_xi_gossip_pallas(w, z, shifts, weights, rounds,
+                                          block_d=block_d,
+                                          interpret=not _on_tpu())
+    return ref.krasulina_xi_gossip_ref(w, z, sched, rounds)
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,

@@ -22,6 +22,25 @@ def krasulina_xi_ref(w: jax.Array, z: jax.Array) -> jax.Array:
     return xi.astype(w.dtype)
 
 
+def krasulina_xi_gossip_ref(w: jax.Array, z: jax.Array, sched,
+                            rounds: int) -> jax.Array:
+    """Fused D-Krasulina consensus step: per-node pseudo-gradients followed by
+    R rounds of circulant gossip, as ONE pass — xi via `krasulina_xi_ref` and
+    the R-round schedule collapsed by `core.mixing.compose_schedule` (the
+    consensus is linear, so the composition is exact up to f32 reassociation).
+    This is the XLA oracle (and CPU execution path) for
+    `kernels.krasulina_update.krasulina_xi_gossip_pallas`; the strict
+    per-round form is `gossip_mix_ref(vmap(krasulina_xi_ref), sched, rounds)`.
+    """
+    from repro.core.mixing import compose_schedule
+
+    xi = jax.vmap(krasulina_xi_ref)(w, z)
+    if rounds == 0 or w.shape[0] == 1:
+        return xi
+    fused = compose_schedule(sched, rounds, w.shape[0])
+    return gossip_mix_ref(xi, fused, 1)
+
+
 def gossip_mix_ref(x: jax.Array, sched, rounds: int) -> jax.Array:
     """R sequential rounds of weighted circular shifts over axis 0 — the
     uncompressed gossip oracle the fused consensus kernel is validated against.

@@ -41,7 +41,7 @@ TRAIN_MICROBATCHES = {
 }
 
 # archs whose faithful config is full attention: long_500k runs a sliding-window
-# variant (DESIGN.md §long_500k applicability)
+# variant (docs/DESIGN.md §long_500k applicability)
 WINDOWED_FOR_500K = {
     "granite-8b": 8192,
     "phi4-mini-3.8b": 8192,

@@ -149,7 +149,7 @@ def activation_rules(mesh: Mesh, shape: ShapeConfig,
     dp = data_axes(mesh)
     if node_axis:
         # under vmap over the node axis, constraints see the un-batched shape;
-        # rely on propagation instead (DESIGN.md §Mesh & sharding)
+        # rely on propagation instead (docs/DESIGN.md §Mesh & sharding)
         return {}
     if shape.mode == "decode" and shape.global_batch < mesh.shape["data"]:
         # long-context decode: batch too small to shard; replicate activations,

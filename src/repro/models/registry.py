@@ -13,7 +13,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import encdec, transformer
 
 # Encoder memory length for enc-dec decode/prefill shapes (frames are the stubbed
-# frontend's output); documented in DESIGN.md.
+# frontend's output); documented in docs/DESIGN.md §Enc-dec memory length.
 ENC_LEN = 4096
 # Early-fusion image prefix length for VLM/early-fusion train shapes.
 IMG_PREFIX = 256

@@ -24,6 +24,15 @@ it with three stages:
    the backend supports it); dispatch and metric-fetch overhead is paid once
    per K rounds instead of once per round.
 
+The driver is workload-agnostic: any superstep of signature
+`superstep(state, batches) -> (state, metrics)` (batch leaves [K, ...],
+metric leaves stacked [K]) plugs in via `superstep_fn` — the nonconvex PCA
+track (`core.krasulina.build_krasulina_superstep`) rides the same splitter,
+prefetch ring, and governor as the LM trainer; when `superstep_fn` is omitted
+the trainer's `build_superstep(run_cfg, mesh)` is built here. `run_cfg` only
+needs `.stream` and `.averaging` (a full `RunConfig`, or a lightweight carrier
+like `configs.paper_pca.PCARunConfig`).
+
 Closing the loop, the driver times every superstep, inverts eq. 4 to get the
 *measured* R_p / R_e (`core.rates.measured_processing_rate`), and re-plans
 (B, mu) via `core.rates.replan` — so an under-provisioned run discards the mu
@@ -71,14 +80,17 @@ class StreamingDriver:
     the governor raise mu.
     """
 
-    def __init__(self, run_cfg: RunConfig, mesh, state: TrainState,
+    def __init__(self, run_cfg: RunConfig, mesh, state: Any,
                  sample_fn: Callable[[np.random.Generator, int], Dict[str, np.ndarray]],
-                 *, engine: EngineConfig = EngineConfig(),
+                 *, superstep_fn: Optional[Callable] = None,
+                 engine: EngineConfig = EngineConfig(),
                  batch: Optional[int] = None, horizon: Optional[float] = None,
                  n_nodes: Optional[int] = None, seed: int = 0,
                  clock: Callable[[], float] = time.perf_counter):
         if engine.superstep < 1:
             raise ValueError("superstep K must be >= 1")
+        if mesh is None and n_nodes is None:
+            raise ValueError("pass n_nodes when driving without a mesh")
         self.run_cfg = run_cfg
         self.mesh = mesh
         self.state = state
@@ -89,11 +101,13 @@ class StreamingDriver:
         self.pipeline = StreamingPipeline(
             sample_fn, run_cfg.stream, self.n_nodes, run_cfg.averaging.rounds,
             batch=batch, horizon=horizon, seed=seed)
-        superstep, _ = build_superstep(run_cfg, mesh, n_nodes=self.n_nodes)
-        # donation updates TrainState in place across supersteps; CPU lacks
+        if superstep_fn is None:  # default: the LM trainer's K-round scan
+            superstep_fn, _ = build_superstep(run_cfg, mesh,
+                                              n_nodes=self.n_nodes)
+        # donation updates the state in place across supersteps; CPU lacks
         # donation support and would only warn (see core.dsgd.jit_driver)
         donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
-        self._superstep = jax.jit(superstep, donate_argnums=donate)
+        self._superstep = jax.jit(superstep_fn, donate_argnums=donate)
         self._sharding = self._batch_sharding()
         self._prefetcher: Optional[DevicePrefetcher] = None
         self._supersteps_done = 0  # across run() calls (governor warm-up gate)

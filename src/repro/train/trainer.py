@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import RunConfig
 from repro.core.averaging import average_and_error, make_gossip_mix
+from repro.core.quantize import STOCHASTIC
 from repro.launch import sharding as shlib
 from repro.launch.mesh import data_axes, n_data_nodes
 from repro.models import registry
@@ -143,8 +144,17 @@ def build_train_step(run: RunConfig, mesh, *,
         # into one [N, D] buffer per dtype, the consensus engine and the
         # error diagnostic both run on that buffer — one pack per step,
         # one mixing pass per buffer instead of one chain per leaf
+        step_key = None
+        if run.averaging.quantization in STOCHASTIC:
+            # per-STEP base key for the stochastic compressor: fold the
+            # optimizer's step counter into the MixOp's static seed so a
+            # K-round superstep scan draws fresh per-round noise every round
+            # instead of replaying the seed-derived sequence (the MixOp still
+            # folds the round index in per consensus round)
+            t = jnp.reshape(state.opt.step, (-1,))[0]
+            step_key = jax.random.fold_in(jax.random.PRNGKey(mix.seed), t)
         mixed, cerr = average_and_error(grads, run.averaging, n_nodes=n_nodes,
-                                       pods=pods, mix=mix)
+                                       pods=pods, mix=mix, key=step_key)
         new_params, new_opt = jax.vmap(update)(mixed, state.opt, state.params)
         metrics = jax.tree.map(jnp.mean, metrics)
         metrics = dict(metrics, loss=jnp.mean(l), consensus_err=cerr)

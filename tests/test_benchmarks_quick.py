@@ -24,10 +24,12 @@ def test_run_quick_all_suites(tmp_path):
     assert artifact["failed"] == []
     names = [r["name"] for r in artifact["rows"]]
     # every suite contributed at least one row — including the packed,
-    # quantized, and compressor-accuracy consensus sub-suites (PR 3)
+    # quantized, and compressor-accuracy consensus sub-suites (PR 3) and the
+    # PCA engine sub-suites (PR 4)
     for prefix in ("fig5/", "fig6a/", "fig7a/", "fig9/", "consensus/",
                    "consensus/packed/", "consensus/quantized/",
-                   "consensus/quant_accuracy/", "kernel/", "pipeline/"):
+                   "consensus/quant_accuracy/", "kernel/", "pipeline/",
+                   "krasulina/fused/", "krasulina/gossip/"):
         assert any(n.startswith(prefix) for n in names), (prefix, names)
     # the engine rows carry machine-readable throughput
     pipe = [r for r in artifact["rows"] if r["name"].startswith("pipeline/")]
@@ -39,3 +41,10 @@ def test_run_quick_all_suites(tmp_path):
     acc = [r for r in artifact["rows"]
            if r["name"].startswith("consensus/quant_accuracy/")]
     assert acc and all("excess_risk=" in r["derived"] for r in acc)
+    # the PCA engine rows: fused xi+gossip carries its baseline + speedup,
+    # the gossip-vs-exact study carries the convergence metrics
+    kf = [r for r in artifact["rows"] if r["name"].startswith("krasulina/fused/")]
+    assert kf and all("speedup=" in r["derived"] for r in kf)
+    kg = [r for r in artifact["rows"] if r["name"].startswith("krasulina/gossip/")]
+    assert kg and all("excess_risk=" in r["derived"]
+                      and "consensus_err=" in r["derived"] for r in kg)

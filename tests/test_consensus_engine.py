@@ -367,3 +367,63 @@ def test_run_dsgd_fused_matches_unfused():
                             mix=mixing.dense_mix_op(A, 6, fuse=False), **kw)
     np.testing.assert_allclose(np.asarray(fused.w), np.asarray(unfused.w),
                                rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Per-step PRNG key for stochastic compressors (ROADMAP caveat (4) from PR 3)
+# ---------------------------------------------------------------------------
+
+def _stoch_mix(stats: str = "global"):
+    sched = mixing.schedule("ring", 4)
+    return mixing.circulant_mix_op(sched, 4, rounds=3,
+                                   quantization="int8_stoch", stats=stats,
+                                   seed=11)
+
+
+@pytest.mark.parametrize("stats", ["global", "segment", "tile"])
+def test_mix_op_per_step_key_overrides_static_seed(stats):
+    """key=None reproduces the seed-derived noise bit-identically (today's
+    static behavior); distinct per-step keys draw fresh per-round noise; and
+    passing the seed-derived key explicitly is the identity of the default."""
+    mix = _stoch_mix(stats)
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 96))
+    kw = {"seg_widths": (32, 64)} if stats == "segment" else {}
+    default = np.asarray(mix(x, **kw))
+    np.testing.assert_array_equal(default, np.asarray(mix(x, **kw)))
+    np.testing.assert_array_equal(
+        default, np.asarray(mix(x, key=jax.random.PRNGKey(mix.seed), **kw)))
+    stepped = np.asarray(mix(x, key=jax.random.PRNGKey(123), **kw))
+    assert not np.array_equal(default, stepped)
+    # still a consensus operator: column sums (the network average) preserved
+    # in expectation — sanity-check magnitudes stay comparable
+    np.testing.assert_allclose(stepped.mean(), default.mean(), atol=0.05)
+
+
+def test_mix_op_key_ignored_by_deterministic_compressors():
+    sched = mixing.schedule("ring", 4)
+    mix = mixing.circulant_mix_op(sched, 4, rounds=2, quantization="int8")
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 32))
+    np.testing.assert_array_equal(
+        np.asarray(mix(x)), np.asarray(mix(x, key=jax.random.PRNGKey(42))))
+
+
+def test_averaging_threads_per_step_key():
+    """`average_gradients(..., key=)` reaches the compressor: two steps with
+    different keys mix differently, key=None stays the static sequence (what
+    a lax.scan over steps used to replay every step)."""
+    cfg = AveragingConfig(mode="gossip", rounds=2, quantization="int8_stoch",
+                          quant_stats="segment")
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (4, 24)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (4, 8))}
+    mix = averaging.make_gossip_mix(cfg, 4)
+    k0, k1 = jax.random.PRNGKey(100), jax.random.PRNGKey(101)
+    s0 = averaging.average_gradients(tree, cfg, n_nodes=4, mix=mix, key=k0)
+    s0b = averaging.average_gradients(tree, cfg, n_nodes=4, mix=mix, key=k0)
+    s1 = averaging.average_gradients(tree, cfg, n_nodes=4, mix=mix, key=k1)
+    static = averaging.average_gradients(tree, cfg, n_nodes=4, mix=mix)
+    np.testing.assert_array_equal(np.asarray(s0["a"]), np.asarray(s0b["a"]))
+    assert not np.array_equal(np.asarray(s0["a"]), np.asarray(s1["a"]))
+    np.testing.assert_array_equal(
+        np.asarray(static["a"]),
+        np.asarray(averaging.average_gradients(tree, cfg, n_nodes=4,
+                                               mix=mix)["a"]))

@@ -1,0 +1,152 @@
+"""Tier-1 docs checks: the documentation system must not rot.
+
+* every relative markdown link in README.md, ROADMAP.md, and docs/*.md
+  resolves to an existing file, and every `#anchor` fragment matches a
+  heading in the target (GitHub slug rules)
+* every repo path cited in backticks in those files exists (absolute from
+  the repo root, or `src/repro/`-relative for module shorthand like
+  `core/mixing.py`)
+* every `docs/DESIGN.md §section` citation in the source tree points at a
+  real section heading, and no stale bare `DESIGN.md` reference (pointing
+  anywhere but docs/DESIGN.md) survives a move
+"""
+import glob
+import os
+import re
+
+HERE = os.path.dirname(__file__)
+ROOT = os.path.abspath(os.path.join(HERE, ".."))
+
+MD_FILES = sorted(
+    [os.path.join(ROOT, "README.md"), os.path.join(ROOT, "ROADMAP.md")]
+    + glob.glob(os.path.join(ROOT, "docs", "*.md")))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*$", re.MULTILINE)
+BACKTICK_RE = re.compile(r"`([^`\n]+)`")
+SECTION_REF_RE = re.compile(r"docs/DESIGN\.md\s+§([A-Za-z0-9_&\- ]+)")
+DESIGN_MENTION_RE = re.compile(r"[\w./-]*DESIGN\.md")
+
+
+def _read(path):
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+def _strip_code_blocks(text):
+    """Fenced code blocks are illustrative, not link/citation surface."""
+    return re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+
+
+def _slug(heading):
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->hyphens."""
+    h = re.sub(r"[^\w\- ]", "", heading.lower())
+    return h.replace(" ", "-")
+
+
+def _headings(md_path):
+    return [m.group(1) for m in HEADING_RE.finditer(_read(md_path))]
+
+
+def test_docs_exist():
+    for p in MD_FILES:
+        assert os.path.isfile(p), f"missing doc: {p}"
+    assert any(p.endswith("DESIGN.md") for p in MD_FILES)
+
+
+def test_relative_links_and_anchors_resolve():
+    problems = []
+    for md in MD_FILES:
+        base = os.path.dirname(md)
+        for target in LINK_RE.findall(_strip_code_blocks(_read(md))):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path, _, frag = target.partition("#")
+            dest = md if not path else os.path.normpath(
+                os.path.join(base, path))
+            if not os.path.exists(dest):
+                problems.append(f"{os.path.relpath(md, ROOT)}: dead link "
+                                f"{target!r} -> {os.path.relpath(dest, ROOT)}")
+                continue
+            if frag:
+                if not dest.endswith(".md"):
+                    problems.append(f"{os.path.relpath(md, ROOT)}: fragment "
+                                    f"on non-markdown target {target!r}")
+                    continue
+                slugs = {_slug(h) for h in _headings(dest)}
+                if frag not in slugs:
+                    problems.append(
+                        f"{os.path.relpath(md, ROOT)}: anchor {target!r} not "
+                        f"among headings of {os.path.relpath(dest, ROOT)}: "
+                        f"{sorted(slugs)}")
+    assert not problems, "\n".join(problems)
+
+
+def _cited_path_candidates(text):
+    """Backticked tokens that claim to be repo paths."""
+    for tok in BACKTICK_RE.findall(text):
+        tok = tok.split()[0].split(":")[0].rstrip(".,;")
+        if not tok or "*" in tok or tok.startswith(("-", "--", "/")):
+            continue
+        top = tok.split("/")[0]
+        rooted = top in ("src", "docs", "benchmarks", "examples", "tests")
+        # bare `a/b/` tokens are row-name prefixes etc., not paths — only
+        # file-extension tokens (or tokens rooted at a repo dir) are claims
+        pathlike = "/" in tok and tok.endswith((".py", ".md", ".json"))
+        if rooted or pathlike:
+            yield tok
+
+
+def test_cited_repo_paths_exist():
+    problems = []
+    for md in MD_FILES:
+        for tok in _cited_path_candidates(_strip_code_blocks(_read(md))):
+            cands = [os.path.join(ROOT, tok),
+                     os.path.join(ROOT, "src", "repro", tok)]
+            if not any(os.path.exists(c) for c in cands):
+                problems.append(f"{os.path.relpath(md, ROOT)}: cited path "
+                                f"`{tok}` does not exist")
+    assert not problems, "\n".join(problems)
+
+
+def _source_files():
+    out = []
+    for pat in ("src/**/*.py", "benchmarks/*.py", "examples/*.py",
+                "tests/*.py"):
+        out.extend(glob.glob(os.path.join(ROOT, pat), recursive=True))
+    return sorted(out)
+
+
+def test_design_md_citations_point_at_real_sections():
+    design = os.path.join(ROOT, "docs", "DESIGN.md")
+    slugs = {_slug(h) for h in _headings(design)}
+    problems = []
+    cited = 0
+    for src in _source_files():
+        if os.path.abspath(src) == os.path.abspath(__file__):
+            continue  # this file's docstring describes the citation format
+        text = _read(src)
+        for m in SECTION_REF_RE.finditer(text):
+            cited += 1
+            section = m.group(1).strip()
+            if _slug(section) not in slugs:
+                problems.append(f"{os.path.relpath(src, ROOT)}: cites "
+                                f"docs/DESIGN.md §{section} but DESIGN.md has "
+                                f"no such heading")
+    assert cited >= 4, "expected the four known §-citations to be present"
+    assert not problems, "\n".join(problems)
+
+
+def test_no_stale_design_md_references():
+    """Every DESIGN.md mention in the source tree must use the real path —
+    a bare `DESIGN.md` (the pre-docs-system spelling) is a dead pointer."""
+    problems = []
+    for src in _source_files():
+        if os.path.abspath(src) == os.path.abspath(__file__):
+            continue
+        for m in DESIGN_MENTION_RE.finditer(_read(src)):
+            if m.group(0) != "docs/DESIGN.md":
+                problems.append(
+                    f"{os.path.relpath(src, ROOT)}: stale reference "
+                    f"{m.group(0)!r} (use docs/DESIGN.md)")
+    assert not problems, "\n".join(problems)

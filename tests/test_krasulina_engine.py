@@ -1,0 +1,293 @@
+"""The PCA track on the consensus + streaming engine (PR 4):
+
+* gossip-averaged D-Krasulina converges to the exact-averaging oracle as the
+  consensus tightens (R large => per-node iterates match `jnp.mean` step 6
+  within tolerance) on the Fig. 7 config
+* the fused xi+gossip kernel (Pallas, interpret mode here) matches the strict
+  per-round XLA oracle, including ragged-d padding
+* the K-round Krasulina superstep is exactly K sequential rounds, and the
+  closed-loop governor raises mu on the PCA workload under a fake slow clock
+* Theorem 5 stepsize/Q sanity on the Fig. 7 constants
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AveragingConfig, StreamConfig
+from repro.configs.paper_pca import FIG7, PCARunConfig
+from repro.core import krasulina, mixing, problems, rates
+from repro.data.synthetic import make_pca_host_sampler, make_pca_stream
+from repro.kernels import ops, ref
+from repro.train.driver import EngineConfig, StreamingDriver
+
+
+def _fig7_setup(seed=0):
+    stream = make_pca_stream(FIG7)
+    metric = lambda w: problems.pca_excess_risk(w, stream.cov, stream.lambda1)
+    w0 = jax.random.normal(jax.random.PRNGKey(seed), (FIG7.dim,))
+    return stream, metric, w0 / jnp.linalg.norm(w0)
+
+
+# ---------------------------------------------------------------------------
+# Gossip vs exact oracle
+# ---------------------------------------------------------------------------
+
+def test_gossip_tracks_exact_oracle_with_tight_consensus():
+    """R large enough that A^R ~ 1/N 11^T: the gossip trajectory must match
+    the exact-averaging oracle (Fig. 7 config) within float tolerance, and
+    the oracle itself is the `averaging=None` path of the same family."""
+    stream, metric, w0 = _fig7_setup()
+    N, B, steps = 4, 100, 300
+    step = lambda t: 10.0 / t
+    exact = krasulina.run_dm_krasulina(stream.draw, w0, N=N, B=B, steps=steps,
+                                       stepsize=step, trace_metric=metric)
+    # ring on N=4: lambda_2 = 1/3, so R=12 contracts disagreement by ~2e-6
+    gossip = krasulina.run_d_krasulina(
+        stream.draw, w0, N=N, B=B, steps=steps, stepsize=step,
+        averaging=AveragingConfig(mode="gossip", rounds=12),
+        trace_metric=metric)
+    np.testing.assert_allclose(np.asarray(gossip.w), np.asarray(exact.w),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gossip.trace_metric[-1]),
+                               np.asarray(exact.trace_metric[-1]),
+                               rtol=1e-2, atol=1e-4)
+    # per-node iterates are in near-consensus
+    spread = float(jnp.max(jnp.abs(gossip.w_nodes - gossip.w[None])))
+    assert spread < 1e-3, spread
+    # and both found the top eigenvector
+    assert float(exact.trace_metric[-1]) < 1e-2
+    assert float(gossip.trace_metric[-1]) < 1e-2
+
+
+def test_gossip_loose_consensus_still_converges_with_spread():
+    """R=1 on a ring leaves visible node disagreement (the paper's inexact
+    regime) but the node-mean iterate still converges."""
+    stream, metric, w0 = _fig7_setup()
+    res = krasulina.run_d_krasulina(
+        stream.draw, w0, N=8, B=80, steps=600, stepsize=lambda t: 10.0 / t,
+        averaging=AveragingConfig(mode="gossip", rounds=1),
+        trace_metric=metric)
+    spread = float(jnp.max(jnp.linalg.norm(res.w_nodes - res.w[None], axis=1)))
+    assert spread > 1e-6  # inexact averaging is live
+    assert float(res.trace_metric[-1]) < 5e-2
+
+
+def test_exact_path_is_mean_oracle_shape_contract():
+    stream, metric, w0 = _fig7_setup()
+    res = krasulina.run_d_krasulina(stream.draw, w0, N=5, B=50, steps=10,
+                                    stepsize=lambda t: 10.0 / t,
+                                    trace_metric=metric)
+    assert res.w_nodes.shape == (5, FIG7.dim)
+    # exact mode: every node carries the shared iterate
+    np.testing.assert_array_equal(np.asarray(res.w_nodes),
+                                  np.tile(np.asarray(res.w)[None], (5, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Fused xi+gossip kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,Bn,d,R,block_d", [
+    (4, 2, 32, 1, 32),
+    (8, 4, 70, 3, 32),   # ragged d: pad columns must stay inert
+    (8, 3, 256, 8, 64),
+])
+def test_xi_gossip_kernel_matches_per_round_oracle(N, Bn, d, R, block_d):
+    w = jax.random.normal(jax.random.PRNGKey(0), (N, d))
+    z = jax.random.normal(jax.random.PRNGKey(1), (N, Bn, d))
+    sched = mixing.schedule("ring", N)
+    oracle = ref.gossip_mix_ref(jax.vmap(ref.krasulina_xi_ref)(w, z), sched, R)
+    from repro.kernels.krasulina_update import krasulina_xi_gossip_pallas
+    shifts = tuple(s for s, _ in sched)
+    weights = tuple(wt for _, wt in sched)
+    kern = krasulina_xi_gossip_pallas(w, z, shifts, weights, R,
+                                      block_d=block_d, interpret=True)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-5)
+    # the dispatching wrapper's XLA path (composed schedule) agrees too
+    xla = ops.krasulina_xi_gossip(w, z, sched, R)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_xi_gossip_zero_rounds_is_plain_xi():
+    w = jax.random.normal(jax.random.PRNGKey(2), (4, 16))
+    z = jax.random.normal(jax.random.PRNGKey(3), (4, 3, 16))
+    sched = mixing.schedule("ring", 4)
+    got = ops.krasulina_xi_gossip(w, z, sched, 0)
+    want = jax.vmap(ref.krasulina_xi_ref)(w, z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_run_d_krasulina_fused_matches_mix_path():
+    """fuse_xi=True (the combined kernel's dispatch path) and fuse_xi=False
+    (MixOp over vmap'd xi) are the same algorithm."""
+    stream, metric, w0 = _fig7_setup()
+    avg = AveragingConfig(mode="gossip", rounds=4)
+    kw = dict(N=4, B=40, steps=50, stepsize=lambda t: 10.0 / t,
+              averaging=avg, trace_metric=metric, seed=9)
+    a = krasulina.run_d_krasulina(stream.draw, w0, fuse_xi=True, **kw)
+    b = krasulina.run_d_krasulina(stream.draw, w0, fuse_xi=False, **kw)
+    np.testing.assert_allclose(np.asarray(a.w_nodes), np.asarray(b.w_nodes),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_run_d_krasulina_rejects_hierarchical():
+    """Pod-structured averaging needs a mesh; the PCA track must refuse it
+    instead of silently running flat gossip."""
+    stream, metric, w0 = _fig7_setup()
+    avg = AveragingConfig(mode="hierarchical", rounds=2)
+    with pytest.raises(ValueError, match="exact|gossip"):
+        krasulina.run_d_krasulina(stream.draw, w0, N=4, B=40, steps=2,
+                                  stepsize=lambda t: 1.0 / t, averaging=avg)
+    with pytest.raises(ValueError, match="exact|gossip"):
+        krasulina.build_krasulina_superstep(avg, 4, lambda t: 1.0 / t)
+
+
+def test_run_d_krasulina_stochastic_noise_fresh_per_step():
+    """int8_stoch gossip must not replay the same per-round noise every scan
+    step: with the round counter folded into the key, two consecutive rounds
+    fed IDENTICAL samples produce different mixed updates."""
+    avg = AveragingConfig(mode="gossip", rounds=2, quantization="int8_stoch")
+    mix = krasulina.make_gossip_mix(avg, 4)
+    w = jax.random.normal(jax.random.PRNGKey(0), (4, 10))
+    z = jax.random.normal(jax.random.PRNGKey(1), (4, 5, 10))
+    h1 = krasulina._gossip_xi(w, z, mix, False, jnp.asarray(1))
+    h1b = krasulina._gossip_xi(w, z, mix, False, jnp.asarray(1))
+    h2 = krasulina._gossip_xi(w, z, mix, False, jnp.asarray(2))
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h1b))
+    assert not np.array_equal(np.asarray(h1), np.asarray(h2))
+
+
+def test_run_d_krasulina_quantized_gossip_runs():
+    """Quantized consensus (Section VI) composes with the PCA track; the
+    combined kernel must refuse to fuse (nonlinear compressor)."""
+    stream, metric, w0 = _fig7_setup()
+    avg = AveragingConfig(mode="gossip", rounds=4, quantization="sign")
+    mix = krasulina.make_gossip_mix(avg, 4)
+    assert krasulina._resolve_fuse_xi(mix, None) is False
+    res = krasulina.run_d_krasulina(
+        stream.draw, w0, N=4, B=40, steps=200, stepsize=lambda t: 10.0 / t,
+        averaging=avg, trace_metric=metric)
+    assert np.isfinite(float(res.trace_metric[-1]))
+    assert float(res.trace_metric[-1]) < float(res.trace_metric[0])
+
+
+# ---------------------------------------------------------------------------
+# Superstep + driver integration
+# ---------------------------------------------------------------------------
+
+def test_krasulina_superstep_equals_sequential_rounds():
+    """One K-round superstep == K sequential round_fn applications (gossip
+    mode, explicit batches)."""
+    stream, metric, w0 = _fig7_setup()
+    N, Bn, K = 4, 5, 3
+    avg = AveragingConfig(mode="gossip", rounds=4)
+    superstep = krasulina.build_krasulina_superstep(
+        avg, N, lambda t: 10.0 / t, metric=metric)
+    state0 = krasulina.init_krasulina_state(w0, avg, N)
+    rng = np.random.default_rng(0)
+    batches = {"z": jnp.asarray(
+        rng.standard_normal((K, N, Bn, FIG7.dim)).astype(np.float32))}
+    sup_state, ms = jax.jit(superstep)(state0, batches)
+
+    seq_state = state0
+    seq_metrics = []
+    for k in range(K):
+        seq_state, m = superstep(
+            seq_state, {"z": batches["z"][k:k + 1]})
+        seq_metrics.append(float(m["metric"][0]))
+    assert int(sup_state.t) == K == int(seq_state.t)
+    np.testing.assert_allclose(np.asarray(sup_state.w),
+                               np.asarray(seq_state.w), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ms["metric"]),
+                               np.asarray(seq_metrics), rtol=1e-5, atol=1e-6)
+    assert ms["metric"].shape == (K,) == ms["consensus_err"].shape
+
+
+class _FakeClock:
+    def __init__(self, dt):
+        self.t, self.dt = 0.0, dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+@pytest.mark.parametrize("dt,expect_discard", [(1e-4, False), (50.0, True)])
+def test_pca_driver_governor_adapts_mu(dt, expect_discard):
+    """The closed-loop governor provisions the PCA stream exactly as it does
+    logreg: a fake slow clock must push the plan into the under-provisioned
+    regime (mu > 0, Theorem 5's discard knob) while B stays shape-stable."""
+    stream, metric, w0 = _fig7_setup()
+    run_cfg = PCARunConfig(
+        pca=FIG7, averaging=AveragingConfig(mode="gossip", rounds=2),
+        stream=StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                            comms_rate=1e6))
+    N = 4
+    superstep = krasulina.build_krasulina_superstep(
+        run_cfg.averaging, N, lambda t: 10.0 / t, metric=metric)
+    state = krasulina.init_krasulina_state(w0, run_cfg.averaging, N)
+    driver = StreamingDriver(
+        run_cfg, None, state, make_pca_host_sampler(stream),
+        superstep_fn=superstep, n_nodes=N, batch=100,
+        engine=EngineConfig(superstep=2, prefetch_depth=0, replan_every=1,
+                            warmup_supersteps=0),
+        clock=_FakeClock(dt))
+    assert driver.pipeline.plan.mu == 0
+    _, history = driver.run(3)
+    assert len(history) == 3
+    assert all(np.isfinite(rec["metrics"]["metric"]) for rec in history)
+    if expect_discard:
+        assert driver.pipeline.plan.mu > 0
+        assert driver.pipeline.plan.regime == "under-provisioned"
+        assert driver.pipeline.plan.B == 100  # shape-stable adaptation
+        assert driver.pipeline.samples_discarded > 0
+    else:
+        assert driver.pipeline.plan.mu == 0
+        assert driver.pipeline.samples_discarded == 0
+
+
+def test_pca_driver_with_prefetch_converges():
+    """End-to-end: prefetch ring + K-round superstep reduce the Fig. 7
+    excess risk; counters stay coherent with the consumed rounds."""
+    stream, metric, w0 = _fig7_setup()
+    run_cfg = PCARunConfig(averaging=AveragingConfig(mode="gossip", rounds=4))
+    N, K = 4, 4
+    superstep = krasulina.build_krasulina_superstep(
+        run_cfg.averaging, N, lambda t: 10.0 / t, metric=metric)
+    state = krasulina.init_krasulina_state(w0, run_cfg.averaging, N)
+    with StreamingDriver(run_cfg, None, state, make_pca_host_sampler(stream),
+                         superstep_fn=superstep, n_nodes=N, batch=100,
+                         engine=EngineConfig(superstep=K, prefetch_depth=2,
+                                             replan_every=0)) as driver:
+        final, history = driver.run(15)
+    assert [rec["round"] for rec in history] == [K * (i + 1) for i in range(15)]
+    assert history[-1]["counters"].samples_consumed == 15 * K * 100
+    assert int(final.t) == 15 * K
+    assert history[-1]["metrics"]["metric"] < history[0]["metrics"]["metric"]
+    assert history[-1]["metrics"]["metric"] < 5e-2
+
+
+# ---------------------------------------------------------------------------
+# Theorem 5 constants
+# ---------------------------------------------------------------------------
+
+def test_theorem5_Q_and_stepsize_sanity_fig7():
+    """eq. 22 on the Fig. 7 constants: Q is finite, positive, monotone in the
+    problem hardness (d, kappa=lambda1/gap, sigma_B^2), and the resulting
+    c/(Q+t) schedule is decreasing with eta_1 << gap (the regime Theorem 5's
+    induction needs)."""
+    kappa = FIG7.lambda1 / FIG7.eigengap
+    c = 10.0  # the c0 > 2 constant the experiments use
+    Q = krasulina.theorem5_Q(FIG7.dim, kappa, sigma_B2=1.0, c=c)
+    assert np.isfinite(Q) and Q > 0
+    assert krasulina.theorem5_Q(2 * FIG7.dim, kappa, 1.0, c) > Q
+    assert krasulina.theorem5_Q(FIG7.dim, 2 * kappa, 1.0, c) > Q
+    assert krasulina.theorem5_Q(FIG7.dim, kappa, 2.0, c) > Q
+    etas = [rates.krasulina_stepsize(t, c, Q) for t in (1, 10, 100, 10_000)]
+    assert all(a > b for a, b in zip(etas, etas[1:]))  # decreasing
+    assert etas[0] == pytest.approx(c / (Q + 1))
+    assert etas[0] < FIG7.eigengap  # theory-scale Q keeps eta_1 tiny
