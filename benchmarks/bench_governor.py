@@ -1,0 +1,173 @@
+"""Adaptive-B governor benchmark (docs/DESIGN.md §Adaptive batch buckets):
+what a bucket switch actually costs on the streaming engine.
+
+* cold switch  -- the governor moves B to a bucket visited for the first
+                  time: the superstep pays one XLA retrace (the lazy
+                  per-bucket compile), which is why the driver's warm-up gate
+                  excludes it from replan input
+* warm switch  -- steady state: the target bucket's executable already
+                  exists, so the switch is a plan swap only — the timed
+                  superstep must run at cached-dispatch speed with ZERO
+                  retraces (trace-counted, not inferred from timing)
+* estimator    -- the online least-squares (R_p, R_c) fit against a
+                  synthetic eq.-4 ground truth: the committed artifact
+                  records the R_c recovery error (contract: within 20%)
+* replan_us    -- host-side cost of one governor decision (observed-rate
+                  fit + bucket selection + plan), the per-superstep
+                  overhead the closed loop adds to the driver
+
+Contract rows (asserted in BOTH quick and full mode — they are
+deterministic counts, not timings): steady-state switches must retrace
+zero times, and the estimator must land within 20% of ground truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config, reduced
+from repro.configs.base import (AveragingConfig, GovernorConfig, RunConfig,
+                                SHAPES, StreamConfig)
+from repro.core import rates
+from repro.data.lm import MarkovTokenStream
+from repro.launch.mesh import make_mesh
+from repro.launch.sharding import activation_rules
+from repro.models.common import mesh_rules
+from repro.train.driver import EngineConfig, StreamingDriver
+from repro.train.trainer import build_superstep, init_state
+
+SEQ = 16
+
+
+def _run_cfg() -> RunConfig:
+    cfg = dataclasses.replace(
+        reduced(get_config("granite-8b"), layers=1, d_model=16), vocab_size=32,
+        d_ff=32)
+    return RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                     averaging=AveragingConfig("exact", 1),
+                     optimizer="adam", learning_rate=1e-3,
+                     param_dtype="float32", remat=False)
+
+
+def _sample_fn(vocab: int):
+    data = MarkovTokenStream(vocab, seed=0)
+
+    def draw(rng: np.random.Generator, n: int):
+        toks = data.sample(rng, n, SEQ + 1)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    return draw
+
+
+def _switch_to(driver: StreamingDriver, B: int) -> None:
+    """Manual plan swap to bucket B (replan_every=0 keeps the loop open so
+    the benchmark controls exactly when switches happen)."""
+    driver.pipeline.update_plan(dataclasses.replace(driver.pipeline.plan, B=B))
+
+
+def _timed_superstep(driver: StreamingDriver) -> float:
+    t0 = time.perf_counter()
+    driver.run(1)
+    return time.perf_counter() - t0
+
+
+def _bench_switches(quick: bool) -> None:
+    buckets = (4, 8) if quick else (4, 8, 16)
+    cycles = 1 if quick else 3
+    run_cfg = _run_cfg()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    traces = []
+    with mesh_rules(mesh, activation_rules(mesh, run_cfg.shape)):
+        state = init_state(run_cfg, jax.random.PRNGKey(0))
+        base, _ = build_superstep(run_cfg, mesh)
+
+        def builder(B):
+            def counted(s, b):
+                traces.append(B)  # executes once per jit trace, not per call
+                return base(s, b)
+            return counted
+
+        gov = GovernorConfig(buckets=buckets, estimate_rates=False)
+        with StreamingDriver(
+                run_cfg, mesh, state, _sample_fn(run_cfg.model.vocab_size),
+                superstep_builder=builder, batch=buckets[0],
+                engine=EngineConfig(superstep=2, prefetch_depth=0,
+                                    replan_every=0, governor=gov)) as driver:
+            driver.run(2)  # initial-signature compiles (fresh + committed)
+            cold = {}
+            for b in buckets[1:]:
+                _switch_to(driver, b)
+                cold[b] = _timed_superstep(driver)  # pays the bucket's trace
+                emit(f"governor/cold_switch/B{b}", cold[b] * 1e6,
+                     "retraces=1")
+            traces_before = len(traces)
+            warm = {b: float("inf") for b in buckets}
+            switches = 0
+            for _ in range(cycles):
+                for b in buckets:  # revisit every bucket, already compiled
+                    if driver.pipeline.plan.B == b:
+                        continue
+                    _switch_to(driver, b)
+                    switches += 1
+                    warm[b] = min(warm[b], _timed_superstep(driver))
+            retraces = len(traces) - traces_before
+            for b, t in sorted(warm.items()):
+                if t == float("inf"):
+                    continue
+                extra = (f";speedup_vs_cold={cold[b] / t:.1f}x"
+                         if b in cold else "")
+                emit(f"governor/warm_switch/B{b}", t * 1e6,
+                     f"retraces=0{extra}")
+            emit("governor/steady_state", 0.0,
+                 f"retraces={retraces};switches={switches};"
+                 f"compiled_buckets={len(driver.compiled_buckets)}")
+            # the whole point of the ladder: switching between registered
+            # buckets never recompiles (deterministic count — asserted in
+            # quick mode too)
+            assert retraces == 0, (
+                "steady-state bucket switch retraced", retraces, traces)
+            if not quick:
+                worst = max(cold[b] / warm[b] for b in cold
+                            if warm[b] != float("inf"))
+                assert worst >= 5.0, (
+                    "warm switch should be far cheaper than a cold compile",
+                    cold, warm)
+
+
+def _bench_estimator(quick: bool) -> None:
+    N, R = 4, 8
+    Rp_true, Rc_true = 1e5, 2e3
+    est = rates.RoundTimeEstimator(N, R, window=64)
+    rng = np.random.default_rng(0)
+    rounds = 4 if quick else 16
+    for _ in range(rounds):
+        for B in (32, 64, 128, 256):
+            truth = B / (N * Rp_true) + R / Rc_true
+            est.observe(B, truth * (1.0 + 0.02 * rng.normal()))
+    got = est.estimate()
+    err = abs(got.Rc - Rc_true) / Rc_true * 100
+    emit("governor/estimator", 0.0,
+         f"est_Rc={got.Rc:.1f};true_Rc={Rc_true:.1f};err_pct={err:.2f};"
+         f"est_Rp={got.Rp:.1f};true_Rp={Rp_true:.1f}")
+    assert err <= 20.0, ("online R_c estimate out of tolerance", got)
+
+    # host-side cost of one full governor decision
+    stream = StreamConfig(streaming_rate=1e4, processing_rate=1e5,
+                          comms_rate=1e3)
+    ladder = rates.BucketLadder((32, 64, 128, 256))
+
+    def decide():
+        e = est.estimate()
+        return rates.replan(stream, N, R, 64, 1e-3, ladder=ladder, estimate=e)
+
+    us = time_fn(decide, warmup=2, iters=5)
+    emit("governor/replan_us", us, f"buckets={len(ladder)}")
+
+
+def run(quick: bool = False) -> None:
+    _bench_switches(quick)
+    _bench_estimator(quick)

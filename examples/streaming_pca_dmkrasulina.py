@@ -9,7 +9,7 @@ Run:  PYTHONPATH=src python examples/streaming_pca_dmkrasulina.py
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AveragingConfig, StreamConfig
+from repro.configs.base import AveragingConfig, GovernorConfig, StreamConfig
 from repro.configs.paper_pca import FIG7, PCARunConfig
 from repro.core import krasulina, problems
 from repro.data.synthetic import make_pca_host_sampler, make_pca_stream
@@ -47,19 +47,40 @@ for avg in (None,
 
 # the full streaming engine on the PCA workload: the governed splitter deals
 # B samples per round, the prefetch ring stages {"z"} batches, the K-round
-# superstep scans on device, and the governor re-plans mu from measured rates
+# superstep scans on device, and the ADAPTIVE governor re-plans (B, mu) from
+# measured rates — B moves between pre-compiled buckets (plan swap, zero
+# retrace) while the online estimator closes the loop on R_c
+# (docs/DESIGN.md §Adaptive batch buckets)
 run_cfg = PCARunConfig(
     pca=FIG7, averaging=AveragingConfig(mode="gossip", rounds=4),
     stream=StreamConfig(streaming_rate=1e4, processing_rate=1e6,
                         comms_rate=1e6))
 N = 10
-superstep = krasulina.build_krasulina_superstep(
+builder = krasulina.krasulina_superstep_builder(
     run_cfg.averaging, N, lambda t: 10.0 / t, metric=metric)
 state = krasulina.init_krasulina_state(w0, run_cfg.averaging, N)
+gov = GovernorConfig(buckets=(50, 100, 200), hysteresis=2)
 with StreamingDriver(run_cfg, None, state, make_pca_host_sampler(stream),
-                     superstep_fn=superstep, n_nodes=N, batch=100,
-                     engine=EngineConfig(superstep=8, prefetch_depth=2)) as drv:
+                     superstep_builder=builder, n_nodes=N, batch=100,
+                     engine=EngineConfig(superstep=8, prefetch_depth=2,
+                                         governor=gov)) as drv:
     state, history = drv.run(25)
+    print("driver (gossip R=4, K=8) governor decisions:")
+    for rec in history:
+        decision = ""
+        if "bucket_switch" in rec:
+            a, b = rec["bucket_switch"]
+            decision += f"  SWITCH B:{a}->{b}"
+        if "est_Rc" in rec:
+            rc = rec["est_Rc"]
+            decision += "  est_Rc=inf" if rc <= 0 else f"  est_Rc={rc:.3g}"
+        if rec["superstep"] % 8 == 0 or decision:
+            p = rec.get("replanned", rec["plan"])
+            print(f"  superstep {rec['superstep']:3d}  B={rec['bucket']:4d} "
+                  f"mu={p.mu:4d} {p.regime:17s} "
+                  f"excess risk={rec['metrics']['metric']:.4f}{decision}")
+    print(f"  buckets compiled: {list(drv.compiled_buckets)} "
+          f"(ladder {list(drv.ladder.buckets)})")
 first, last = history[0], history[-1]
 print(f"driver (gossip R=4, K=8): excess risk "
       f"{first['metrics']['metric']:.4f} -> {last['metrics']['metric']:.4f}, "

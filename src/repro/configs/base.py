@@ -247,6 +247,32 @@ class StreamConfig:
 
 
 @dataclass(frozen=True)
+class GovernorConfig:
+    """Closed-loop governor knobs beyond the per-round rate model: the
+    adaptive-B bucket ladder and the online (R_p, R_c) estimator
+    (docs/DESIGN.md §Adaptive batch buckets).
+
+    The network mini-batch B may only move between *registered* buckets —
+    each one a multiple of N with a pre-compiled superstep — so a re-plan
+    costs a plan swap, never a retrace. `n_buckets=1` with no explicit
+    `buckets` pins B (the pre-ladder governor: only mu adapts).
+    """
+
+    # explicit B ladder (each a multiple of the node count); () -> auto
+    buckets: Tuple[int, ...] = ()
+    # auto-ladder size around the planned B when `buckets` is not given
+    n_buckets: int = 1
+    bucket_factor: int = 2  # geometric spacing of the auto ladder
+    # consecutive re-plans that must agree on a new bucket before the switch
+    # (timing jitter must not thrash the ladder)
+    hysteresis: int = 2
+    # fit (R_p, R_c) online by least squares over observed (B, round-time)
+    # pairs instead of trusting the config's comms_rate when inverting eq. 4
+    estimate_rates: bool = True
+    window: int = 64  # estimator observation window (supersteps)
+
+
+@dataclass(frozen=True)
 class RunConfig:
     model: ModelConfig
     shape: ShapeConfig

@@ -240,6 +240,29 @@ def build_krasulina_superstep(averaging: AveragingConfig, n_nodes: int,
     return superstep
 
 
+def krasulina_superstep_builder(averaging: AveragingConfig, n_nodes: int,
+                                stepsize: Callable, *,
+                                metric: Optional[Callable] = None,
+                                mix: Optional[CirculantMixOp] = None,
+                                fuse_xi: Optional[bool] = None,
+                                ) -> Callable[[int], Callable]:
+    """Bucket-keyed PCA superstep factory for the adaptive-B governor: the
+    counterpart of `train.trainer.superstep_builder`, consumable as
+    `StreamingDriver(superstep_builder=...)`. The K-round scan derives every
+    shape (K, the per-node share B/N) from its batch at trace time, so one
+    closure serves all buckets; the MixOp consensus engine is built once
+    here, and the driver compiles one executable per registered bucket
+    (docs/DESIGN.md §Adaptive batch buckets)."""
+    superstep = build_krasulina_superstep(averaging, n_nodes, stepsize,
+                                          metric=metric, mix=mix,
+                                          fuse_xi=fuse_xi)
+
+    def build(B: int) -> Callable:
+        return superstep
+
+    return build
+
+
 def theorem5_Q(d: int, kappa: float, sigma_B2: float, c: float, delta: float = 0.25):
     """Q1 + Q2 from Theorem 5 (eq. 22) — the stepsize offset."""
     import math

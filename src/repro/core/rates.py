@@ -7,13 +7,22 @@ N nodes — and the provisioning planner implied by Theorems 4-7.
 
 A system keeps up with the stream iff R_s <= B*R_e; otherwise it must discard
 mu = R_s/R_e - B samples per round (Algorithms 1-2, steps 9-10).
+
+The closed-loop half of the module feeds the streaming driver's governor
+(docs/DESIGN.md §Adaptive batch buckets): `BucketLadder` registers the B
+values the plan may move between (each with a pre-compiled superstep),
+`RoundTimeEstimator` decomposes round times observed at different buckets
+into a running (R_p, R_c) estimate by least squares, and `replan` /
+`checked_plan_swap` re-derive and validate the (B, mu) plan from those
+measured rates.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+from collections import deque
 from dataclasses import dataclass
-from typing import Optional
+from typing import Deque, Optional, Tuple
 
 from repro.configs.base import StreamConfig
 
@@ -67,9 +76,7 @@ def plan(stream: StreamConfig, N: int, R: int, *, B: Optional[int] = None,
         B = max(N, math.ceil(Rs * _comm_time(R, Rc) / denom))
         B = ((B + N - 1) // N) * N  # B must split evenly across nodes
     if horizon_samples:
-        ceiling = max(N, int(math.sqrt(horizon_samples)))
-        ceiling = (ceiling // N) * N or N
-        B = min(B, ceiling)
+        B = min(B, horizon_ceiling(N, horizon_samples))
     if stream.forced_mu >= 0:
         mu = stream.forced_mu
     else:
@@ -77,6 +84,168 @@ def plan(stream: StreamConfig, N: int, R: int, *, B: Optional[int] = None,
     Re = effective_rate(B, N, R, Rp, Rc)
     return Plan(B=B, mu=mu, R=R,
                 Re=Re, regime="resourceful" if mu == 0 else "under-provisioned")
+
+
+def horizon_ceiling(N: int, horizon_samples: float) -> int:
+    """Theorem 4's order-optimality ceiling B <= sqrt(t'), rounded down to a
+    multiple of N (and never below N)."""
+    ceiling = max(N, int(math.sqrt(horizon_samples)))
+    return (ceiling // N) * N or N
+
+
+@dataclass(frozen=True)
+class BucketLadder:
+    """The registered network mini-batch sizes the governor may plan between
+    (docs/DESIGN.md §Adaptive batch buckets).
+
+    Each bucket's superstep is compiled (lazily, once) by the streaming
+    driver, so a plan swap between registered buckets never retraces; an
+    unregistered B is rejected at `checked_plan_swap`. Buckets are ascending,
+    distinct multiples of N, and — when a sample horizon is known — clipped
+    to Theorem 4's B <= sqrt(t') ceiling.
+    """
+
+    buckets: Tuple[int, ...]
+
+    def __post_init__(self):
+        if not self.buckets:
+            raise ValueError("a BucketLadder needs at least one bucket")
+        if list(self.buckets) != sorted(set(self.buckets)):
+            raise ValueError(f"buckets must be ascending and distinct: "
+                             f"{self.buckets}")
+        if self.buckets[0] < 1:
+            raise ValueError(f"buckets must be positive: {self.buckets}")
+
+    def __len__(self) -> int:
+        return len(self.buckets)
+
+    def __contains__(self, B: int) -> bool:
+        return B in self.buckets
+
+    def snap(self, B: int) -> int:
+        """Smallest registered bucket >= B (the keep-up direction), or the
+        largest bucket when B exceeds the ladder."""
+        for b in self.buckets:
+            if b >= B:
+                return b
+        return self.buckets[-1]
+
+    @classmethod
+    def from_buckets(cls, raw, N: int, *,
+                     horizon_samples: Optional[float] = None) -> "BucketLadder":
+        """Normalize arbitrary candidate buckets into a valid ladder: each
+        rounded up to a multiple of N (never below N), clipped to the
+        Theorem-4 sqrt-horizon ceiling (itself a multiple of N — candidates
+        above it collapse onto the ceiling, the largest order-optimal B),
+        then deduped/sorted. Guarantees every registered bucket survives
+        `plan`'s horizon clip unchanged, so a plan at a registered bucket
+        can never be clipped to an unregistered value mid-run."""
+        cand = {max(N, -(-int(c) // N) * N) for c in raw}
+        if horizon_samples:
+            ceil_B = horizon_ceiling(N, horizon_samples)
+            cand = {min(c, ceil_B) for c in cand}
+        return cls(tuple(sorted(cand)))
+
+    @classmethod
+    def build(cls, base_B: int, N: int, *, n_buckets: int = 3,
+              factor: int = 2,
+              horizon_samples: Optional[float] = None) -> "BucketLadder":
+        """Geometric ladder centered on `base_B`: floor((n-1)/2) buckets below
+        and the rest above, normalized by `from_buckets` (multiples of N,
+        Theorem-4 ceiling)."""
+        if n_buckets < 1:
+            raise ValueError("n_buckets must be >= 1")
+        if factor < 2:
+            raise ValueError("bucket_factor must be >= 2")
+        below = (n_buckets - 1) // 2
+        cand = [base_B * factor ** i for i in range(-below, n_buckets - below)]
+        return cls.from_buckets(cand, N, horizon_samples=horizon_samples)
+
+
+@dataclass(frozen=True)
+class RateEstimate:
+    """Online decomposition of observed round times into the rate model's
+    compute and communication terms: T = B/(N*R_p) + R/R_c. `Rc = 0.0` means
+    the fitted comm intercept was ~0 (no comms model), matching the
+    `comms_rate <= 0` convention everywhere else in this module."""
+
+    Rp: float
+    Rc: float
+    n_obs: int = 0
+
+
+class RoundTimeEstimator:
+    """Least-squares (R_p, R_c) estimation from per-round wall times observed
+    at *different* network mini-batch sizes B
+    (docs/DESIGN.md §Adaptive batch buckets).
+
+    Eq. 4's round time is affine in B — T(B) = a*B + c with a = 1/(N*R_p)
+    and c = R/R_c — so supersteps timed at two or more distinct buckets
+    identify both terms: slope -> R_p, intercept -> R_c. This replaces the
+    binary comm-floor-disproof heuristic of `replan` (which can only either
+    trust the config's R_c or zero it) with a measurement; with only one
+    bucket visited the system is unidentifiable and `estimate()` returns
+    None, falling back to that heuristic. A bounded window keeps the fit
+    tracking the hardware's *current* rates.
+    """
+
+    def __init__(self, N: int, R: int, *, window: int = 64):
+        if N < 1 or R < 0:
+            raise ValueError(f"bad estimator dims N={N} R={R}")
+        self.N, self.R = N, R
+        self._obs: Deque[Tuple[int, float]] = deque(maxlen=max(2, window))
+
+    def observe(self, B: int, round_s: float) -> None:
+        if B > 0 and round_s > 0 and math.isfinite(round_s):
+            self._obs.append((B, round_s))
+
+    def estimate(self) -> Optional[RateEstimate]:
+        n = len(self._obs)
+        if n < 3 or len({b for b, _ in self._obs}) < 2:
+            return None  # slope and intercept are not separable yet
+        sx = sum(b for b, _ in self._obs)
+        sy = sum(t for _, t in self._obs)
+        sxx = sum(b * b for b, _ in self._obs)
+        sxy = sum(b * t for b, t in self._obs)
+        denom = n * sxx - sx * sx
+        if denom <= 0:
+            return None
+        a = (n * sxy - sx * sy) / denom
+        if a <= 0:
+            return None  # negative compute term: noise dominates, keep fallback
+        c = max((sy - a * sx) / n, 0.0)
+        Rp = 1.0 / (self.N * a)
+        Rc = self.R / c if c > 1e-12 else 0.0
+        return RateEstimate(Rp=Rp, Rc=Rc, n_obs=n)
+
+
+class BucketHysteresis:
+    """Debounce bucket proposals: a switch is confirmed only after `patience`
+    consecutive re-plans agree on the same target bucket, so one jittery
+    superstep timing cannot thrash the ladder. `patience=1` switches
+    immediately; proposals equal to the current bucket reset the streak."""
+
+    def __init__(self, patience: int = 2):
+        if patience < 1:
+            raise ValueError("hysteresis patience must be >= 1")
+        self.patience = patience
+        self._pending: Optional[int] = None
+        self._streak = 0
+
+    def step(self, current_B: int, target_B: int) -> int:
+        """Returns the bucket to adopt now: `target_B` once confirmed, else
+        `current_B`."""
+        if target_B == current_B:
+            self._pending, self._streak = None, 0
+            return current_B
+        if target_B == self._pending:
+            self._streak += 1
+        else:
+            self._pending, self._streak = target_B, 1
+        if self._streak >= self.patience:
+            self._pending, self._streak = None, 0
+            return target_B
+        return current_B
 
 
 def measured_processing_rate(B: int, N: int, R: int, wall_s_per_round: float,
@@ -104,35 +273,128 @@ def measured_effective_rate(wall_s_per_round: float) -> float:
     return 1.0 / max(wall_s_per_round, 1e-12)
 
 
+def observed_stream(stream: StreamConfig, N: int, R: int, B: int,
+                    wall_s_per_round: float, *,
+                    estimate: Optional[RateEstimate] = None) -> StreamConfig:
+    """StreamConfig with (R_p, R_c) replaced by what measurement supports.
+
+    With a `RoundTimeEstimator` estimate (supersteps observed at two or more
+    buckets) both rates come from the least-squares fit. Without one, a
+    single (B, wall-time) point cannot separate compute from comms, so the
+    fallback keeps the config's R_c unless the observation disproves it: a
+    round finished at or under the modeled comm floor R/R_c zeroes the comm
+    term rather than letting a wrong constant dominate the re-planned R_e."""
+    if estimate is not None:
+        return dataclasses.replace(stream, processing_rate=estimate.Rp,
+                                   comms_rate=estimate.Rc)
+    if wall_s_per_round <= _comm_time(R, stream.comms_rate):
+        stream = dataclasses.replace(stream, comms_rate=0.0)
+    Rp = measured_processing_rate(B, N, R, wall_s_per_round, stream.comms_rate)
+    return dataclasses.replace(stream, processing_rate=Rp)
+
+
+def select_bucket(ladder: BucketLadder, stream: StreamConfig, N: int, R: int,
+                  *, horizon_samples: Optional[float] = None) -> int:
+    """The bucket the rate model asks for: the smallest registered B that
+    keeps up with the stream (eq. 4's keep-up condition, Theorem-4 ceiling
+    applied by `plan`), or the largest bucket when no B can keep up — B*R_e
+    is increasing in B, so the top of the ladder minimizes the discard rate
+    R_s - B*R_e in the under-provisioned regime."""
+    try:
+        target = ladder.snap(plan(stream, N, R,
+                                  horizon_samples=horizon_samples).B)
+    except ValueError:  # stream outruns total compute: nothing keeps up
+        target = ladder.buckets[-1]
+    if horizon_samples:
+        # ladders built via `from_buckets` are already ceiling-clipped; for
+        # a hand-built ladder, never select a bucket that `plan` would clip
+        # down to an unregistered B
+        ceil_B = horizon_ceiling(N, horizon_samples)
+        fits = [b for b in ladder.buckets if b <= ceil_B]
+        if fits and target > ceil_B:
+            target = fits[-1]
+    return target
+
+
+def snap_plan_to_ladder(current: Plan, stream: StreamConfig, N: int,
+                        ladder: BucketLadder, *,
+                        horizon_samples: Optional[float] = None) -> Plan:
+    """Fit an existing plan onto a ladder: if its B is already registered the
+    plan is returned unchanged; otherwise B snaps to the nearest keep-up
+    bucket and mu is re-derived (for ungoverned streams only B is replaced).
+    Shared by the governed sources' `adopt_ladder` so the snap semantics
+    cannot drift between them."""
+    if current.B in ladder:
+        return current
+    B = ladder.snap(current.B)
+    if stream.streaming_rate > 0:
+        return plan(stream, N, current.R, B=B,
+                    horizon_samples=horizon_samples)
+    return dataclasses.replace(current, B=B)
+
+
 def replan(stream: StreamConfig, N: int, R: int, B: int,
            wall_s_per_round: float, *,
+           ladder: Optional[BucketLadder] = None,
+           estimate: Optional[RateEstimate] = None,
+           decided_B: Optional[int] = None,
            horizon_samples: Optional[float] = None) -> Plan:
     """Closed-loop governor step: re-derive (B, mu) from the *measured* round
     time instead of the config's nominal R_p (Nokleby & Bajwa 2017 style
-    adaptation of the DMB plan).
+    adaptation of the DMB plan). `B` is the batch size the wall time was
+    observed at.
 
-    B is held fixed — changing it would change batch shapes and force a
-    recompile of the jitted superstep — so the adaptation shows up purely in
-    mu, the number of samples the splitter must discard per round to keep up
-    with R_s at the rate the hardware is actually delivering.
+    Without a `ladder` (or with a single-bucket one) B is held fixed — the
+    node-split batch shape feeds compiled code — and the adaptation shows up
+    purely in mu, the number of samples the splitter must discard per round
+    to keep up with R_s at the rate the hardware is actually delivering.
+    With a multi-bucket ladder the re-plan may also move B to another
+    *registered* bucket (`select_bucket`), each of which has a pre-compiled
+    superstep, so the swap still never retraces. Pass `estimate` from a
+    `RoundTimeEstimator` to close the loop on R_c as well.
 
     A user-pinned `forced_mu >= 0` stays in force (the experiment knob wins
     over the feedback loop); the re-plan then only refreshes the measured
-    Re / regime diagnosis."""
-    if wall_s_per_round <= _comm_time(R, stream.comms_rate):
-        # the round finished faster than the modeled comm floor: the R_c
-        # constant is disproven by observation — drop the comm term entirely
-        # instead of letting it dominate the re-planned R_e
-        stream = dataclasses.replace(stream, comms_rate=0.0)
-    Rp = measured_processing_rate(B, N, R, wall_s_per_round, stream.comms_rate)
-    observed = dataclasses.replace(stream, processing_rate=Rp)
-    return plan(observed, N, R, B=B, horizon_samples=horizon_samples)
+    Re / regime diagnosis.
+
+    `decided_B` overrides the bucket selection: pass it when the target went
+    through an external debounce (the driver's `BucketHysteresis` sits
+    between `select_bucket` and the plan) — the wall-time inversion still
+    happens at the observed `B`, but the plan is derived at `decided_B`."""
+    observed = observed_stream(stream, N, R, B, wall_s_per_round,
+                               estimate=estimate)
+    if decided_B is not None:
+        target_B = decided_B
+    elif ladder is not None and len(ladder) > 1:
+        target_B = select_bucket(ladder, observed, N, R,
+                                 horizon_samples=horizon_samples)
+    else:
+        target_B = B
+    out = plan(observed, N, R, B=target_B, horizon_samples=horizon_samples)
+    if ladder is not None and out.B not in ladder:
+        # misconfigured hand-built ladder: no registered bucket fits the
+        # Theorem-4 ceiling, so the horizon clip just produced an
+        # unregistered B that `checked_plan_swap` would reject mid-run —
+        # hold the nearest registered bucket (un-clipped) instead of
+        # crashing the governor loop. Ladders from `from_buckets` can never
+        # hit this.
+        out = plan(observed, N, R, B=ladder.snap(out.B))
+    return out
 
 
-def checked_plan_swap(current: Plan, new: Plan) -> Plan:
+def checked_plan_swap(current: Plan, new: Plan,
+                      ladder: Optional[BucketLadder] = None) -> Plan:
     """Guard for closed-loop plan swaps (`update_plan` on the governed
-    streams): B must stay fixed because the node-split batch shape feeds
-    compiled code; only mu and the Re/regime diagnosis may adapt."""
+    streams): the node-split batch shape feeds compiled code, so B may only
+    move to a bucket whose superstep is registered (and pre-compiled) on the
+    ladder. Without a ladder B must stay fixed — the pre-ladder pinned-B
+    behavior; only mu and the Re/regime diagnosis may adapt."""
+    if ladder is not None:
+        if new.B not in ladder:
+            raise ValueError(
+                f"replan proposed unregistered batch bucket B={new.B}; "
+                f"registered buckets: {list(ladder.buckets)}")
+        return new
     if new.B != current.B:
         raise ValueError(
             f"closed-loop replan must keep B fixed: {current.B} -> {new.B}")

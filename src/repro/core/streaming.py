@@ -9,39 +9,89 @@ plot metrics against t' = samples *arrived* rather than samples consumed.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable, Iterator, Optional, Tuple
 
 import numpy as np
 
 from repro.configs.base import StreamConfig
-from repro.core.rates import Plan, checked_plan_swap, plan
+from repro.core.rates import (BucketLadder, Plan, checked_plan_swap, plan,
+                              snap_plan_to_ladder)
+
+
+class GovernedPlanMixin:
+    """Lock-guarded closed-loop plan state shared by the governed sources
+    (`GovernedStream` here, `data.pipeline.StreamingPipeline`): `update_plan`
+    validates swaps against the adopted bucket ladder, `adopt_ladder` snaps
+    an unregistered plan onto it, and the per-superstep latch guarantees
+    every superstep is dealt at a single width even when a swap lands from
+    the consumer thread mid-production. Hosts must provide `plan`,
+    `stream_cfg`, and `n_nodes` before calling `_init_plan_state`.
+    """
+
+    def _init_plan_state(self, ladder: Optional[BucketLadder],
+                         horizon: Optional[float] = None) -> None:
+        self.ladder: Optional[BucketLadder] = None
+        self._plan_horizon = horizon
+        self._plan_lock = threading.Lock()
+        self._last_superstep_plan = self.plan
+        if ladder is not None:
+            self.adopt_ladder(ladder)
+
+    def adopt_ladder(self, ladder: BucketLadder) -> None:
+        """Register the bucket ladder `update_plan` validates against. If the
+        current plan's B is not a registered bucket it is snapped to the
+        nearest keep-up bucket (mu re-derived) — call before consumption."""
+        self.plan = snap_plan_to_ladder(self.plan, self.stream_cfg,
+                                        self.n_nodes, ladder,
+                                        horizon_samples=self._plan_horizon)
+        self.ladder = ladder
+        self._last_superstep_plan = self.plan
+
+    def update_plan(self, new_plan: Plan) -> None:
+        """Closed-loop governor hook (see `core.rates.replan`): adopt a plan
+        re-derived from measured rates. Without a ladder B stays fixed and
+        only mu adapts; with one, B may move to any registered bucket
+        (`core.rates.checked_plan_swap`); counters carry over."""
+        with self._plan_lock:
+            self.plan = checked_plan_swap(self.plan, new_plan, self.ladder)
+
+    def _latch_plan(self) -> Plan:
+        with self._plan_lock:
+            return self.plan
+
+    @property
+    def last_superstep_plan(self) -> Plan:
+        """The plan that dealt the most recently produced superstep — what a
+        prefetcher's `meta` hook snapshots so the consumer knows which plan
+        a staged batch belongs to."""
+        return self._last_superstep_plan
 
 
 @dataclasses.dataclass
-class GovernedStream:
+class GovernedStream(GovernedPlanMixin):
     draw: Callable  # draw(rng, n) -> np/jnp samples (host-side)
     n_nodes: int
     plan: Plan
     seed: int = 0
+    # registered B buckets the closed loop may move between; None pins B
+    ladder: Optional[BucketLadder] = None
+    # rate model behind the plan (for ladder snapping); None = ungoverned
+    stream_cfg: Optional[StreamConfig] = None
+    horizon: Optional[float] = None
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
+        if self.stream_cfg is None:
+            self.stream_cfg = StreamConfig()
+        self._init_plan_state(self.ladder, self.horizon)
         self.samples_arrived = 0
         self.samples_consumed = 0
         self.samples_discarded = 0
         self.rounds = 0
 
-    def update_plan(self, new_plan: Plan) -> None:
-        """Closed-loop governor hook (see `core.rates.replan`): adopt a plan
-        re-derived from measured rates (B fixed, mu adapts — see
-        `core.rates.checked_plan_swap`); counters carry over."""
-        self.plan = checked_plan_swap(self.plan, new_plan)
-
-    def __iter__(self) -> Iterator:
-        return self
-
-    def __next__(self):
-        B, mu, N = self.plan.B, self.plan.mu, self.n_nodes
+    def _round(self, p: Plan):
+        B, mu, N = p.B, p.mu, self.n_nodes
         z = self.draw(self._rng, B + mu)
         self.samples_arrived += B + mu
         self.samples_discarded += mu
@@ -53,10 +103,20 @@ class GovernedStream:
             return tuple(reshape(a) for a in take)
         return reshape(take)
 
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._round(self._latch_plan())
+
     def next_superstep(self, k: int):
         """K governed rounds stacked on a leading K axis:
-        [K, N, B/N, ...] leaves, ready for the K-round device scan."""
-        rounds = [next(self) for _ in range(k)]
+        [K, N, B/N, ...] leaves, ready for the K-round device scan. The plan
+        is latched once per superstep so a concurrent `update_plan` cannot
+        produce ragged round widths within one stack."""
+        p = self._latch_plan()
+        rounds = [self._round(p) for _ in range(k)]
+        self._last_superstep_plan = p
         if isinstance(rounds[0], tuple):
             return tuple(np.stack(parts) for parts in zip(*rounds))
         return np.stack(rounds)
@@ -64,11 +124,13 @@ class GovernedStream:
 
 def make_governed_stream(draw: Callable, stream_cfg: StreamConfig, n_nodes: int,
                          rounds_R: int, *, B: Optional[int] = None,
-                         horizon: Optional[float] = None, seed: int = 0) -> GovernedStream:
+                         horizon: Optional[float] = None,
+                         ladder: Optional[BucketLadder] = None,
+                         seed: int = 0) -> GovernedStream:
     if stream_cfg.streaming_rate <= 0:
         # no governor: consume everything with the requested B
         p = Plan(B=B or n_nodes, mu=max(stream_cfg.forced_mu, 0), R=rounds_R,
                  Re=float("inf"), regime="resourceful")
     else:
         p = plan(stream_cfg, n_nodes, rounds_R, B=B, horizon_samples=horizon)
-    return GovernedStream(draw, n_nodes, p, seed)
+    return GovernedStream(draw, n_nodes, p, seed, ladder, stream_cfg, horizon)

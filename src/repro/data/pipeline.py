@@ -18,6 +18,16 @@ Two streaming-engine extensions (see train.driver for the full picture):
   Each staged item carries a counter snapshot so consumer-visible accounting
   (`samples_arrived`, `samples_discarded`, `rounds`) stays coherent with the
   batch being trained on, not with how far ahead the producer has run.
+* **Adaptive B** — `update_plan` may move B between the buckets of an adopted
+  `core.rates.BucketLadder` mid-stream
+  (docs/DESIGN.md §Adaptive batch buckets). The plan is latched once per
+  superstep under a lock, so every
+  superstep is dealt at a single width even when the swap lands from the
+  consumer thread mid-production; supersteps already staged in the prefetch
+  ring keep their old width (their samples were drawn — dropping them would
+  lose stream samples) and drain through the pre-compiled old-bucket
+  superstep, while each staged item's `meta` snapshot tells the consumer
+  which plan dealt it.
 """
 from __future__ import annotations
 
@@ -28,7 +38,8 @@ from typing import Any, Callable, Dict, Iterator, NamedTuple, Optional
 import numpy as np
 
 from repro.configs.base import StreamConfig
-from repro.core.rates import Plan, checked_plan_swap, plan as make_plan
+from repro.core.rates import BucketLadder, Plan, plan as make_plan
+from repro.core.streaming import GovernedPlanMixin
 
 
 class StreamCounters(NamedTuple):
@@ -40,11 +51,11 @@ class StreamCounters(NamedTuple):
     rounds: int
 
 
-class StreamingPipeline:
+class StreamingPipeline(GovernedPlanMixin):
     def __init__(self, sample_fn: Callable[[np.random.Generator, int], Dict[str, np.ndarray]],
                  stream_cfg: StreamConfig, n_nodes: int, rounds_R: int, *,
                  batch: Optional[int] = None, horizon: Optional[float] = None,
-                 seed: int = 0):
+                 ladder: Optional[BucketLadder] = None, seed: int = 0):
         if stream_cfg.streaming_rate > 0:
             self.plan = make_plan(stream_cfg, n_nodes, rounds_R, B=batch,
                                   horizon_samples=horizon)
@@ -54,27 +65,20 @@ class StreamingPipeline:
         self.stream_cfg = stream_cfg
         self.sample_fn = sample_fn
         self.n_nodes = n_nodes
+        # adopt_ladder / update_plan / last_superstep_plan: GovernedPlanMixin
+        self._init_plan_state(ladder, horizon)
         self._rng = np.random.default_rng(seed)
         self.samples_arrived = 0
         self.samples_consumed = 0
         self.samples_discarded = 0
         self.rounds = 0
 
-    def update_plan(self, new_plan: Plan) -> None:
-        """Closed-loop governor hook: swap in a re-derived plan mid-stream
-        (B fixed, mu adapts — see `core.rates.checked_plan_swap`); counters
-        are preserved across the swap."""
-        self.plan = checked_plan_swap(self.plan, new_plan)
-
     def counters(self) -> StreamCounters:
         return StreamCounters(self.samples_arrived, self.samples_consumed,
                               self.samples_discarded, self.rounds)
 
-    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
-        return self
-
-    def __next__(self) -> Dict[str, np.ndarray]:
-        B, mu = self.plan.B, self.plan.mu
+    def _round(self, plan: Plan) -> Dict[str, np.ndarray]:
+        B, mu = plan.B, plan.mu
         batch = self.sample_fn(self._rng, B + mu)
         batch = {k: v[:B] for k, v in batch.items()}  # splitter discards mu
         self.samples_arrived += B + mu
@@ -83,10 +87,22 @@ class StreamingPipeline:
         self.rounds += 1
         return batch
 
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        return self._round(self._latch_plan())
+
     def next_superstep(self, k: int) -> Dict[str, np.ndarray]:
-        """Draw K governed rounds and stack them: leaves [K, B, ...]."""
-        rounds = [next(self) for _ in range(k)]
-        return {key: np.stack([r[key] for r in rounds]) for key in rounds[0]}
+        """Draw K governed rounds and stack them: leaves [K, B, ...]. The
+        plan is latched once for the whole superstep, so a concurrent
+        `update_plan` can never produce ragged round widths within one
+        stack."""
+        plan = self._latch_plan()
+        rounds = [self._round(plan) for _ in range(k)]
+        out = {key: np.stack([r[key] for r in rounds]) for key in rounds[0]}
+        self._last_superstep_plan = plan
+        return out
 
 
 class _Stop:
@@ -107,22 +123,29 @@ class DevicePrefetcher:
     `counters()` is sampled immediately after each produce; `__next__` returns
     the staged batch after adopting that snapshot into `self.counters`, so the
     consumer sees exactly the accounting a synchronous loop would have seen at
-    that round — regardless of how far ahead the producer ring has run.
+    that round — regardless of how far ahead the producer ring has run. The
+    optional `meta` hook rides the same snapshot mechanism (e.g. the
+    pipeline's `last_superstep_plan`, so the consumer knows which batch
+    bucket a staged superstep was dealt at even while the ring drains items
+    produced under a superseded plan).
     """
 
     def __init__(self, produce: Callable[[], Any], *,
                  stage: Optional[Callable[[Any], Any]] = None,
                  counters: Optional[Callable[[], StreamCounters]] = None,
+                 meta: Optional[Callable[[], Any]] = None,
                  depth: int = 2):
         if depth < 1:
             raise ValueError("prefetch depth must be >= 1")
         self._produce = produce
         self._stage = stage or (lambda x: x)
         self._counters = counters or (lambda: None)
+        self._meta = meta or (lambda: None)
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._final: Optional[Any] = None  # latched _Stop/_Raise terminal state
         self.counters: Optional[StreamCounters] = None
+        self.meta: Optional[Any] = None
         self._thread = threading.Thread(target=self._worker, daemon=True,
                                         name="device-prefetch")
         self._thread.start()
@@ -145,8 +168,9 @@ class DevicePrefetcher:
                 except StopIteration:
                     break
                 snap = self._counters()
+                meta = self._meta()
                 staged = self._stage(item)
-                self._put_stopaware((staged, snap))
+                self._put_stopaware((staged, snap, meta))
         except BaseException as e:  # surface producer failures at the consumer
             self._put_stopaware(_Raise(e))
             return
@@ -165,9 +189,11 @@ class DevicePrefetcher:
         if isinstance(got, _Raise):
             self._final = got
             raise got.exc
-        staged, snap = got
+        staged, snap, meta = got
         if snap is not None:
             self.counters = snap
+        if meta is not None:
+            self.meta = meta
         return staged
 
     def close(self) -> None:

@@ -19,7 +19,8 @@ import jax
 import numpy as np
 
 from repro.configs import SHAPES, get_config, reduced as reduce_cfg
-from repro.configs.base import AveragingConfig, RunConfig, StreamConfig
+from repro.configs.base import (AveragingConfig, GovernorConfig, RunConfig,
+                                StreamConfig)
 from repro.data.lm import MarkovTokenStream
 from repro.launch import sharding as shlib
 from repro.launch.mesh import make_host_mesh, make_production_mesh, n_data_nodes
@@ -57,6 +58,21 @@ def main():
     ap.add_argument("--replan-every", type=int, default=1,
                     help="supersteps between closed-loop (B, mu) re-plans; "
                          "0 disables the governor feedback")
+    ap.add_argument("--buckets", default="",
+                    help="comma-separated B bucket ladder for the adaptive "
+                         "governor (e.g. '8,16,32'); empty pins B to --batch")
+    ap.add_argument("--n-buckets", type=int, default=1,
+                    help="auto geometric ladder size around the planned B "
+                         "when --buckets is empty (1 = pinned B)")
+    ap.add_argument("--bucket-hysteresis", type=int, default=2,
+                    help="consecutive re-plans that must agree on a bucket "
+                         "before the governor switches B")
+    ap.add_argument("--no-rate-estimator", action="store_true",
+                    help="disable the online least-squares (R_p, R_c) "
+                         "estimator; fall back to the config comms constant")
+    ap.add_argument("--horizon", type=float, default=0.0,
+                    help="sample horizon t' for Theorem 4's B <= sqrt(t') "
+                         "bucket ceiling (0 = no ceiling)")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 mesh (requires 256 devices)")
     args = ap.parse_args()
@@ -75,9 +91,14 @@ def main():
     n_nodes = n_data_nodes(mesh)
     decentralized = args.averaging != "exact"
     rules = shlib.activation_rules(mesh, run.shape, node_axis=decentralized)
+    buckets = tuple(int(b) for b in args.buckets.split(",") if b.strip())
+    governor = GovernorConfig(buckets=buckets, n_buckets=args.n_buckets,
+                              hysteresis=args.bucket_hysteresis,
+                              estimate_rates=not args.no_rate_estimator)
     engine = EngineConfig(superstep=args.superstep,
                           prefetch_depth=args.prefetch,
-                          replan_every=args.replan_every)
+                          replan_every=args.replan_every,
+                          governor=governor)
     supersteps = -(-args.steps // engine.superstep)
 
     data = MarkovTokenStream(cfg.vocab_size, seed=0)
@@ -88,11 +109,13 @@ def main():
         if decentralized:
             state = replicate_for_nodes(state, n_nodes)
         with StreamingDriver(run, mesh, state, sample_fn, engine=engine,
-                             batch=args.batch) as driver:
+                             batch=args.batch,
+                             horizon=args.horizon or None) as driver:
             plan = driver.pipeline.plan
             print(f"plan: B={plan.B} mu={plan.mu} regime={plan.regime} "
                   f"nodes={n_nodes} K={engine.superstep} "
-                  f"prefetch={engine.prefetch_depth}")
+                  f"prefetch={engine.prefetch_depth} "
+                  f"buckets={list(driver.ladder.buckets)}")
             state, history = driver.run(supersteps, log_fn=_log,
                                         log_every=args.log_every)
     if args.checkpoint:
@@ -105,9 +128,16 @@ def _log(rec):
     m = rec["metrics"]
     c = rec["counters"]
     plan = rec.get("replanned", rec["plan"])
+    gov = ""
+    if "bucket_switch" in rec:
+        gov = f" B:{rec['bucket_switch'][0]}->{rec['bucket_switch'][1]}"
+    if "est_Rc" in rec:
+        rc = rec["est_Rc"]
+        gov += f" est_Rc={'inf' if rc <= 0 else f'{rc:.3g}'}"
     print(f"round {rec['round']:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
           f"consensus_err {m['consensus_err']:.2e} "
-          f"t'={c.samples_arrived} mu={plan.mu} "
+          f"t'={c.samples_arrived} B={rec['bucket']} mu={plan.mu} "
+          f"{plan.regime}{gov} "
           f"({rec['rounds_per_s']:.1f} rounds/s, "
           f"{rec['samples_per_s']:.0f} samples/s)", flush=True)
 

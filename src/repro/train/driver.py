@@ -26,10 +26,12 @@ it with three stages:
 
 The driver is workload-agnostic: any superstep of signature
 `superstep(state, batches) -> (state, metrics)` (batch leaves [K, ...],
-metric leaves stacked [K]) plugs in via `superstep_fn` — the nonconvex PCA
-track (`core.krasulina.build_krasulina_superstep`) rides the same splitter,
-prefetch ring, and governor as the LM trainer; when `superstep_fn` is omitted
-the trainer's `build_superstep(run_cfg, mesh)` is built here. `run_cfg` only
+metric leaves stacked [K]) plugs in via `superstep_fn` — or, bucket-keyed,
+via `superstep_builder` (`build(B) -> superstep`; see
+`train.trainer.superstep_builder` and
+`core.krasulina.krasulina_superstep_builder`) — the nonconvex PCA track
+rides the same splitter, prefetch ring, and governor as the LM trainer; when
+both are omitted the trainer's builder is constructed here. `run_cfg` only
 needs `.stream` and `.averaging` (a full `RunConfig`, or a lightweight carrier
 like `configs.paper_pca.PCARunConfig`).
 
@@ -37,8 +39,17 @@ Closing the loop, the driver times every superstep, inverts eq. 4 to get the
 *measured* R_p / R_e (`core.rates.measured_processing_rate`), and re-plans
 (B, mu) via `core.rates.replan` — so an under-provisioned run discards the mu
 its hardware actually requires (Fig. 4's drop rule), not what nominal config
-constants predicted. B stays fixed across re-plans to keep batch shapes (and
-the compiled superstep) stable; the adaptation lands entirely in mu.
+constants predicted. With a multi-bucket `GovernorConfig` ladder the re-plan
+adapts **B as well as mu**: B may move between the registered buckets of a
+`core.rates.BucketLadder`, each of which the driver compiles (lazily, once)
+into its own superstep executable — so a steady-state bucket switch costs one
+plan swap and zero retrace — while an online `core.rates.RoundTimeEstimator`
+decomposes round times observed at different buckets into a running
+(R_p, R_c) estimate that replaces the config's comms constant in the eq. 4
+inversion. Bucket switches are debounced (`core.rates.BucketHysteresis`) so
+timing jitter cannot thrash the ladder, and the first superstep of every
+newly compiled jit signature is excluded from governor input (compile time is
+not processing time). See docs/DESIGN.md §Adaptive batch buckets.
 """
 from __future__ import annotations
 
@@ -50,11 +61,12 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import RunConfig
+from repro.configs.base import GovernorConfig, RunConfig
 from repro.core import rates
 from repro.data.pipeline import DevicePrefetcher, StreamCounters, StreamingPipeline
 from repro.launch.mesh import data_axes, n_data_nodes
-from repro.train.trainer import TrainState, build_superstep, make_node_batch
+from repro.train.trainer import (TrainState, make_node_batch,
+                                 superstep_builder as lm_superstep_builder)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,11 +76,19 @@ class EngineConfig:
     superstep: int = 8  # K: rounds folded into one device scan
     prefetch_depth: int = 2  # staged supersteps in flight; 0 = synchronous
     replan_every: int = 1  # supersteps between governor re-plans; 0 = open loop
-    # supersteps whose timings the governor ignores: the first two calls pay
-    # XLA compilation (one per jit signature — freshly-built then committed
-    # state), and treating compile time as processing time would make replan
-    # discard thousands of samples for a one-off cost
+    # supersteps whose timings the governor ignores on the INITIAL jit
+    # signature: the first two calls pay XLA compilation (one per signature —
+    # freshly-built then committed state), and treating compile time as
+    # processing time would make replan discard thousands of samples for a
+    # one-off cost
     warmup_supersteps: int = 2
+    # same gate for every LATER-compiled signature (a bucket first visited
+    # mid-run pays one batch-shape retrace): its first `warmup_per_bucket`
+    # supersteps are excluded from governor timings and the rate estimator
+    warmup_per_bucket: int = 1
+    # the adaptive-B bucket ladder + online (R_p, R_c) estimator; the default
+    # (single-bucket) config pins B and adapts mu only
+    governor: GovernorConfig = GovernorConfig()
 
 
 class StreamingDriver:
@@ -83,6 +103,7 @@ class StreamingDriver:
     def __init__(self, run_cfg: RunConfig, mesh, state: Any,
                  sample_fn: Callable[[np.random.Generator, int], Dict[str, np.ndarray]],
                  *, superstep_fn: Optional[Callable] = None,
+                 superstep_builder: Optional[Callable[[int], Callable]] = None,
                  engine: EngineConfig = EngineConfig(),
                  batch: Optional[int] = None, horizon: Optional[float] = None,
                  n_nodes: Optional[int] = None, seed: int = 0,
@@ -98,20 +119,73 @@ class StreamingDriver:
         self.clock = clock
         self.decentralized = run_cfg.averaging.mode != "exact"
         self.n_nodes = n_nodes or n_data_nodes(mesh)
+        self._horizon = horizon
         self.pipeline = StreamingPipeline(
             sample_fn, run_cfg.stream, self.n_nodes, run_cfg.averaging.rounds,
             batch=batch, horizon=horizon, seed=seed)
-        if superstep_fn is None:  # default: the LM trainer's K-round scan
-            superstep_fn, _ = build_superstep(run_cfg, mesh,
-                                              n_nodes=self.n_nodes)
+        self.ladder = self._make_ladder(engine.governor)
+        self.pipeline.adopt_ladder(self.ladder)
+        # superstep source, most to least specific: an explicit bucket-keyed
+        # builder, a single superstep_fn (served to every bucket), or the LM
+        # trainer's builder
+        if superstep_builder is None:
+            if superstep_fn is not None:
+                superstep_builder = lambda B: superstep_fn
+            else:
+                superstep_builder = lm_superstep_builder(run_cfg, mesh,
+                                                         n_nodes=self.n_nodes)
+        self._builder = superstep_builder
         # donation updates the state in place across supersteps; CPU lacks
         # donation support and would only warn (see core.dsgd.jit_driver)
-        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
-        self._superstep = jax.jit(superstep_fn, donate_argnums=donate)
+        self._donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        # one compiled superstep per bucket, built lazily on first visit and
+        # reused with zero retrace on every revisit
+        self._compiled: Dict[int, Callable] = {}
         self._sharding = self._batch_sharding()
         self._prefetcher: Optional[DevicePrefetcher] = None
-        self._supersteps_done = 0  # across run() calls (governor warm-up gate)
+        self._supersteps_done = 0  # across run() calls
+        # governor warm-up gate, per jit signature: supersteps completed at
+        # each bucket (the first of a fresh signature pays XLA compile time
+        # and must not feed replan or the rate estimator)
+        self._sig_seen: Dict[int, int] = {}
+        self._initial_B = self.pipeline.plan.B
+        gov = engine.governor
+        self._hysteresis = rates.BucketHysteresis(gov.hysteresis)
+        self._estimator = (rates.RoundTimeEstimator(
+            self.n_nodes, run_cfg.averaging.rounds, window=gov.window)
+            if gov.estimate_rates else None)
         self.history: List[Dict[str, Any]] = []
+
+    def _make_ladder(self, gov: GovernorConfig) -> rates.BucketLadder:
+        """Resolve the governor's B ladder: explicit buckets (clipped to the
+        Theorem-4 horizon ceiling, snapped to multiples of N), an auto
+        geometric ladder around the planned B, or the pinned single-bucket
+        ladder (the pre-adaptive behavior)."""
+        N = self.n_nodes
+        base_B = self.pipeline.plan.B
+        if gov.buckets:
+            return rates.BucketLadder.from_buckets(
+                gov.buckets, N, horizon_samples=self._horizon)
+        if gov.n_buckets == 1:
+            # pinned B: keep the planned/user batch EXACTLY (the pre-ladder
+            # behavior), including a B that is not a multiple of N in exact
+            # mode where no node split happens
+            return rates.BucketLadder((base_B,))
+        return rates.BucketLadder.build(
+            base_B, N, n_buckets=gov.n_buckets, factor=gov.bucket_factor,
+            horizon_samples=self._horizon)
+
+    @property
+    def compiled_buckets(self) -> Tuple[int, ...]:
+        """Buckets whose superstep executable exists (visited at least once)."""
+        return tuple(sorted(self._compiled))
+
+    def _superstep_for(self, B: int) -> Callable:
+        fn = self._compiled.get(B)
+        if fn is None:
+            fn = jax.jit(self._builder(B), donate_argnums=self._donate)
+            self._compiled[B] = fn
+        return fn
 
     # ---------------------------------------------------------------- stages
 
@@ -159,6 +233,7 @@ class StreamingDriver:
             self._prefetcher = DevicePrefetcher(
                 self._host_superstep, stage=self._stage,
                 counters=self.pipeline.counters,
+                meta=lambda: self.pipeline.last_superstep_plan,
                 depth=self.engine.prefetch_depth)
         source = self._prefetcher
         for i in range(supersteps):
@@ -170,13 +245,21 @@ class StreamingDriver:
             if source is not None:
                 staged = next(source)
                 counters = source.counters
+                used_plan = source.meta
             else:
                 staged = self._stage(self._host_superstep())
                 counters = self.pipeline.counters()
-            self.state, metrics = self._superstep(self.state, staged)
+                used_plan = self.pipeline.last_superstep_plan
+            # after a bucket switch the ring may still drain supersteps dealt
+            # at the old width: each batch runs through the compiled
+            # executable of the bucket that DEALT it (their samples were
+            # drawn from the stream — dropping them would lose samples)
+            used_plan = used_plan or self.pipeline.plan
+            self.state, metrics = self._superstep_for(used_plan.B)(self.state,
+                                                                   staged)
             metrics = jax.device_get(metrics)  # one fetch per K rounds
             wall_s = max(self.clock() - t0, 1e-12)
-            rec = self._observe(metrics, wall_s, counters)
+            rec = self._observe(metrics, wall_s, counters, used_plan)
             if log_fn and (i % log_every == 0 or i == supersteps - 1):
                 log_fn(rec)
         return self.state, self.history
@@ -196,15 +279,24 @@ class StreamingDriver:
     # -------------------------------------------------------------- governor
 
     def _observe(self, metrics: Dict[str, np.ndarray], wall_s: float,
-                 counters: Optional[StreamCounters]) -> Dict[str, Any]:
+                 counters: Optional[StreamCounters],
+                 used_plan: rates.Plan) -> Dict[str, Any]:
         i = self._supersteps_done
         self._supersteps_done += 1
         K = self.engine.superstep
-        plan = self.pipeline.plan
         round_s = wall_s / K
         stream = self.run_cfg.stream
+        B_used = used_plan.B
+        # per-jit-signature warm-up gate: a superstep that paid a fresh XLA
+        # compile (any bucket's first visit — not just the global first two
+        # supersteps) must not feed the governor or the rate estimator
+        seen = self._sig_seen.get(B_used, 0)
+        self._sig_seen[B_used] = seen + 1
+        warm = seen >= (self.engine.warmup_supersteps
+                        if B_used == self._initial_B
+                        else self.engine.warmup_per_bucket)
         measured_Rp = rates.measured_processing_rate(
-            plan.B, self.n_nodes, plan.R, round_s, stream.comms_rate)
+            B_used, self.n_nodes, used_plan.R, round_s, stream.comms_rate)
         rec: Dict[str, Any] = {
             "superstep": i,
             "round": (i + 1) * K,
@@ -212,19 +304,49 @@ class StreamingDriver:
             "metrics": {k: float(np.asarray(v)[-1]) for k, v in metrics.items()},
             "wall_s": wall_s,
             "rounds_per_s": K / wall_s,
-            "samples_per_s": K * plan.B / wall_s,
+            "samples_per_s": K * B_used / wall_s,
             "measured_Rp": measured_Rp,
             "measured_Re": rates.measured_effective_rate(round_s),
-            "plan": plan,
+            "plan": used_plan,
+            "bucket": B_used,
             "counters": counters,
         }
+        governed = stream.streaming_rate > 0
+        if governed and warm and self._estimator is not None:
+            self._estimator.observe(B_used, round_s)
         every = self.engine.replan_every
-        if (stream.streaming_rate > 0 and every > 0 and (i + 1) % every == 0
-                and i >= self.engine.warmup_supersteps):
-            new_plan = rates.replan(stream, self.n_nodes, plan.R, plan.B, round_s)
+        if governed and every > 0 and (i + 1) % every == 0 and warm:
+            est = self._estimator.estimate() if self._estimator else None
+            if est is not None:
+                rec["est_Rp"], rec["est_Rc"] = est.Rp, est.Rc
+            cur = self.pipeline.plan
+            if len(self.ladder) > 1:
+                observed = rates.observed_stream(
+                    stream, self.n_nodes, used_plan.R, B_used, round_s,
+                    estimate=est)
+                target_B = rates.select_bucket(
+                    self.ladder, observed, self.n_nodes, cur.R,
+                    horizon_samples=self._horizon)
+                rec["target_bucket"] = target_B
+                # hysteresis: only `governor.hysteresis` consecutive re-plans
+                # agreeing on the same bucket confirm a switch
+                decided_B = self._hysteresis.step(cur.B, target_B)
+            else:
+                decided_B = cur.B
+            # the wall-time inversion happens at the OBSERVED bucket (the
+            # ring may still drain old-width supersteps); the plan is derived
+            # at the hysteresis-confirmed one
+            new_plan = rates.replan(stream, self.n_nodes, cur.R, B_used,
+                                    round_s, ladder=self.ladder, estimate=est,
+                                    decided_B=decided_B,
+                                    horizon_samples=self._horizon)
+            if new_plan.B != cur.B:
+                self.pipeline.update_plan(new_plan)
+                rec["replanned"] = new_plan
+                rec["bucket_switch"] = (cur.B, new_plan.B)
             # Re is measured and jitters every superstep; only an actual
             # change of the governor's *decision* (mu / regime) counts
-            if (new_plan.mu, new_plan.regime) != (plan.mu, plan.regime):
+            elif (new_plan.mu, new_plan.regime) != (cur.mu, cur.regime):
                 self.pipeline.update_plan(new_plan)
                 rec["replanned"] = new_plan
         self.history.append(rec)

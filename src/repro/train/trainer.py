@@ -210,6 +210,27 @@ def build_superstep(run: RunConfig, mesh, *,
     return superstep, spec_fn
 
 
+def superstep_builder(run: RunConfig, mesh, *,
+                      n_nodes: Optional[int] = None) -> Callable[[int], Callable]:
+    """Bucket-keyed superstep factory for the adaptive-B governor
+    (docs/DESIGN.md §Adaptive batch buckets): `build(B) -> superstep` hands
+    `train.driver.StreamingDriver` the function to compile for each
+    registered bucket of its `core.rates.BucketLadder`.
+
+    The K-round scan reads K, B, and the node split from its batch shapes at
+    trace time, so one closure serves every bucket — the per-bucket identity
+    lives in the driver's compiled-superstep registry (one jitted executable
+    per bucket, built lazily, reused with zero retrace when the governor
+    revisits a bucket). The loss/grad/optimizer graph is built once here, not
+    once per bucket."""
+    superstep, _ = build_superstep(run, mesh, n_nodes=n_nodes)
+
+    def build(B: int) -> Callable:
+        return superstep
+
+    return build
+
+
 def make_node_batch(batch: Dict[str, jax.Array], n_nodes: int,
                     axis: int = 0) -> Dict[str, jax.Array]:
     """[B, ...] -> [n_nodes, B/n_nodes, ...] (the splitter of Fig. 3(c)).

@@ -24,12 +24,13 @@ def test_run_quick_all_suites(tmp_path):
     assert artifact["failed"] == []
     names = [r["name"] for r in artifact["rows"]]
     # every suite contributed at least one row — including the packed,
-    # quantized, and compressor-accuracy consensus sub-suites (PR 3) and the
-    # PCA engine sub-suites (PR 4)
+    # quantized, and compressor-accuracy consensus sub-suites (PR 3), the
+    # PCA engine sub-suites (PR 4), and the adaptive-B governor suite (PR 5)
     for prefix in ("fig5/", "fig6a/", "fig7a/", "fig9/", "consensus/",
                    "consensus/packed/", "consensus/quantized/",
                    "consensus/quant_accuracy/", "kernel/", "pipeline/",
-                   "krasulina/fused/", "krasulina/gossip/"):
+                   "krasulina/fused/", "krasulina/gossip/",
+                   "governor/cold_switch/", "governor/warm_switch/"):
         assert any(n.startswith(prefix) for n in names), (prefix, names)
     # the engine rows carry machine-readable throughput
     pipe = [r for r in artifact["rows"] if r["name"].startswith("pipeline/")]
@@ -48,3 +49,10 @@ def test_run_quick_all_suites(tmp_path):
     kg = [r for r in artifact["rows"] if r["name"].startswith("krasulina/gossip/")]
     assert kg and all("excess_risk=" in r["derived"]
                       and "consensus_err=" in r["derived"] for r in kg)
+    # governor contract rows are deterministic counts, asserted even in
+    # quick mode: steady-state bucket switches must never retrace, and the
+    # online (R_p, R_c) estimator row carries its recovery error
+    ss = [r for r in artifact["rows"] if r["name"] == "governor/steady_state"]
+    assert ss and "retraces=0;" in ss[0]["derived"]
+    ge = [r for r in artifact["rows"] if r["name"] == "governor/estimator"]
+    assert ge and "err_pct=" in ge[0]["derived"]

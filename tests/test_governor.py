@@ -1,0 +1,664 @@
+"""Adaptive-B governor regressions (docs/DESIGN.md §Adaptive batch buckets):
+
+* `BucketLadder` construction/snapping, ladder-aware `checked_plan_swap`
+* the online least-squares `(R_p, R_c)` estimator recovering a synthetic
+  ground-truth comm model (acceptance: R_c within 20%)
+* ladder-aware `replan`: downshift when measurement shows the stream is easy,
+  upshift to the top of the ladder when nothing keeps up
+* fake-clock driver regressions: B downshift / upshift, hysteresis against
+  jittery timings, per-jit-signature warm-up gating, and — on both the
+  LM-trainer and Krasulina supersteps — a steady-state bucket switch with
+  ZERO recompilation (the pre-compiled bucket is reused; the switch is a
+  plan swap only)
+* prefetch-ring counter coherence across a mid-stream bucket switch (no
+  sample loss or duplication; every staged superstep knows the plan that
+  dealt it)
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import (AveragingConfig, GovernorConfig, RunConfig,
+                                SHAPES, StreamConfig)
+from repro.core import krasulina, rates
+from repro.data.lm import MarkovTokenStream
+from repro.data.pipeline import DevicePrefetcher, StreamingPipeline
+from repro.data.synthetic import make_pca_host_sampler, make_pca_stream
+from repro.configs.paper_pca import FIG7, PCARunConfig
+from repro.launch.mesh import make_mesh
+from repro.launch.sharding import activation_rules
+from repro.models.common import mesh_rules
+from repro.train.driver import EngineConfig, StreamingDriver
+from repro.train.trainer import build_superstep, init_state
+
+SEQ = 16
+BATCH = 8
+
+
+# ---------------------------------------------------------------------------
+# BucketLadder + checked_plan_swap
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder_build_geometric_multiples_of_N():
+    lad = rates.BucketLadder.build(64, 4, n_buckets=4, factor=2)
+    assert lad.buckets == (32, 64, 128, 256)  # one below base, two above
+    assert all(b % 4 == 0 for b in lad.buckets)
+    # non-multiple candidates are rounded UP to a multiple of N
+    lad = rates.BucketLadder.build(10, 4, n_buckets=2)
+    assert lad.buckets == (12, 20)
+
+
+def test_bucket_ladder_horizon_ceiling_thm4():
+    # sqrt(1e4) = 100: every bucket is clipped to the Theorem-4 ceiling
+    lad = rates.BucketLadder.build(64, 4, n_buckets=4, factor=4,
+                                   horizon_samples=1e4)
+    assert max(lad.buckets) <= 100
+    assert lad.buckets[0] == 16  # 64/4, untouched by the ceiling
+
+
+def test_bucket_ladder_from_buckets_normalizes():
+    lad = rates.BucketLadder.from_buckets((6, 8, 30), 4)
+    assert lad.buckets == (8, 32)  # rounded up to multiples of N, deduped
+    # candidates above the Thm-4 ceiling collapse ONTO it (sqrt(1e4) = 100),
+    # so a plan at a registered bucket can never be horizon-clipped to an
+    # unregistered value
+    lad = rates.BucketLadder.from_buckets((16, 128, 256), 4,
+                                          horizon_samples=1e4)
+    assert lad.buckets == (16, 100)
+    lad = rates.BucketLadder.from_buckets((128,), 4, horizon_samples=1e4)
+    assert lad.buckets == (100,)
+
+
+def test_driver_explicit_buckets_above_horizon_ceiling_dont_crash():
+    """Regression: an explicit ladder whose buckets all exceed the Theorem-4
+    ceiling used to keep an unregistered-after-clipping bucket, and the first
+    warm re-plan crashed in checked_plan_swap. The ladder must collapse onto
+    the ceiling bucket and the governed run proceed."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    run_cfg = _run_cfg(stream=stream)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with mesh_rules(mesh, activation_rules(mesh, run_cfg.shape)):
+        state = init_state(run_cfg, jax.random.PRNGKey(0))
+        driver = StreamingDriver(
+            run_cfg, mesh, state, _sample_fn(), batch=16, horizon=100.0,
+            engine=EngineConfig(superstep=2, prefetch_depth=0, replan_every=1,
+                                warmup_supersteps=0,
+                                governor=GovernorConfig(buckets=(16, 32))),
+            clock=_FakeClock(50.0))
+        # sqrt(100) = 10: both requested buckets exceed the ceiling, so the
+        # ladder is the ceiling itself and the plan snapped onto it
+        assert driver.ladder.buckets == (10,)
+        assert driver.pipeline.plan.B == 10
+        driver.run(3)  # re-plans under a slow clock: must not raise
+        assert driver.pipeline.plan.mu > 0
+
+
+def test_bucket_ladder_snap():
+    lad = rates.BucketLadder((8, 16, 32))
+    assert lad.snap(1) == 8
+    assert lad.snap(16) == 16
+    assert lad.snap(17) == 32
+    assert lad.snap(1000) == 32  # above the ladder: the largest bucket
+    assert 16 in lad and 12 not in lad
+
+
+def test_bucket_ladder_rejects_malformed():
+    with pytest.raises(ValueError):
+        rates.BucketLadder(())
+    with pytest.raises(ValueError):
+        rates.BucketLadder((16, 8))  # not ascending
+
+
+def test_checked_plan_swap_bucket_aware():
+    lad = rates.BucketLadder((8, 16))
+    cur = rates.Plan(B=8, mu=0, R=1, Re=1.0, regime="resourceful")
+    ok = dataclasses.replace(cur, B=16)
+    assert rates.checked_plan_swap(cur, ok, lad).B == 16
+    # an unregistered B is rejected, and the error lists the ladder
+    with pytest.raises(ValueError, match=r"registered buckets: \[8, 16\]"):
+        rates.checked_plan_swap(cur, dataclasses.replace(cur, B=12), lad)
+    # no ladder: the pre-ladder pinned-B contract
+    with pytest.raises(ValueError, match="keep B fixed"):
+        rates.checked_plan_swap(cur, ok)
+    # a single-bucket ladder degenerates to pinned B (exact-mode default)
+    one = rates.BucketLadder((8,))
+    assert rates.checked_plan_swap(cur, dataclasses.replace(cur, mu=3), one).mu == 3
+    with pytest.raises(ValueError, match="registered buckets"):
+        rates.checked_plan_swap(cur, ok, one)
+
+
+# ---------------------------------------------------------------------------
+# Online (R_p, R_c) estimator
+# ---------------------------------------------------------------------------
+
+def test_estimator_recovers_synthetic_comm_model():
+    """Acceptance: round times drawn from eq. 4's ground truth at several
+    buckets (plus noise) must put the fitted R_c within 20% of truth."""
+    N, R, Rp, Rc = 4, 8, 1e5, 2e3
+    est = rates.RoundTimeEstimator(N, R, window=64)
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        for B in (32, 64, 128, 256):
+            truth = B / (N * Rp) + R / Rc
+            est.observe(B, truth * (1.0 + rng.normal() * 0.02))
+    got = est.estimate()
+    assert got is not None
+    assert got.Rp == pytest.approx(Rp, rel=0.2)
+    assert got.Rc == pytest.approx(Rc, rel=0.2)
+
+
+def test_estimator_unidentifiable_at_single_bucket():
+    est = rates.RoundTimeEstimator(2, 1)
+    for _ in range(10):
+        est.observe(64, 0.5)
+    assert est.estimate() is None  # slope/intercept not separable
+    # B-independent times (pure comm / fake clock): zero slope -> no estimate
+    est = rates.RoundTimeEstimator(2, 1)
+    for B in (32, 64, 128):
+        est.observe(B, 0.5)
+    assert est.estimate() is None
+
+
+def test_estimator_no_comm_intercept_means_rc_zero():
+    N, Rp = 2, 1e4
+    est = rates.RoundTimeEstimator(N, 4)
+    for B in (16, 32, 64):
+        est.observe(B, B / (N * Rp))  # pure compute, zero intercept
+    got = est.estimate()
+    assert got is not None and got.Rc == 0.0
+    assert got.Rp == pytest.approx(Rp, rel=1e-6)
+
+
+def test_estimator_window_tracks_current_rates():
+    """Old observations age out, so the fit follows a slowdown."""
+    N, R = 2, 1
+    est = rates.RoundTimeEstimator(N, R, window=8)
+    for B in (16, 32, 64, 16, 32, 64, 16, 32):
+        est.observe(B, B / (N * 1e5) + 1e-3)  # fast era
+    for B in (16, 32, 64, 16, 32, 64, 16, 32):
+        est.observe(B, B / (N * 1e3) + 1e-3)  # slow era fills the window
+    got = est.estimate()
+    assert got.Rp == pytest.approx(1e3, rel=1e-6)
+
+
+def test_replan_with_estimate_overrides_comms_heuristic():
+    """The fitted comm model replaces the binary comm-floor-disproof
+    heuristic: a wall time UNDER the (wrong) config comm floor used to zero
+    the comm term; the estimator's R_c is trusted instead."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e2)  # config claims 10ms/round comms
+    est = rates.RateEstimate(Rp=1e5, Rc=1e4)  # measured: 0.1ms/round
+    got = rates.replan(stream, 2, 1, 8, wall_s_per_round=2e-3, estimate=est)
+    # plan must be computed from the ESTIMATED rates, not config / heuristic
+    assert got.Re == pytest.approx(
+        rates.effective_rate(8, 2, 1, 1e5, 1e4), rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Ladder-aware replan
+# ---------------------------------------------------------------------------
+
+def test_replan_ladder_downshift_when_stream_is_easy():
+    """Measurement shows the hardware keeps up easily -> the plan drops to
+    the smallest keep-up bucket (Theorem 4 prefers small B)."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e4,
+                          comms_rate=1e6)
+    lad = rates.BucketLadder((8, 16, 32, 64))
+    got = rates.replan(stream, 2, 1, 32, wall_s_per_round=1e-4, ladder=lad)
+    assert got.B == 8 and got.mu == 0
+
+
+def test_replan_ladder_upshift_when_comm_bound():
+    """A comm-heavy estimate forces the keep-up minimum B upward: the plan
+    moves to the smallest bucket that satisfies eq. 4's keep-up condition."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    lad = rates.BucketLadder((8, 16, 32, 64))
+    est = rates.RateEstimate(Rp=1e6, Rc=50.0)  # 20ms comms per round
+    got = rates.replan(stream, 2, 1, 8, wall_s_per_round=0.03, ladder=lad,
+                       estimate=est)
+    # B_min = Rs * (R/Rc) / (1 - Rs/(N*Rp)) ~ 20 -> bucket 32
+    assert got.B == 32 and got.mu == 0
+
+
+def test_replan_ladder_infeasible_takes_largest_bucket():
+    """When the stream outruns total compute no B keeps up; B*R_e is
+    increasing in B, so the top of the ladder minimizes the discard rate."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    lad = rates.BucketLadder((8, 16, 32, 64))
+    got = rates.replan(stream, 2, 1, 16, wall_s_per_round=10.0, ladder=lad)
+    assert got.B == 64
+    assert got.mu > 0 and got.regime == "under-provisioned"
+
+
+def test_replan_handbuilt_ladder_above_ceiling_holds_registered_bucket():
+    """Regression: a hand-built ladder with NO bucket under the Theorem-4
+    ceiling used to let the horizon clip produce an unregistered B that
+    `checked_plan_swap` rejects mid-run; replan must hold the nearest
+    registered bucket instead."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    lad = rates.BucketLadder((64, 128))  # ceiling for horizon=100 is 8
+    got = rates.replan(stream, 4, 1, 64, wall_s_per_round=1e-2, ladder=lad,
+                       horizon_samples=100.0)
+    assert got.B in lad
+
+
+def test_replan_single_bucket_ladder_pins_B():
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    lad = rates.BucketLadder((16,))
+    got = rates.replan(stream, 2, 1, 16, wall_s_per_round=10.0, ladder=lad)
+    assert got.B == 16 and got.mu > 0  # identical to the pre-ladder replan
+
+
+def test_bucket_hysteresis_debounces():
+    h = rates.BucketHysteresis(patience=2)
+    assert h.step(8, 16) == 8     # first proposal: pending
+    assert h.step(8, 16) == 16    # second consecutive: confirmed
+    assert h.step(8, 16) == 8     # state was reset by the switch
+    assert h.step(8, 32) == 8     # a different target restarts the streak
+    assert h.step(8, 16) == 8
+    assert h.step(8, 8) == 8      # agreeing with current resets pending
+    assert h.step(8, 16) == 8     # ...so one more 16 is NOT enough
+    assert h.step(8, 16) == 16
+
+
+# ---------------------------------------------------------------------------
+# Pipeline / prefetch ring across a mid-stream bucket switch
+# ---------------------------------------------------------------------------
+
+def _xy_pipe(ladder, batch=8, mu=3, seed=7):
+    return StreamingPipeline(
+        lambda rng, n: {"x": rng.normal(size=(n, 2))},
+        StreamConfig(forced_mu=mu), n_nodes=2, rounds_R=1, batch=batch,
+        ladder=ladder, seed=seed)
+
+
+def test_pipeline_bucket_switch_mid_stream():
+    lad = rates.BucketLadder((8, 16))
+    pipe = _xy_pipe(lad)
+    a = pipe.next_superstep(2)
+    assert a["x"].shape == (2, 8, 2)
+    pipe.update_plan(dataclasses.replace(pipe.plan, B=16))
+    b = pipe.next_superstep(2)
+    assert b["x"].shape == (2, 16, 2)  # re-dealt at the new width
+    assert pipe.last_superstep_plan.B == 16
+    # counters account every sample across the switch: 2*(8+3) + 2*(16+3)
+    c = pipe.counters()
+    assert c.samples_arrived == 22 + 38
+    assert c.samples_consumed == 16 + 32
+    assert c.samples_discarded == 2 * 3 + 2 * 3
+    with pytest.raises(ValueError, match="registered buckets"):
+        pipe.update_plan(dataclasses.replace(pipe.plan, B=12))
+
+
+def test_pipeline_adopt_ladder_snaps_unregistered_plan():
+    pipe = StreamingPipeline(lambda rng, n: {"x": rng.normal(size=(n, 2))},
+                             StreamConfig(), 2, 1, batch=10)
+    pipe.adopt_ladder(rates.BucketLadder((8, 16)))
+    assert pipe.plan.B == 16  # snapped up to the nearest keep-up bucket
+
+
+def test_prefetch_counters_coherent_across_bucket_switch():
+    """Every staged superstep carries the plan that dealt it, and successive
+    counter snapshots account for exactly that plan's samples — no loss, no
+    duplication, even while the ring drains old-width items."""
+    lad = rates.BucketLadder((8, 16))
+    pipe = _xy_pipe(lad)
+    K, n_steps = 2, 8
+    pf = DevicePrefetcher(lambda: pipe.next_superstep(K),
+                          counters=pipe.counters,
+                          meta=lambda: pipe.last_superstep_plan, depth=2)
+    consumed = []
+    with pf:
+        for i in range(n_steps):
+            batch = next(pf)
+            consumed.append((batch, pf.counters, pf.meta))
+            if i == 2:  # switch mid-stream, ring still holds B=8 items
+                pipe.update_plan(dataclasses.replace(pipe.plan, B=16, mu=3))
+    # the switch eventually lands; items before it keep their old width
+    widths = [b["x"].shape[1] for b, _, _ in consumed]
+    assert widths[0] == 8 and widths[-1] == 16
+    assert widths == sorted(widths)  # monotone: old-width items drain first
+    prev_arr = prev_con = 0
+    for batch, counters, plan in consumed:
+        assert batch["x"].shape == (K, plan.B, 2)  # meta matches the batch
+        # each snapshot advances by exactly this superstep's samples
+        assert counters.samples_arrived - prev_arr == K * (plan.B + plan.mu)
+        assert counters.samples_consumed - prev_con == K * plan.B
+        prev_arr, prev_con = counters.samples_arrived, counters.samples_consumed
+
+
+# ---------------------------------------------------------------------------
+# Fake-clock driver regressions
+# ---------------------------------------------------------------------------
+
+class _FakeClock:
+    """Monotonic clock that jumps `dt` seconds per reading."""
+
+    def __init__(self, dt):
+        self.t, self.dt = 0.0, dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+class _JitteryClock:
+    """Alternates between a fast and a slow dt per timed superstep (two
+    readings each), emulating scheduler jitter."""
+
+    def __init__(self, dts):
+        self.t, self.dts, self.reads = 0.0, dts, 0
+
+    def __call__(self):
+        self.t += self.dts[(self.reads // 2) % len(self.dts)]
+        self.reads += 1
+        return self.t
+
+
+def _run_cfg(mode="exact", rounds=1, stream=StreamConfig()):
+    cfg = dataclasses.replace(
+        reduced(get_config("granite-8b"), layers=1, d_model=16),
+        vocab_size=32, d_ff=32)
+    return RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                     averaging=AveragingConfig(mode, rounds), stream=stream,
+                     optimizer="adam", learning_rate=1e-3,
+                     param_dtype="float32", remat=False)
+
+
+def _sample_fn(vocab=32, seed=0):
+    data = MarkovTokenStream(vocab, seed=seed)
+
+    def draw(rng, n):
+        toks = data.sample(rng, n, SEQ + 1)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    return draw
+
+
+def _lm_driver(stream, clock, gov, *, batch=BATCH, warmup=0, per_bucket=0,
+               prefetch=0, trace_log=None):
+    run_cfg = _run_cfg(stream=stream)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ctx = mesh_rules(mesh, activation_rules(mesh, run_cfg.shape))
+    ctx.__enter__()
+    state = init_state(run_cfg, jax.random.PRNGKey(0))
+    builder = None
+    if trace_log is not None:
+        base, _ = build_superstep(run_cfg, mesh)
+
+        def builder(B):
+            def counted(s, b):
+                trace_log.append(B)  # runs once per jit trace, not per call
+                return base(s, b)
+            return counted
+
+    driver = StreamingDriver(
+        run_cfg, mesh, state, _sample_fn(), batch=batch,
+        superstep_builder=builder,
+        engine=EngineConfig(superstep=2, prefetch_depth=prefetch,
+                            replan_every=1, warmup_supersteps=warmup,
+                            warmup_per_bucket=per_bucket, governor=gov),
+        clock=clock)
+    return driver, ctx
+
+
+def test_driver_downshifts_B_when_fast():
+    """A fast clock proves the hardware keeps up easily: the governor walks B
+    down the ladder (Theorem 4 prefers the smallest keep-up B)."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    gov = GovernorConfig(buckets=(4, 8, 16), hysteresis=2)
+    driver, ctx = _lm_driver(stream, _FakeClock(1e-4), gov, batch=16)
+    try:
+        assert driver.pipeline.plan.B == 16
+        driver.run(6)
+        assert driver.pipeline.plan.B == 4
+        assert driver.pipeline.plan.mu == 0
+        switches = [r["bucket_switch"] for r in driver.history
+                    if "bucket_switch" in r]
+        assert switches and switches[0][0] == 16
+    finally:
+        ctx.__exit__(None, None, None)
+
+
+def test_driver_upshifts_B_when_slow_and_applies_hysteresis():
+    """A slow clock puts the run under-provisioned: the governor moves to the
+    TOP bucket (B*R_e is increasing in B, so the largest bucket minimizes the
+    discard rate) — but only after `hysteresis` consecutive agreeing
+    re-plans."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    gov = GovernorConfig(buckets=(8, 16), hysteresis=3)
+    driver, ctx = _lm_driver(stream, _FakeClock(50.0), gov)
+    try:
+        driver.run(6)
+        hist = driver.history
+        # proposals start at superstep 0, so with patience 3 the switch lands
+        # exactly at the third agreeing re-plan, not before
+        assert all("bucket_switch" not in r for r in hist[:2])
+        assert "bucket_switch" in hist[2]
+        assert driver.pipeline.plan.B == 16
+        assert driver.pipeline.plan.regime == "under-provisioned"
+        assert driver.pipeline.plan.mu > 0
+    finally:
+        ctx.__exit__(None, None, None)
+
+
+def test_driver_hysteresis_resists_jittery_timings():
+    """Timings that flip between keep-up-easily and drowning every superstep
+    must not thrash the ladder: no proposal streak ever reaches patience."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    gov = GovernorConfig(buckets=(4, 8, 16), hysteresis=2,
+                         estimate_rates=False)
+    driver, ctx = _lm_driver(stream, _JitteryClock((1e-4, 50.0)), gov)
+    try:
+        driver.run(8)
+        assert all("bucket_switch" not in r for r in driver.history)
+        assert driver.pipeline.plan.B == 8  # never moved
+    finally:
+        ctx.__exit__(None, None, None)
+
+
+def test_driver_steady_state_switch_zero_recompilation_lm():
+    """Acceptance: once both buckets are compiled, switching between them is
+    a plan swap only — the pre-compiled superstep is reused, zero retrace."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    gov = GovernorConfig(buckets=(8, 16), hysteresis=1, estimate_rates=False)
+    traces = []
+    # dt flips slow/fast every 4 supersteps -> the governor oscillates B
+    class _Phases:
+        def __init__(self):
+            self.t, self.reads = 0.0, 0
+
+        def __call__(self):
+            self.t += 50.0 if (self.reads // 8) % 2 == 0 else 1e-4
+            self.reads += 1
+            return self.t
+
+    driver, ctx = _lm_driver(stream, _Phases(), gov, trace_log=traces)
+    try:
+        driver.run(16)
+        switches = [r for r in driver.history if "bucket_switch" in r]
+        assert len(switches) >= 2  # at least one full down-and-back cycle
+        assert driver.compiled_buckets == (8, 16)
+        # zero recompilation in steady state: one trace per (bucket,
+        # signature), nothing more — revisits hit the jit cache
+        assert sorted(set(traces)) == [8, 16]
+        assert len(traces) <= len(set(traces)) + 1  # +1: committed-state sig
+    finally:
+        ctx.__exit__(None, None, None)
+
+
+def test_driver_steady_state_switch_zero_recompilation_krasulina():
+    """Same acceptance on the PCA superstep: bucket switches through
+    `krasulina_superstep_builder` reuse the compiled executable."""
+    pca_stream = make_pca_stream(FIG7)
+    run_cfg = PCARunConfig(
+        pca=FIG7, averaging=AveragingConfig(mode="gossip", rounds=2),
+        stream=StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                            comms_rate=1e6))
+    N = 5
+    traces = []
+    base = krasulina.build_krasulina_superstep(run_cfg.averaging, N,
+                                               lambda t: 10.0 / t)
+
+    def builder(B):
+        def counted(s, b):
+            traces.append(B)
+            return base(s, b)
+        return counted
+
+    w0 = jax.random.normal(jax.random.PRNGKey(0), (FIG7.dim,))
+    state = krasulina.init_krasulina_state(w0 / jnp.linalg.norm(w0),
+                                           run_cfg.averaging, N)
+    gov = GovernorConfig(buckets=(10, 20), hysteresis=1, estimate_rates=False)
+
+    class _Phases:
+        def __init__(self):
+            self.t, self.reads = 0.0, 0
+
+        def __call__(self):
+            self.t += 50.0 if (self.reads // 8) % 2 == 0 else 1e-4
+            self.reads += 1
+            return self.t
+
+    driver = StreamingDriver(
+        run_cfg, None, state, make_pca_host_sampler(pca_stream),
+        superstep_builder=builder, n_nodes=N, batch=10,
+        engine=EngineConfig(superstep=2, prefetch_depth=0, replan_every=1,
+                            warmup_supersteps=0, warmup_per_bucket=0,
+                            governor=gov),
+        clock=_Phases())
+    driver.run(16)
+    switches = [r for r in driver.history if "bucket_switch" in r]
+    assert len(switches) >= 2
+    assert driver.compiled_buckets == (10, 20)
+    assert sorted(set(traces)) == [10, 20]
+    assert len(traces) <= len(set(traces)) + 1
+    # the consensus spread metric stayed live through the switches
+    assert all(np.isfinite(r["metrics"]["consensus_err"])
+               for r in driver.history)
+
+
+def test_driver_new_signature_warmup_excluded_from_governor():
+    """Satellite bugfix: the first superstep of a LATER-compiled bucket pays
+    XLA compile time; with warmup_per_bucket=1 it must not feed replan (the
+    old global gate would have let it poison the timings)."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    gov = GovernorConfig(buckets=(8, 16), hysteresis=1, estimate_rates=False)
+    driver, ctx = _lm_driver(stream, _FakeClock(50.0), gov,
+                             warmup=0, per_bucket=1)
+    try:
+        driver.run(4)
+        hist = driver.history
+        # superstep 0 (B=8, initial sig with warmup 0): replans, switch to 16
+        assert hist[0].get("bucket_switch") == (8, 16)
+        # superstep 1 is the FIRST at the fresh B=16 signature: gated out
+        assert hist[1]["bucket"] == 16
+        assert "replanned" not in hist[1] and "target_bucket" not in hist[1]
+        # superstep 2 at B=16 is warm: the governor engages again (mu adapts)
+        assert "replanned" in hist[2]
+    finally:
+        ctx.__exit__(None, None, None)
+
+
+def test_driver_estimator_converges_in_loop():
+    """End-to-end: a clock whose dt follows eq. 4's ground truth as the
+    governor moves between buckets lets the online estimator pin (R_p, R_c)
+    within 20% (acceptance), replacing the config constants."""
+    N = 1
+    Rp_true, Rc_true = 2e3, 50.0  # slow compute AND heavy comms
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)  # config constants are both wrong
+    gov = GovernorConfig(buckets=(8, 16, 32), hysteresis=1, window=64)
+    K = 2
+
+    class _ModelClock:
+        """Second reading of each pair advances by the eq.-4 round time of
+        the superstep just produced (prefetch_depth=0: production happens
+        inside the timed window)."""
+
+        def __init__(self):
+            self.t, self.reads, self.driver = 0.0, 0, None
+
+        def __call__(self):
+            self.reads += 1
+            if self.reads % 2 == 0:
+                B = self.driver.pipeline.last_superstep_plan.B
+                self.t += K * (B / (N * Rp_true) + 1.0 / Rc_true)
+            else:
+                self.t += 1e-9
+            return self.t
+
+    clock = _ModelClock()
+    driver, ctx = _lm_driver(stream, clock, gov, batch=8)
+    clock.driver = driver
+    try:
+        driver.run(12)
+        ests = [(r["est_Rp"], r["est_Rc"]) for r in driver.history
+                if "est_Rc" in r]
+        assert ests, "estimator never became identifiable"
+        Rp_hat, Rc_hat = ests[-1]
+        assert Rp_hat == pytest.approx(Rp_true, rel=0.2)
+        assert Rc_hat == pytest.approx(Rc_true, rel=0.2)
+    finally:
+        ctx.__exit__(None, None, None)
+
+
+def test_krasulina_exact_mean_path_with_single_bucket_ladder():
+    """Satellite: the exact-mode (jnp.mean over nodes) PCA superstep keeps
+    working behind a bucket ladder of size 1 — mu adapts, B never moves, and
+    a B proposal is rejected with the registered-bucket error."""
+    pca_stream = make_pca_stream(FIG7)
+    run_cfg = PCARunConfig(
+        pca=FIG7, averaging=AveragingConfig(mode="exact"),
+        stream=StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                            comms_rate=1e6))
+    N = 5
+    w0 = jax.random.normal(jax.random.PRNGKey(0), (FIG7.dim,))
+    state = krasulina.init_krasulina_state(w0 / jnp.linalg.norm(w0),
+                                           run_cfg.averaging, N)
+    builder = krasulina.krasulina_superstep_builder(run_cfg.averaging, N,
+                                                    lambda t: 10.0 / t)
+    driver = StreamingDriver(
+        run_cfg, None, state, make_pca_host_sampler(pca_stream),
+        superstep_builder=builder, n_nodes=N, batch=10,
+        engine=EngineConfig(superstep=2, prefetch_depth=0, replan_every=1,
+                            warmup_supersteps=0, warmup_per_bucket=0),
+        clock=_FakeClock(50.0))
+    assert driver.ladder.buckets == (10,)
+    driver.run(3)
+    assert driver.pipeline.plan.B == 10
+    assert driver.pipeline.plan.mu > 0  # mu adaptation still live
+    with pytest.raises(ValueError, match=r"registered buckets: \[10\]"):
+        driver.pipeline.update_plan(
+            dataclasses.replace(driver.pipeline.plan, B=20))
+
+
+def test_driver_exact_mode_default_governor_is_pinned():
+    """Satellite: the default single-bucket governor on the exact-averaging
+    (jnp.mean) path reproduces the pre-ladder behavior — B never moves, the
+    ladder has exactly one bucket, and mu still adapts."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    driver, ctx = _lm_driver(stream, _FakeClock(50.0), GovernorConfig())
+    try:
+        assert len(driver.ladder) == 1 and driver.ladder.buckets == (BATCH,)
+        driver.run(3)
+        assert driver.pipeline.plan.B == BATCH
+        assert driver.pipeline.plan.mu > 0  # mu adaptation still live
+        assert all("bucket_switch" not in r for r in driver.history)
+    finally:
+        ctx.__exit__(None, None, None)
