@@ -1,0 +1,156 @@
+"""Elastic-membership benchmark (docs/DESIGN.md §Elastic membership): what
+node churn actually costs on the streaming engine.
+
+A deterministic `core.faults.FaultSchedule` kills one node mid-stream and
+rejoins it later; the gossip Krasulina driver runs the churn scenario against
+a lockstep (no-fault) baseline at a matched sample budget. Rows:
+
+* throughput  -- rounds/s for the churn run vs the lockstep baseline (the
+                 drop era runs the cohort superstep on fewer rows)
+* consensus   -- final consensus error of churn vs lockstep; CONTRACT
+                 (asserted in quick and full mode — the run is deterministic:
+                 ungoverned plan, scripted faults, seeded sampler): churn
+                 stays within 2x of lockstep at a matched sample budget
+* rejoin      -- CONTRACT: the rejoin superstep reuses the full-cohort
+                 executable — zero retraces (trace-counted, not inferred)
+* swap_us     -- host-side cost of one `swap_membership` plan swap, the only
+                 engine work a join/leave adds outside compiled code
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs.base import AveragingConfig, GovernorConfig, StreamConfig
+from repro.configs.paper_pca import FIG7, PCARunConfig
+from repro.core import krasulina, rates
+from repro.core.faults import FaultSchedule
+from repro.core.mixing import Membership
+from repro.data.pipeline import StreamingPipeline
+from repro.data.synthetic import make_pca_host_sampler, make_pca_stream
+from repro.train.driver import EngineConfig, StreamingDriver
+
+N = 5
+B = 10
+K = 2
+
+
+def _driver(faults, traces):
+    run_cfg = PCARunConfig(
+        pca=FIG7, averaging=AveragingConfig(mode="gossip", rounds=2),
+        stream=StreamConfig())  # ungoverned: deterministic (B, mu) per cohort
+    inner = krasulina.krasulina_superstep_builder(
+        run_cfg.averaging, N, lambda t: 10.0 / t)
+
+    def builder(Bq, membership=None):
+        raw = inner(Bq, membership)
+        m = N if membership is None else membership.n_active
+
+        def counted(s, b):
+            traces.append((Bq, m))  # once per jit trace, not per call
+            return raw(s, b)
+
+        return counted
+
+    w0 = jax.random.normal(jax.random.PRNGKey(0), (FIG7.dim,))
+    state = krasulina.init_krasulina_state(w0 / jnp.linalg.norm(w0),
+                                           run_cfg.averaging, N)
+    return StreamingDriver(
+        run_cfg, None, state, make_pca_host_sampler(make_pca_stream(FIG7)),
+        superstep_builder=builder, n_nodes=N, batch=B, faults=faults,
+        engine=EngineConfig(superstep=K, prefetch_depth=0, replan_every=0,
+                            warmup_supersteps=0, warmup_per_bucket=0,
+                            governor=GovernorConfig()))
+
+
+def _timed_run(driver, supersteps):
+    t0 = time.perf_counter()
+    driver.run(supersteps)
+    return time.perf_counter() - t0
+
+
+def _bench_churn(quick: bool) -> None:
+    steps = 10 if quick else 40
+    die, back = steps // 4, 3 * steps // 4
+    faults = FaultSchedule.parse(f"death:{N - 1}@{die}-{back}", N)
+
+    traces: list = []
+    churn = _driver(faults, traces)
+    churn.run(2)  # absorb the initial-signature compiles
+    n_traces0 = len(traces)
+    wall = _timed_run(churn, steps)
+    rounds = steps * K
+    consumed_churn = churn.pipeline.samples_consumed
+    err_churn = churn.history[-1]["metrics"]["consensus_err"]
+    # the rejoin contract: returning to the full cohort reuses its compiled
+    # executable — only the drop-era (B', m-1) signature was traced mid-run
+    mid_traces = traces[n_traces0:]
+    retraces = sum(1 for t in mid_traces if t[1] == N)
+    emit("elastic/rejoin", 0.0,
+         f"retraces={retraces};mid_run_traces={len(mid_traces)};"
+         f"signatures={len(churn.compiled_signatures)};"
+         f"events={len(churn.membership_events)}")
+    assert retraces == 0, ("rejoin retraced the full-cohort superstep",
+                           traces)
+    assert churn.membership.is_full
+
+    base = _driver(None, [])
+    base.run(2)
+    # matched sample budget: the drop era deals B rounded up to the smaller
+    # cohort, so the churn run consumed slightly more samples per superstep
+    base_steps = -(-consumed_churn // (K * B))
+    wall_base = _timed_run(base, base_steps)
+    err_base = base.history[-1]["metrics"]["consensus_err"]
+
+    # median per-superstep throughput is robust to the one-time drop-era
+    # compile (the first visit of the (B', m-1) signature pays one retrace —
+    # the same cold-switch cost the governor suite measures)
+    def median_rps(d):
+        xs = sorted(r["rounds_per_s"] for r in d.history[2:])
+        return xs[len(xs) // 2]
+
+    emit("elastic/throughput/churn", wall / rounds * 1e6,
+         f"rounds_per_s={median_rps(churn):.1f};supersteps={steps};"
+         f"samples={consumed_churn};wall_s={wall:.3f}")
+    emit("elastic/throughput/lockstep", wall_base / (base_steps * K) * 1e6,
+         f"rounds_per_s={median_rps(base):.1f};"
+         f"supersteps={base_steps};samples={base.pipeline.samples_consumed};"
+         f"wall_s={wall_base:.3f}")
+    ratio = err_churn / max(err_base, 1e-30)
+    emit("elastic/consensus", 0.0,
+         f"err_churn={err_churn:.3e};err_lockstep={err_base:.3e};"
+         f"ratio={ratio:.3f}")
+    # graceful degradation contract: churn costs consensus error, but within
+    # 2x of lockstep at a matched sample budget (the rejoin sync pulls the
+    # returning node back to the cohort mean)
+    assert ratio <= 2.0, ("consensus error under churn out of tolerance",
+                          err_churn, err_base)
+
+
+def _bench_swap(quick: bool) -> None:
+    pipe = StreamingPipeline(
+        lambda rng, n: {"x": rng.normal(size=(n, 2))},
+        StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                     comms_rate=1e6),
+        n_nodes=N, rounds_R=2, horizon=1e6)
+    base = rates.BucketLadder.from_buckets((10, 20), N, horizon_samples=1e6)
+    pipe.swap_membership(Membership.full(N), base)
+    masks = [Membership.full(N).drop(N - 1), Membership.full(N)]
+    ladders = [base.for_cohort(N - 1, horizon_samples=1e6), base]
+    i = 0
+
+    def swap():
+        nonlocal i
+        i += 1
+        return pipe.swap_membership(masks[i % 2], ladders[i % 2])
+
+    us = time_fn(swap, warmup=2, iters=5 if quick else 21)
+    emit("elastic/swap_us", us, f"n_nodes={N};ladder={len(base)}")
+
+
+def run(quick: bool = False) -> None:
+    _bench_churn(quick)
+    _bench_swap(quick)

@@ -21,7 +21,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset: "
                          "rates,dmb,krasulina,dsgd,consensus,kernels,pipeline,"
-                         "governor,roofline")
+                         "governor,elastic,roofline")
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: tiny shapes, no paper-regime asserts")
     ap.add_argument("--json", default="", metavar="OUT",
@@ -29,9 +29,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_consensus, bench_dmb, bench_dsgd,
-                            bench_governor, bench_kernels, bench_krasulina,
-                            bench_pipeline, bench_rates, bench_roofline,
-                            common)
+                            bench_elastic, bench_governor, bench_kernels,
+                            bench_krasulina, bench_pipeline, bench_rates,
+                            bench_roofline, common)
 
     suites = {
         "rates": bench_rates.run,       # Fig. 5
@@ -42,6 +42,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "pipeline": bench_pipeline.run,  # streaming engine (superstep/prefetch)
         "governor": bench_governor.run,  # adaptive-B bucket ladder
+        "elastic": bench_elastic.run,   # node churn vs lockstep baseline
         "roofline": bench_roofline.run,  # deliverable (g)
     }
     chosen = [s.strip() for s in args.only.split(",") if s.strip()] or list(suites)

@@ -271,6 +271,21 @@ class GovernorConfig:
     estimate_rates: bool = True
     window: int = 64  # estimator observation window (supersteps)
 
+    # --- elastic membership (docs/DESIGN.md §Elastic membership) ---
+    # straggler policy over per-node round times: "wait" (lockstep, never
+    # drop — the paper's assumption), "drop" (exclude nodes slower than
+    # straggler_slow_factor x the active-cohort median), "deadline" (exclude
+    # nodes slower than the absolute straggler_deadline_s)
+    straggler_policy: str = "wait"
+    straggler_slow_factor: float = 2.0
+    straggler_deadline_s: float = 0.0
+    # consecutive verdicts before a node is dropped or readmitted (per-node
+    # BucketHysteresis — same debounce discipline as bucket switches)
+    straggler_patience: int = 2
+    # on rejoin, overwrite the returning node's rows with the active-cohort
+    # mean so its stale iterate cannot blow up the consensus error
+    sync_on_rejoin: bool = True
+
 
 @dataclass(frozen=True)
 class RunConfig:

@@ -1,0 +1,147 @@
+"""Deterministic fault injection for the elastic node axis
+(docs/DESIGN.md §Elastic membership).
+
+A `FaultSchedule` scripts node churn against the driver's superstep counter:
+node death (with optional rejoin), transient slowdown factors, and flaky
+periodic dropout. The same schedule object drives
+
+* the mixing mask — `alive(step)` yields the `core.mixing.Membership` the
+  superstep must run under, and
+* the clock — `time_factors(step)` yields per-node wall-time multipliers the
+  tests/benchmarks fold into their fake clocks and the straggler policy's
+  per-node round times.
+
+Keeping faults a pure function of the step index (no RNG, no wall clock)
+makes every churn scenario replayable: tests, benchmarks, and the launch CLI
+all share one spec format, parsed by `FaultSchedule.parse`:
+
+    death:1@5        node 1 dies at step 5, never returns
+    death:1@5-12     node 1 dies at step 5, rejoins at step 12
+    slow:0@3-9x4     node 0 runs 4x slower during steps [3, 9)
+    flaky:2@4-20p3   node 2 alternates dead/alive every 3 steps in [4, 20)
+
+Comma-separate multiple faults: "death:1@5-12,slow:0@3-9x4".
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from repro.core.mixing import Membership
+
+KINDS = ("death", "slow", "flaky")
+
+_SPEC_RE = re.compile(
+    r"^(?P<kind>death|slow|flaky):(?P<node>\d+)@(?P<start>\d+)"
+    r"(?:-(?P<end>\d+))?(?:x(?P<factor>[0-9.]+))?(?:p(?P<period>\d+))?$")
+
+
+@dataclass(frozen=True)
+class NodeFault:
+    """One scripted fault on one node over the step window [start, end)."""
+
+    node: int
+    kind: str  # death | slow | flaky
+    start: int
+    end: int = -1  # exclusive; -1 = until the end of the run
+    factor: float = 1.0  # slowdown multiplier (kind == "slow")
+    period: int = 0  # dead/alive alternation period (kind == "flaky")
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; one of {KINDS}")
+        if self.node < 0 or self.start < 0:
+            raise ValueError(f"bad fault target: node={self.node} "
+                             f"start={self.start}")
+        if self.end != -1 and self.end <= self.start:
+            raise ValueError(f"fault window is empty: [{self.start}, {self.end})")
+        if self.kind == "slow" and self.factor <= 1.0:
+            raise ValueError(f"slowdown factor must be > 1: {self.factor}")
+        if self.kind == "flaky" and self.period < 1:
+            raise ValueError(f"flaky fault needs period >= 1: {self.period}")
+
+    def _in_window(self, step: int) -> bool:
+        return step >= self.start and (self.end == -1 or step < self.end)
+
+    def dead_at(self, step: int) -> bool:
+        if not self._in_window(step):
+            return False
+        if self.kind == "death":
+            return True
+        if self.kind == "flaky":
+            # starts dead at `start`, alternates every `period` steps
+            return ((step - self.start) // self.period) % 2 == 0
+        return False
+
+    def factor_at(self, step: int) -> float:
+        if self.kind == "slow" and self._in_window(step):
+            return self.factor
+        return 1.0
+
+
+class FaultSchedule:
+    """A replayable script of node faults over `n` node slots."""
+
+    def __init__(self, n: int, faults: Sequence[NodeFault] = ()):
+        if n < 1:
+            raise ValueError(f"need at least one node: n={n}")
+        for f in faults:
+            if f.node >= n:
+                raise ValueError(f"fault targets node {f.node} but n={n}")
+        self.n = n
+        self.faults: Tuple[NodeFault, ...] = tuple(faults)
+
+    @classmethod
+    def parse(cls, spec: str, n: int) -> "FaultSchedule":
+        """Parse the comma-separated fault DSL (module docstring)."""
+        faults = []
+        for tok in filter(None, (t.strip() for t in spec.split(","))):
+            m = _SPEC_RE.match(tok)
+            if not m:
+                raise ValueError(f"bad fault spec {tok!r}; expected e.g. "
+                                 f"'death:1@5-12', 'slow:0@3-9x4', "
+                                 f"'flaky:2@4-20p3'")
+            g = m.groupdict()
+            faults.append(NodeFault(
+                node=int(g["node"]), kind=g["kind"], start=int(g["start"]),
+                end=-1 if g["end"] is None else int(g["end"]),
+                factor=1.0 if g["factor"] is None else float(g["factor"]),
+                period=0 if g["period"] is None else int(g["period"])))
+        return cls(n, faults)
+
+    def alive(self, step: int) -> Membership:
+        """The membership the fault layer dictates at a driver superstep."""
+        mask = [True] * self.n
+        for f in self.faults:
+            if f.dead_at(step):
+                mask[f.node] = False
+        if not any(mask):
+            raise ValueError(f"fault schedule kills every node at step {step}")
+        return Membership(self.n, tuple(mask))
+
+    def time_factors(self, step: int) -> np.ndarray:
+        """Per-node wall-time multipliers at a step (1.0 = nominal). Factors
+        from overlapping slowdowns on the same node multiply."""
+        out = np.ones(self.n)
+        for f in self.faults:
+            out[f.node] *= f.factor_at(step)
+        return out
+
+    def round_s_per_node(self, step: int, base_round_s: float) -> list:
+        """Simulated per-node round times at a step: the nominal round time
+        scaled by each node's slowdown factor, None for dead nodes. This is
+        the feed for `core.rates.StragglerPolicy.observe` in tests and
+        `benchmarks/bench_elastic.py`."""
+        alive = self.alive(step).active
+        factors = self.time_factors(step)
+        return [base_round_s * float(factors[i]) if alive[i] else None
+                for i in range(self.n)]
+
+    def events_between(self, lo: int, hi: int) -> bool:
+        """True if membership differs anywhere in (lo, hi] from step lo —
+        a cheap way for callers to skip mask recomputation on quiet spans."""
+        base = self.alive(lo).active
+        return any(self.alive(s).active != base for s in range(lo + 1, hi + 1))

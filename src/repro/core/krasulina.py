@@ -245,20 +245,32 @@ def krasulina_superstep_builder(averaging: AveragingConfig, n_nodes: int,
                                 metric: Optional[Callable] = None,
                                 mix: Optional[CirculantMixOp] = None,
                                 fuse_xi: Optional[bool] = None,
-                                ) -> Callable[[int], Callable]:
+                                ) -> Callable[..., Callable]:
     """Bucket-keyed PCA superstep factory for the adaptive-B governor: the
     counterpart of `train.trainer.superstep_builder`, consumable as
     `StreamingDriver(superstep_builder=...)`. The K-round scan derives every
     shape (K, the per-node share B/N) from its batch at trace time, so one
     closure serves all buckets; the MixOp consensus engine is built once
     here, and the driver compiles one executable per registered bucket
-    (docs/DESIGN.md §Adaptive batch buckets)."""
-    superstep = build_krasulina_superstep(averaging, n_nodes, stepsize,
-                                          metric=metric, mix=mix,
-                                          fuse_xi=fuse_xi)
+    (docs/DESIGN.md §Adaptive batch buckets).
 
-    def build(B: int) -> Callable:
-        return superstep
+    `build(B, membership=None)` — a partial `core.mixing.Membership` asks for
+    the cohort superstep (n_nodes = n_active, gossip schedule recomposed over
+    the active cohort — docs/DESIGN.md §Elastic membership); the prebuilt
+    `mix` override only applies at full membership, since its schedule is
+    sized for the full node axis."""
+    full = build_krasulina_superstep(averaging, n_nodes, stepsize,
+                                     metric=metric, mix=mix, fuse_xi=fuse_xi)
+    cohort_cache = {n_nodes: full}
+
+    def build(B: int, membership=None) -> Callable:
+        m = n_nodes if membership is None else membership.n_active
+        fn = cohort_cache.get(m)
+        if fn is None:
+            fn = build_krasulina_superstep(averaging, m, stepsize,
+                                           metric=metric, fuse_xi=fuse_xi)
+            cohort_cache[m] = fn
+        return fn
 
     return build
 

@@ -82,6 +82,102 @@ def schedule_matrix(sched: Schedule, n: int) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Elastic membership (docs/DESIGN.md §Elastic membership)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Membership:
+    """Which of the `n` node slots participate in mixing this superstep.
+
+    The node axis keeps its full extent `n` end-to-end (state arrays never
+    change shape); a dropped slot simply stops sending and receiving — its
+    mixing row degrades to self-weight 1 — while the active cohort mixes
+    over a recomposed operator that is doubly stochastic over the cohort.
+    Hashable so it can key compiled-superstep registries; equality is by
+    value, so rejoining to full membership compares equal to (and reuses
+    operators bit-identical to) the never-left mask.
+    """
+
+    n: int
+    active: Tuple[bool, ...]
+
+    def __post_init__(self):
+        if self.n < 1 or len(self.active) != self.n:
+            raise ValueError(f"bad membership: n={self.n} "
+                             f"mask length {len(self.active)}")
+        if not any(self.active):
+            raise ValueError("membership needs at least one active node")
+
+    @classmethod
+    def full(cls, n: int) -> "Membership":
+        return cls(n, (True,) * n)
+
+    def drop(self, *ids: int) -> "Membership":
+        mask = list(self.active)
+        for i in ids:
+            mask[i] = False
+        return Membership(self.n, tuple(mask))
+
+    def rejoin(self, *ids: int) -> "Membership":
+        mask = list(self.active)
+        for i in ids:
+            mask[i] = True
+        return Membership(self.n, tuple(mask))
+
+    @property
+    def n_active(self) -> int:
+        return sum(self.active)
+
+    @property
+    def active_ids(self) -> Tuple[int, ...]:
+        return tuple(i for i, a in enumerate(self.active) if a)
+
+    @property
+    def is_full(self) -> bool:
+        return all(self.active)
+
+
+def masked_schedule(topology: str, membership: Membership,
+                    self_weight: float = 0.0) -> Schedule:
+    """Circulant schedule over the *relabeled* active cohort.
+
+    The device gossip path compacts the active rows into a dense [m, ...]
+    block (gather by `membership.active_ids`), so the cohort is itself a
+    circulant ring/expander of size m = n_active and the ordinary schedule
+    construction applies verbatim. Full membership returns exactly
+    `schedule(topology, n)` — a node that leaves and rejoins gets back the
+    bit-identical operator it had before leaving."""
+    return schedule(topology, membership.n_active, self_weight)
+
+
+def masked_matrix(A: np.ndarray, membership: Membership) -> np.ndarray:
+    """Degrade a dense one-round mixing matrix to a membership mask.
+
+    Returns a full [n, n] doubly-stochastic matrix: dropped rows/columns are
+    identity (self-weight 1 — the node holds its state, sends and receives
+    nothing), and the active block is re-derived by Metropolis reweighting of
+    the subgraph that `A`'s off-diagonal support induces on the active cohort
+    — so the block is doubly stochastic over the cohort rather than leaking
+    the dropped nodes' weight mass. Full membership returns `A` unchanged
+    (bit-identical rejoin)."""
+    n = A.shape[0]
+    if membership.n != n:
+        raise ValueError(f"membership n={membership.n} vs matrix n={n}")
+    if membership.is_full:
+        return A
+    ids = list(membership.active_ids)
+    out = np.eye(n, dtype=A.dtype)
+    if len(ids) == 1:
+        return out
+    sub_adj = (np.abs(A[np.ix_(ids, ids)]) > 0).astype(float)
+    np.fill_diagonal(sub_adj, 0.0)
+    block = metropolis_weights(sub_adj)
+    out[np.ix_(ids, ids)] = block
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Dense matrices (paper experiments)
 # ---------------------------------------------------------------------------
 

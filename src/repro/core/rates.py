@@ -58,6 +58,15 @@ class Plan:
     R: int
     Re: float
     regime: str  # "resourceful" | "under-provisioned"
+    # Active-cohort snapshot (a `core.mixing.Membership`, or None = full/static
+    # membership). Rides the per-superstep plan latch, so in-flight prefetched
+    # batches drain under the membership that dealt them
+    # (docs/DESIGN.md §Elastic membership).
+    membership: Optional[object] = None
+
+    @property
+    def n_active(self) -> Optional[int]:
+        return None if self.membership is None else self.membership.n_active
 
 
 def plan(stream: StreamConfig, N: int, R: int, *, B: Optional[int] = None,
@@ -106,6 +115,11 @@ class BucketLadder:
     """
 
     buckets: Tuple[int, ...]
+    # The node count the buckets were derived for. Buckets are multiples of N
+    # (the batch must split evenly across nodes), so a cohort change silently
+    # invalidates them; storing N lets `snap`/`for_cohort` reject or re-derive
+    # instead. None = legacy hand-built ladder, no cohort checking.
+    N: Optional[int] = None
 
     def __post_init__(self):
         if not self.buckets:
@@ -115,6 +129,15 @@ class BucketLadder:
                              f"{self.buckets}")
         if self.buckets[0] < 1:
             raise ValueError(f"buckets must be positive: {self.buckets}")
+        if self.N is not None:
+            if self.N < 1:
+                raise ValueError(f"ladder N must be positive: {self.N}")
+            bad = [b for b in self.buckets if b % self.N]
+            if bad:
+                raise ValueError(
+                    f"buckets {bad} are not multiples of N={self.N}; "
+                    f"re-derive the ladder for the new cohort via "
+                    f"`for_cohort`")
 
     def __len__(self) -> int:
         return len(self.buckets)
@@ -122,13 +145,32 @@ class BucketLadder:
     def __contains__(self, B: int) -> bool:
         return B in self.buckets
 
-    def snap(self, B: int) -> int:
+    def snap(self, B: int, *, N: Optional[int] = None) -> int:
         """Smallest registered bucket >= B (the keep-up direction), or the
-        largest bucket when B exceeds the ladder."""
+        largest bucket when B exceeds the ladder. Pass the current cohort
+        size `N` to assert the ladder is still valid for it — snapping onto
+        a ladder derived for a different cohort would hand compiled code a
+        batch that no longer splits evenly across nodes."""
+        if N is not None and self.N is not None and N != self.N:
+            raise ValueError(
+                f"ladder was derived for N={self.N} but cohort is now "
+                f"N={N}; re-derive via `for_cohort`")
         for b in self.buckets:
             if b >= B:
                 return b
         return self.buckets[-1]
+
+    def for_cohort(self, n_active: int, *,
+                   horizon_samples: Optional[float] = None) -> "BucketLadder":
+        """Re-derive the ladder for a changed cohort size: the same candidate
+        buckets re-normalized to multiples of `n_active` (and re-clipped to
+        the Theorem-4 ceiling, itself a multiple of the new N). Identity when
+        the cohort already matches, so full-membership ladders are reused
+        (and their compiled supersteps with them)."""
+        if n_active == self.N:
+            return self
+        return BucketLadder.from_buckets(self.buckets, n_active,
+                                         horizon_samples=horizon_samples)
 
     @classmethod
     def from_buckets(cls, raw, N: int, *,
@@ -144,7 +186,7 @@ class BucketLadder:
         if horizon_samples:
             ceil_B = horizon_ceiling(N, horizon_samples)
             cand = {min(c, ceil_B) for c in cand}
-        return cls(tuple(sorted(cand)))
+        return cls(tuple(sorted(cand)), N=N)
 
     @classmethod
     def build(cls, base_B: int, N: int, *, n_buckets: int = 3,
@@ -193,11 +235,26 @@ class RoundTimeEstimator:
         if N < 1 or R < 0:
             raise ValueError(f"bad estimator dims N={N} R={R}")
         self.N, self.R = N, R
-        self._obs: Deque[Tuple[int, float]] = deque(maxlen=max(2, window))
+        # (equivalent full-cohort B, seconds); B is fractional after the
+        # `observe_cohort` x = B*N/m normalization
+        self._obs: Deque[Tuple[float, float]] = deque(maxlen=max(2, window))
 
     def observe(self, B: int, round_s: float) -> None:
         if B > 0 and round_s > 0 and math.isfinite(round_s):
             self._obs.append((B, round_s))
+
+    def observe_cohort(self, B: int, n_active: int, round_s: float) -> None:
+        """Observe a round timed at a partial cohort of `n_active` nodes.
+
+        The affine model T(B) = B/(N*R_p) + R/R_c assumes all N nodes share
+        the compute; at a cohort of m nodes the compute term is B/(m*R_p) =
+        (B*N/m)/(N*R_p), so the observation enters the fit at the equivalent
+        full-cohort regressor x = B*N/m. This keeps one estimator coherent
+        across membership eras instead of resetting the window on every
+        churn event."""
+        if n_active < 1:
+            return
+        self.observe(B * self.N / n_active, round_s)
 
     def estimate(self) -> Optional[RateEstimate]:
         n = len(self._obs)
@@ -246,6 +303,137 @@ class BucketHysteresis:
             self._pending, self._streak = None, 0
             return target_B
         return current_B
+
+
+class PerNodeRoundTime:
+    """Per-node EWMA of observed round times
+    (docs/DESIGN.md §Elastic membership).
+
+    The superstep itself only yields one wall time (the slowest node's —
+    gossip is lockstep), so per-node times come from outside the engine: a
+    `core.faults.FaultSchedule` in tests/benchmarks, node-local heartbeats in
+    a real deployment. The EWMA smooths one-off jitter so the straggler
+    policy reacts to sustained slowdowns, not noise."""
+
+    def __init__(self, n: int, *, alpha: float = 0.5):
+        if n < 1 or not 0.0 < alpha <= 1.0:
+            raise ValueError(f"bad PerNodeRoundTime n={n} alpha={alpha}")
+        self.n = n
+        self.alpha = alpha
+        self._ewma: list = [None] * n
+
+    def observe_all(self, round_s_per_node) -> None:
+        """Fold one round's per-node wall times into the EWMAs. Entries that
+        are None / non-finite / non-positive (e.g. dead nodes) are skipped —
+        their EWMA freezes at the last live value."""
+        if len(round_s_per_node) != self.n:
+            raise ValueError(f"expected {self.n} per-node times, "
+                             f"got {len(round_s_per_node)}")
+        for i, t in enumerate(round_s_per_node):
+            if t is None or not math.isfinite(t) or t <= 0:
+                continue
+            prev = self._ewma[i]
+            self._ewma[i] = t if prev is None else (
+                self.alpha * t + (1.0 - self.alpha) * prev)
+
+    def value(self, node: int) -> Optional[float]:
+        return self._ewma[node]
+
+    def median(self, ids=None) -> Optional[float]:
+        """Median EWMA over `ids` (default: all nodes with observations)."""
+        vals = sorted(v for i, v in enumerate(self._ewma)
+                      if v is not None and (ids is None or i in ids))
+        if not vals:
+            return None
+        k = len(vals)
+        return vals[k // 2] if k % 2 else 0.5 * (vals[k // 2 - 1] + vals[k // 2])
+
+
+class StragglerPolicy:
+    """Decide which nodes the governor should wait for
+    (docs/DESIGN.md §Elastic membership).
+
+    Three modes, all fed by `PerNodeRoundTime`:
+
+    * "wait"     — never drop anyone; the superstep runs at the slowest
+                   active node's pace (the paper's lockstep assumption — the
+                   baseline the benchmarks compare against).
+    * "drop"     — a node whose EWMA round time exceeds `slow_factor` x the
+                   active-cohort median is proposed out; it is proposed back
+                   in once it recovers below the threshold.
+    * "deadline" — a node slower than the absolute `deadline_s` is proposed
+                   out (and back in on recovery); the effective round time
+                   is capped at the deadline.
+
+    Every in/out proposal is debounced through a per-node `BucketHysteresis`
+    (membership bit as a two-rung ladder), so one jittery reading can neither
+    evict nor readmit a node — the same patience discipline the governor
+    applies to bucket switches."""
+
+    MODES = ("wait", "drop", "deadline")
+
+    def __init__(self, n: int, mode: str = "wait", *, slow_factor: float = 2.0,
+                 deadline_s: float = 0.0, patience: int = 2,
+                 alpha: float = 0.5):
+        if mode not in self.MODES:
+            raise ValueError(f"unknown straggler policy {mode!r}; "
+                             f"one of {self.MODES}")
+        if mode == "drop" and slow_factor <= 1.0:
+            raise ValueError(f"slow_factor must be > 1: {slow_factor}")
+        if mode == "deadline" and deadline_s <= 0.0:
+            raise ValueError(f"deadline_s must be > 0: {deadline_s}")
+        self.n, self.mode = n, mode
+        self.slow_factor, self.deadline_s = slow_factor, deadline_s
+        self.times = PerNodeRoundTime(n, alpha=alpha)
+        self._hyst = [BucketHysteresis(patience) for _ in range(n)]
+        self._kept = [True] * n  # straggler verdict per node (debounced)
+
+    def _too_slow(self, node: int, cohort_ids) -> bool:
+        t = self.times.value(node)
+        if t is None:
+            return False  # no evidence — keep the node
+        if self.mode == "deadline":
+            return t > self.deadline_s
+        med = self.times.median(cohort_ids)
+        return med is not None and t > self.slow_factor * med
+
+    def observe(self, round_s_per_node) -> None:
+        self.times.observe_all(round_s_per_node)
+
+    def propose(self, membership) -> "object":
+        """Intersect a fault-layer membership with the debounced straggler
+        verdicts: nodes the fault layer killed stay out regardless; of the
+        survivors, sustained stragglers are dropped (drop/deadline modes).
+        Never empties the cohort — the least-slow node is always kept."""
+        if self.mode == "wait":
+            return membership
+        ids = membership.active_ids
+        for i in ids:
+            want = 0 if self._too_slow(i, ids) else 1
+            self._kept[i] = bool(
+                self._hyst[i].step(int(self._kept[i]), want))
+        kept = [i for i in ids if self._kept[i]]
+        if not kept:  # never stall the whole stream on a universal verdict
+            best = min(ids, key=lambda i: self.times.value(i) or 0.0)
+            kept = [best]
+        out = membership
+        for i in ids:
+            if i not in kept:
+                out = out.drop(i)
+        return out
+
+    def effective_round_s(self, membership, round_s_per_node) -> float:
+        """The wall time one gossip round actually costs under this policy:
+        the slowest *retained* node ("wait": slowest active node — lockstep;
+        "drop": stragglers excluded; "deadline": capped at the deadline)."""
+        vals = [round_s_per_node[i] for i in membership.active_ids
+                if round_s_per_node[i] is not None]
+        if not vals:
+            return 0.0
+        worst = max(vals)
+        if self.mode == "deadline":
+            return min(worst, self.deadline_s)
+        return worst
 
 
 def measured_processing_rate(B: int, N: int, R: int, wall_s_per_round: float,
@@ -328,8 +516,9 @@ def snap_plan_to_ladder(current: Plan, stream: StreamConfig, N: int,
         return current
     B = ladder.snap(current.B)
     if stream.streaming_rate > 0:
-        return plan(stream, N, current.R, B=B,
-                    horizon_samples=horizon_samples)
+        out = plan(stream, N, current.R, B=B,
+                   horizon_samples=horizon_samples)
+        return dataclasses.replace(out, membership=current.membership)
     return dataclasses.replace(current, B=B)
 
 
@@ -338,7 +527,8 @@ def replan(stream: StreamConfig, N: int, R: int, B: int,
            ladder: Optional[BucketLadder] = None,
            estimate: Optional[RateEstimate] = None,
            decided_B: Optional[int] = None,
-           horizon_samples: Optional[float] = None) -> Plan:
+           horizon_samples: Optional[float] = None,
+           membership: Optional[object] = None) -> Plan:
     """Closed-loop governor step: re-derive (B, mu) from the *measured* round
     time instead of the config's nominal R_p (Nokleby & Bajwa 2017 style
     adaptation of the DMB plan). `B` is the batch size the wall time was
@@ -360,7 +550,10 @@ def replan(stream: StreamConfig, N: int, R: int, B: int,
     `decided_B` overrides the bucket selection: pass it when the target went
     through an external debounce (the driver's `BucketHysteresis` sits
     between `select_bucket` and the plan) — the wall-time inversion still
-    happens at the observed `B`, but the plan is derived at `decided_B`."""
+    happens at the observed `B`, but the plan is derived at `decided_B`.
+
+    `N` is the *active cohort* size (eq. 4 re-inverted per cohort); pass
+    `membership` to stamp the cohort snapshot onto the returned plan."""
     observed = observed_stream(stream, N, R, B, wall_s_per_round,
                                estimate=estimate)
     if decided_B is not None:
@@ -371,6 +564,8 @@ def replan(stream: StreamConfig, N: int, R: int, B: int,
     else:
         target_B = B
     out = plan(observed, N, R, B=target_B, horizon_samples=horizon_samples)
+    if membership is not None:
+        out = dataclasses.replace(out, membership=membership)
     if ladder is not None and out.B not in ladder:
         # misconfigured hand-built ladder: no registered bucket fits the
         # Theorem-4 ceiling, so the horizon clip just produced an
@@ -379,6 +574,8 @@ def replan(stream: StreamConfig, N: int, R: int, B: int,
         # crashing the governor loop. Ladders from `from_buckets` can never
         # hit this.
         out = plan(observed, N, R, B=ladder.snap(out.B))
+        if membership is not None:
+            out = dataclasses.replace(out, membership=membership)
     return out
 
 

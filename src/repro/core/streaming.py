@@ -56,6 +56,56 @@ class GovernedPlanMixin:
         with self._plan_lock:
             self.plan = checked_plan_swap(self.plan, new_plan, self.ladder)
 
+    def swap_membership(self, membership, ladder: Optional[BucketLadder] = None
+                        ) -> Plan:
+        """Adopt a new active cohort: a join/leave is a plan swap, not a
+        restart (docs/DESIGN.md §Elastic membership).
+
+        Under the plan lock, eq. 4 is re-inverted at N = n_active and (B, mu)
+        re-derived, snapped onto `ladder` (the cohort's bucket ladder — pass
+        the one derived from the full-membership base ladder via
+        `BucketLadder.for_cohort` so a return to full membership restores the
+        original buckets exactly). Supersteps already dealt keep their old
+        plan snapshot and drain under the membership that dealt them; only
+        future supersteps latch the new cohort. Returns the adopted plan."""
+        with self._plan_lock:
+            cur = self.plan
+            if cur.membership == membership:
+                return cur
+            if cur.membership is None and membership.is_full:
+                # initial stamp: same cohort, just record the mask — keep the
+                # user's exact B rather than re-deriving it
+                self.plan = dataclasses.replace(cur, membership=membership)
+                return self.plan
+            m = membership.n_active
+            governed = (self.stream_cfg is not None
+                        and self.stream_cfg.streaming_rate > 0)
+            if governed:
+                try:
+                    new = plan(self.stream_cfg, m, cur.R,
+                               horizon_samples=self._plan_horizon)
+                except ValueError:
+                    # the shrunk cohort cannot keep up with the stream at any
+                    # B: a death must NOT crash the run — hold the current B
+                    # (rounded to the cohort) and let the plan go
+                    # under-provisioned (mu > 0 discards, Fig. 4's drop rule)
+                    B = -(-cur.B // m) * m
+                    new = plan(self.stream_cfg, m, cur.R, B=B,
+                               horizon_samples=self._plan_horizon)
+                if ladder is not None:
+                    new = snap_plan_to_ladder(new, self.stream_cfg, m, ladder,
+                                              horizon_samples=self._plan_horizon)
+            else:
+                # ungoverned: keep B as close as possible while splitting
+                # evenly across the cohort
+                B = -(-cur.B // m) * m
+                new = dataclasses.replace(cur,
+                                          B=ladder.snap(B) if ladder else B)
+            new = dataclasses.replace(new, membership=membership)
+            self.ladder = ladder if ladder is not None else self.ladder
+            self.plan = new
+            return new
+
     def _latch_plan(self) -> Plan:
         with self._plan_lock:
             return self.plan

@@ -144,21 +144,28 @@ class DevicePrefetcher:
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._final: Optional[Any] = None  # latched _Stop/_Raise terminal state
+        self._undelivered: Optional[_Raise] = None  # error stranded by close()
+        self._close_raised = False  # close() re-raises a pending error ONCE
+        self._error_delivered = False  # __next__ already surfaced the error
         self.counters: Optional[StreamCounters] = None
         self.meta: Optional[Any] = None
         self._thread = threading.Thread(target=self._worker, daemon=True,
                                         name="device-prefetch")
         self._thread.start()
 
-    def _put_stopaware(self, item: Any) -> None:
+    def _put_stopaware(self, item: Any) -> bool:
         """Bounded-ring put that wakes promptly when close() sets the stop
-        event (a plain blocking put could deadlock against close()'s drain)."""
+        event (a plain blocking put could deadlock against close()'s drain).
+        Returns False when the item could not be delivered because the ring
+        was shut down first — terminal `_Raise` items must then be stashed,
+        not dropped, or a pending producer error would vanish."""
         while not self._stop.is_set():
             try:
                 self._q.put(item, timeout=0.1)
-                return
+                return True
             except queue.Full:
                 continue
+        return False
 
     def _worker(self) -> None:
         try:
@@ -172,7 +179,8 @@ class DevicePrefetcher:
                 staged = self._stage(item)
                 self._put_stopaware((staged, snap, meta))
         except BaseException as e:  # surface producer failures at the consumer
-            self._put_stopaware(_Raise(e))
+            if not self._put_stopaware(_Raise(e)):
+                self._undelivered = _Raise(e)
             return
         self._put_stopaware(_Stop())
 
@@ -188,6 +196,7 @@ class DevicePrefetcher:
             raise StopIteration
         if isinstance(got, _Raise):
             self._final = got
+            self._error_delivered = True
             raise got.exc
         staged, snap, meta = got
         if snap is not None:
@@ -196,15 +205,41 @@ class DevicePrefetcher:
             self.meta = meta
         return staged
 
-    def close(self) -> None:
-        self._stop.set()
-        # drain so a blocked producer can observe the stop event
+    def _drain(self) -> Optional[_Raise]:
+        """Empty the ring; return the last pending `_Raise` found, if any."""
+        pending = None
         try:
             while True:
-                self._q.get_nowait()
+                item = self._q.get_nowait()
+                if isinstance(item, _Raise):
+                    pending = item
         except queue.Empty:
             pass
+        return pending
+
+    def close(self) -> None:
+        """Shut the ring down. Never deadlocks against a worker blocked on a
+        full ring (`_put_stopaware` polls the stop event), and re-raises a
+        producer error that was still pending — staged in the ring or
+        stranded by the shutdown itself — exactly once; an error already
+        delivered through `__next__` is not raised again. Idempotent
+        otherwise."""
+        self._stop.set()
+        # drain so a blocked producer can observe the stop event
+        pending = self._drain()
         self._thread.join(timeout=5.0)
+        # the worker may have enqueued (or stashed) its error between the
+        # first drain and its exit
+        pending = self._drain() or pending or self._undelivered
+        self._undelivered = None
+        if self._final is None:
+            # nothing will ever be enqueued again: a post-close __next__
+            # must not block on the dead worker
+            self._final = pending if pending is not None else _Stop()
+        if (pending is not None and not self._error_delivered
+                and not self._close_raised):
+            self._close_raised = True
+            raise pending.exc
 
     def __enter__(self) -> "DevicePrefetcher":
         return self

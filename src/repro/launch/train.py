@@ -21,6 +21,7 @@ import numpy as np
 from repro.configs import SHAPES, get_config, reduced as reduce_cfg
 from repro.configs.base import (AveragingConfig, GovernorConfig, RunConfig,
                                 StreamConfig)
+from repro.core.faults import FaultSchedule
 from repro.data.lm import MarkovTokenStream
 from repro.launch import sharding as shlib
 from repro.launch.mesh import make_host_mesh, make_production_mesh, n_data_nodes
@@ -73,6 +74,20 @@ def main():
     ap.add_argument("--horizon", type=float, default=0.0,
                     help="sample horizon t' for Theorem 4's B <= sqrt(t') "
                          "bucket ceiling (0 = no ceiling)")
+    ap.add_argument("--faults", default="",
+                    help="fault-injection spec for elastic membership, e.g. "
+                         "'death:1@5-12,slow:0@3-9x4' "
+                         "(see core/faults.py; needs --averaging gossip)")
+    ap.add_argument("--straggler-policy", default="wait",
+                    choices=["wait", "drop", "deadline"],
+                    help="straggler handling: wait (lockstep), drop "
+                         "(exclude nodes slower than --straggler-factor x "
+                         "median), deadline (--straggler-deadline seconds)")
+    ap.add_argument("--straggler-factor", type=float, default=2.0)
+    ap.add_argument("--straggler-deadline", type=float, default=0.0)
+    ap.add_argument("--no-rejoin-sync", action="store_true",
+                    help="keep a rejoining node's stale iterate instead of "
+                         "syncing it to the cohort mean")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 mesh (requires 256 devices)")
     args = ap.parse_args()
@@ -94,7 +109,13 @@ def main():
     buckets = tuple(int(b) for b in args.buckets.split(",") if b.strip())
     governor = GovernorConfig(buckets=buckets, n_buckets=args.n_buckets,
                               hysteresis=args.bucket_hysteresis,
-                              estimate_rates=not args.no_rate_estimator)
+                              estimate_rates=not args.no_rate_estimator,
+                              straggler_policy=args.straggler_policy,
+                              straggler_slow_factor=args.straggler_factor,
+                              straggler_deadline_s=args.straggler_deadline,
+                              sync_on_rejoin=not args.no_rejoin_sync)
+    faults = (FaultSchedule.parse(args.faults, n_nodes)
+              if args.faults else None)
     engine = EngineConfig(superstep=args.superstep,
                           prefetch_depth=args.prefetch,
                           replan_every=args.replan_every,
@@ -109,7 +130,7 @@ def main():
         if decentralized:
             state = replicate_for_nodes(state, n_nodes)
         with StreamingDriver(run, mesh, state, sample_fn, engine=engine,
-                             batch=args.batch,
+                             batch=args.batch, faults=faults,
                              horizon=args.horizon or None) as driver:
             plan = driver.pipeline.plan
             print(f"plan: B={plan.B} mu={plan.mu} regime={plan.regime} "
@@ -129,8 +150,10 @@ def _log(rec):
     c = rec["counters"]
     plan = rec.get("replanned", rec["plan"])
     gov = ""
+    if rec["plan"].membership is not None:
+        gov += f" N={rec['n_active']}/{rec['plan'].membership.n}"
     if "bucket_switch" in rec:
-        gov = f" B:{rec['bucket_switch'][0]}->{rec['bucket_switch'][1]}"
+        gov += f" B:{rec['bucket_switch'][0]}->{rec['bucket_switch'][1]}"
     if "est_Rc" in rec:
         rc = rec["est_Rc"]
         gov += f" est_Rc={'inf' if rc <= 0 else f'{rc:.3g}'}"

@@ -30,6 +30,13 @@ def _flatten(tree: Tree):
 
 
 def save(path: str, tree: Tree, *, step: int = 0, meta: Optional[dict] = None) -> None:
+    """Crash-safe save: every leaf .npy is written BEFORE the manifest, and
+    the manifest lands via temp-file + atomic `os.replace` — so a checkpoint
+    directory either has a manifest whose leaves are all complete on disk, or
+    no (new) manifest at all. A crash mid-save can leave orphan leaf files
+    but never a manifest pointing at missing/truncated arrays, and an
+    overwrite of an existing checkpoint keeps the old manifest valid until
+    the new one is fully durable."""
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
     manifest = {"step": step, "meta": meta or {}, "leaves": {}}
@@ -39,18 +46,34 @@ def save(path: str, tree: Tree, *, step: int = 0, meta: Optional[dict] = None) -
         np.save(os.path.join(path, fname), arr)
         manifest["leaves"][key] = {"file": fname, "dtype": str(arr.dtype),
                                    "shape": list(arr.shape)}
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+    tmp = os.path.join(path, "manifest.json.tmp")
+    with open(tmp, "w") as f:
         json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(path, "manifest.json"))
 
 
 def restore(path: str, like: Tree, *, put: Optional[Callable] = None) -> Tree:
     """Restore into the structure of `like`. `put(key, np_array)` may place each
-    leaf onto devices (e.g. with a NamedSharding); default: jnp.asarray."""
+    leaf onto devices (e.g. with a NamedSharding); default: jnp.asarray.
+
+    A structure mismatch between `like` and the checkpoint raises ValueError
+    naming the missing and extra leaf keys — a renamed optimizer field or a
+    stale checkpoint fails with the actual diff, not a bare KeyError."""
     import jax.numpy as jnp
 
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     flat_like = _flatten(like)
+    want, have = set(flat_like), set(manifest["leaves"])
+    if want != have:
+        missing = sorted(want - have)
+        extra = sorted(have - want)
+        raise ValueError(
+            f"checkpoint at {path!r} does not match the restore target: "
+            f"missing from checkpoint: {missing or 'none'}; "
+            f"present in checkpoint but not in target: {extra or 'none'}")
     leaves_out = {}
     for key in flat_like:
         ent = manifest["leaves"][key]

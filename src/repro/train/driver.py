@@ -54,19 +54,54 @@ not processing time). See docs/DESIGN.md §Adaptive batch buckets.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import GovernorConfig, RunConfig
 from repro.core import rates
+from repro.core.faults import FaultSchedule
+from repro.core.mixing import Membership
 from repro.data.pipeline import DevicePrefetcher, StreamCounters, StreamingPipeline
 from repro.launch.mesh import data_axes, n_data_nodes
 from repro.train.trainer import (TrainState, make_node_batch,
                                  superstep_builder as lm_superstep_builder)
+
+
+def elastic_superstep(cohort_fn: Callable, n_full: int) -> Callable:
+    """Adapt a cohort-sized superstep to the full node axis
+    (docs/DESIGN.md §Elastic membership).
+
+    State leaves keep their full [n_full, ...] extent across membership
+    changes (no reshape, no reallocation); the wrapper gathers the active
+    rows `ids`, runs the cohort superstep on the dense [m, ...] block, and
+    scatters the results back — dropped rows pass through untouched (their
+    mixing row has degraded to self-weight 1). `ids` is a runtime [m] array,
+    not a static argument, so every membership of the same cohort size
+    shares one compiled executable: churn that revisits a cohort size never
+    retraces."""
+
+    def fn(state, ids, batches):
+        def take(p):
+            if getattr(p, "ndim", 0) and p.shape[0] == n_full:
+                return jnp.take(p, ids, axis=0)
+            return p
+
+        def put(p, s):
+            if getattr(p, "ndim", 0) and p.shape[0] == n_full:
+                return p.at[ids].set(s.astype(p.dtype))
+            return s
+
+        sub = jax.tree.map(take, state)
+        sub, metrics = cohort_fn(sub, batches)
+        return jax.tree.map(put, state, sub), metrics
+
+    return fn
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,7 +142,8 @@ class StreamingDriver:
                  engine: EngineConfig = EngineConfig(),
                  batch: Optional[int] = None, horizon: Optional[float] = None,
                  n_nodes: Optional[int] = None, seed: int = 0,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 faults: Optional[FaultSchedule] = None):
         if engine.superstep < 1:
             raise ValueError("superstep K must be >= 1")
         if mesh is None and n_nodes is None:
@@ -120,11 +156,45 @@ class StreamingDriver:
         self.decentralized = run_cfg.averaging.mode != "exact"
         self.n_nodes = n_nodes or n_data_nodes(mesh)
         self._horizon = horizon
+        gov = engine.governor
+        # elastic membership (docs/DESIGN.md §Elastic membership): a fault
+        # schedule and/or a non-lockstep straggler policy turn joins/leaves
+        # into plan swaps on the governed pipeline
+        self._faults = faults
+        self._elastic = faults is not None or gov.straggler_policy != "wait"
+        if self._elastic:
+            if not self.decentralized:
+                raise ValueError("elastic membership needs a decentralized "
+                                 "node axis (averaging mode gossip)")
+            if run_cfg.averaging.mode == "hierarchical":
+                raise ValueError("elastic membership is not defined for "
+                                 "pod-structured hierarchical averaging")
+            if faults is not None and faults.n != self.n_nodes:
+                raise ValueError(f"fault schedule covers {faults.n} nodes "
+                                 f"but the driver has {self.n_nodes}")
+        self._straggler = (rates.StragglerPolicy(
+            self.n_nodes, gov.straggler_policy,
+            slow_factor=gov.straggler_slow_factor,
+            deadline_s=gov.straggler_deadline_s,
+            patience=gov.straggler_patience) if self._elastic else None)
         self.pipeline = StreamingPipeline(
             sample_fn, run_cfg.stream, self.n_nodes, run_cfg.averaging.rounds,
             batch=batch, horizon=horizon, seed=seed)
         self.ladder = self._make_ladder(engine.governor)
         self.pipeline.adopt_ladder(self.ladder)
+        # cohort ladders always derive from the FULL-membership base ladder,
+        # so a rejoin to a previously seen cohort size restores that cohort's
+        # exact buckets (and their compiled supersteps) rather than drifting
+        self._base_ladder = self.ladder
+        self._cohort_ladders: Dict[int, rates.BucketLadder] = {
+            self.n_nodes: self.ladder}
+        self._membership: Optional[Membership] = None
+        self._ids_cache: Dict[Membership, jax.Array] = {}
+        self._last_round_s: Optional[float] = None
+        self.membership_events: List[Dict[str, Any]] = []
+        if self._elastic:
+            self._membership = Membership.full(self.n_nodes)
+            self.pipeline.swap_membership(self._membership, self.ladder)
         # superstep source, most to least specific: an explicit bucket-keyed
         # builder, a single superstep_fn (served to every bucket), or the LM
         # trainer's builder
@@ -135,21 +205,31 @@ class StreamingDriver:
                 superstep_builder = lm_superstep_builder(run_cfg, mesh,
                                                          n_nodes=self.n_nodes)
         self._builder = superstep_builder
+        # membership-aware builders take (B, membership); legacy builders
+        # (and the superstep_fn adapter above) take B alone and can only
+        # serve full-membership supersteps
+        try:
+            params = inspect.signature(superstep_builder).parameters
+            self._builder_elastic = len(params) >= 2
+        except (TypeError, ValueError):
+            self._builder_elastic = False
         # donation updates the state in place across supersteps; CPU lacks
         # donation support and would only warn (see core.dsgd.jit_driver)
         self._donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
-        # one compiled superstep per bucket, built lazily on first visit and
-        # reused with zero retrace on every revisit
-        self._compiled: Dict[int, Callable] = {}
+        # one compiled superstep per (bucket, cohort size), built lazily on
+        # first visit and reused with zero retrace on every revisit — the
+        # active ids are a runtime argument, so all same-size memberships
+        # share one executable
+        self._compiled: Dict[Tuple[int, int], Callable] = {}
         self._sharding = self._batch_sharding()
         self._prefetcher: Optional[DevicePrefetcher] = None
         self._supersteps_done = 0  # across run() calls
         # governor warm-up gate, per jit signature: supersteps completed at
-        # each bucket (the first of a fresh signature pays XLA compile time
-        # and must not feed replan or the rate estimator)
-        self._sig_seen: Dict[int, int] = {}
+        # each (bucket, cohort) signature (the first of a fresh signature
+        # pays XLA compile time and must not feed replan or the estimator)
+        self._sig_seen: Dict[Tuple[int, int], int] = {}
         self._initial_B = self.pipeline.plan.B
-        gov = engine.governor
+        self._initial_sig = (self._initial_B, self.n_nodes)
         self._hysteresis = rates.BucketHysteresis(gov.hysteresis)
         self._estimator = (rates.RoundTimeEstimator(
             self.n_nodes, run_cfg.averaging.rounds, window=gov.window)
@@ -178,29 +258,68 @@ class StreamingDriver:
     @property
     def compiled_buckets(self) -> Tuple[int, ...]:
         """Buckets whose superstep executable exists (visited at least once)."""
+        return tuple(sorted({b for b, _ in self._compiled}))
+
+    @property
+    def compiled_signatures(self) -> Tuple[Tuple[int, int], ...]:
+        """(bucket, cohort size) pairs with a compiled superstep executable."""
         return tuple(sorted(self._compiled))
 
-    def _superstep_for(self, B: int) -> Callable:
-        fn = self._compiled.get(B)
+    @property
+    def membership(self) -> Optional[Membership]:
+        """The active cohort future supersteps will be dealt under (None on a
+        non-elastic driver)."""
+        return self._membership
+
+    def _superstep_for(self, p: rates.Plan) -> Callable:
+        mem = p.membership
+        partial_cohort = mem is not None and not mem.is_full
+        m = mem.n_active if mem is not None else self.n_nodes
+        fn = self._compiled.get((p.B, m))
         if fn is None:
-            fn = jax.jit(self._builder(B), donate_argnums=self._donate)
-            self._compiled[B] = fn
+            if self._builder_elastic:
+                raw = self._builder(p.B, mem if partial_cohort else None)
+            elif partial_cohort:
+                raise ValueError(
+                    "elastic membership needs a membership-aware superstep "
+                    "builder `build(B, membership)`; this driver was given a "
+                    "single-argument builder (or a bare superstep_fn)")
+            else:
+                raw = self._builder(p.B)
+            if partial_cohort:
+                raw = elastic_superstep(raw, self.n_nodes)
+            fn = jax.jit(raw, donate_argnums=self._donate)
+            self._compiled[(p.B, m)] = fn
         return fn
+
+    def _ids_for(self, mem: Membership) -> jax.Array:
+        ids = self._ids_cache.get(mem)
+        if ids is None:
+            ids = jnp.asarray(np.asarray(mem.active_ids, np.int32))
+            self._ids_cache[mem] = ids
+        return ids
 
     # ---------------------------------------------------------------- stages
 
     def _host_superstep(self) -> Dict[str, np.ndarray]:
         """Stage 1: K governed splitter rounds, stacked [K, B, ...] (exact)
-        or split [K, N, B/N, ...] (decentralized node axis)."""
+        or split [K, N, B/N, ...] over the *active cohort* (decentralized
+        node axis; the latched plan's membership decides the split)."""
         batch = self.pipeline.next_superstep(self.engine.superstep)
         if self.decentralized:
-            batch = make_node_batch(batch, self.n_nodes, axis=1)
+            p = self.pipeline.last_superstep_plan
+            m = self.n_nodes if p.membership is None else p.membership.n_active
+            batch = make_node_batch(batch, m, axis=1)
         return batch
 
     def _batch_sharding(self) -> Optional[NamedSharding]:
         """Leading-K batches shard their second axis (global batch / node) over
         the data axes; on a single-device mesh a plain `device_put` suffices."""
         if self.mesh is None or self.mesh.devices.size == 1:
+            return None
+        if self._elastic:
+            # churn makes the node extent vary (m <= N need not divide the
+            # data axes); plain device_put keeps every cohort shape valid
             return None
         dp = data_axes(self.mesh)
         extent = 1
@@ -237,6 +356,11 @@ class StreamingDriver:
                 depth=self.engine.prefetch_depth)
         source = self._prefetcher
         for i in range(supersteps):
+            # membership changes land OUTSIDE the timed window: the swap (and
+            # any rejoin state sync) is engine bookkeeping, not stream
+            # processing the governor should bill to R_p
+            if self._elastic:
+                self._apply_membership(self._supersteps_done)
             # the timed window covers batch acquisition too: when the HOST is
             # the bottleneck (prefetch ring empty, slow synthesis), that wait
             # must show up in measured_Re or the governor would keep calling
@@ -250,19 +374,84 @@ class StreamingDriver:
                 staged = self._stage(self._host_superstep())
                 counters = self.pipeline.counters()
                 used_plan = self.pipeline.last_superstep_plan
-            # after a bucket switch the ring may still drain supersteps dealt
-            # at the old width: each batch runs through the compiled
-            # executable of the bucket that DEALT it (their samples were
-            # drawn from the stream — dropping them would lose samples)
+            # after a bucket or membership switch the ring may still drain
+            # supersteps dealt at the old width/cohort: each batch runs
+            # through the compiled executable of the (bucket, cohort) that
+            # DEALT it (their samples were drawn from the stream — dropping
+            # them would lose samples)
             used_plan = used_plan or self.pipeline.plan
-            self.state, metrics = self._superstep_for(used_plan.B)(self.state,
-                                                                   staged)
+            fn = self._superstep_for(used_plan)
+            mem = used_plan.membership
+            if mem is not None and not mem.is_full:
+                self.state, metrics = fn(self.state, self._ids_for(mem),
+                                         staged)
+            else:
+                self.state, metrics = fn(self.state, staged)
             metrics = jax.device_get(metrics)  # one fetch per K rounds
             wall_s = max(self.clock() - t0, 1e-12)
             rec = self._observe(metrics, wall_s, counters, used_plan)
             if log_fn and (i % log_every == 0 or i == supersteps - 1):
                 log_fn(rec)
         return self.state, self.history
+
+    # ---------------------------------------------------------- membership
+
+    def _ladder_for(self, m: int) -> rates.BucketLadder:
+        lad = self._cohort_ladders.get(m)
+        if lad is None:
+            lad = self._base_ladder.for_cohort(m,
+                                               horizon_samples=self._horizon)
+            self._cohort_ladders[m] = lad
+        return lad
+
+    def _apply_membership(self, step: int) -> None:
+        """Resolve the cohort for superstep `step`: the fault layer's alive
+        mask intersected with the straggler policy's debounced verdicts. A
+        change is a `swap_membership` plan swap on the pipeline (eq. 4
+        re-inverted at the cohort, B snapped onto the cohort's ladder) —
+        never a restart; supersteps already staged drain under the
+        membership that dealt them."""
+        desired = (self._faults.alive(step) if self._faults is not None
+                   else Membership.full(self.n_nodes))
+        if self._straggler is not None:
+            if self._faults is not None:
+                base = self._last_round_s if self._last_round_s else 1.0
+                self._straggler.observe(
+                    self._faults.round_s_per_node(step, base))
+            desired = self._straggler.propose(desired)
+        prev = self._membership
+        if desired == prev:
+            return
+        ladder = self._ladder_for(desired.n_active)
+        new_plan = self.pipeline.swap_membership(desired, ladder)
+        self.ladder = ladder
+        if prev is not None and self.engine.governor.sync_on_rejoin:
+            self._sync_rejoined(prev, desired)
+        self._membership = desired
+        self.membership_events.append({
+            "superstep": step, "from": prev, "to": desired,
+            "plan": new_plan})
+
+    def _sync_rejoined(self, prev: Membership, new: Membership) -> None:
+        """Overwrite rejoining nodes' state rows with the mean of the nodes
+        that stayed active, so a stale iterate re-enters at the cohort's
+        consensus point instead of dragging the consensus error back up.
+        A rare host-side op (once per rejoin), not part of any superstep."""
+        joined = [i for i in new.active_ids if not prev.active[i]]
+        donors = [i for i in prev.active_ids if new.active[i]]
+        if not joined or not donors:
+            return
+        j = jnp.asarray(np.asarray(joined, np.int32))
+        d = jnp.asarray(np.asarray(donors, np.int32))
+        n = self.n_nodes
+
+        def fix(p):
+            if not getattr(p, "ndim", 0) or p.shape[0] != n:
+                return p
+            mean = jnp.mean(jnp.take(p, d, axis=0), axis=0).astype(p.dtype)
+            return p.at[j].set(mean)
+
+        self.state = jax.tree.map(fix, self.state)
 
     def close(self) -> None:
         """Stop the prefetch thread (idempotent)."""
@@ -285,18 +474,23 @@ class StreamingDriver:
         self._supersteps_done += 1
         K = self.engine.superstep
         round_s = wall_s / K
+        self._last_round_s = round_s
         stream = self.run_cfg.stream
         B_used = used_plan.B
+        # the cohort that processed THIS superstep (may differ from the
+        # current cohort while the ring drains churn-era items)
+        m_used = used_plan.n_active or self.n_nodes
+        sig = (B_used, m_used)
         # per-jit-signature warm-up gate: a superstep that paid a fresh XLA
-        # compile (any bucket's first visit — not just the global first two
-        # supersteps) must not feed the governor or the rate estimator
-        seen = self._sig_seen.get(B_used, 0)
-        self._sig_seen[B_used] = seen + 1
+        # compile (any (bucket, cohort)'s first visit — not just the global
+        # first two supersteps) must not feed the governor or the estimator
+        seen = self._sig_seen.get(sig, 0)
+        self._sig_seen[sig] = seen + 1
         warm = seen >= (self.engine.warmup_supersteps
-                        if B_used == self._initial_B
+                        if sig == self._initial_sig
                         else self.engine.warmup_per_bucket)
         measured_Rp = rates.measured_processing_rate(
-            B_used, self.n_nodes, used_plan.R, round_s, stream.comms_rate)
+            B_used, m_used, used_plan.R, round_s, stream.comms_rate)
         rec: Dict[str, Any] = {
             "superstep": i,
             "round": (i + 1) * K,
@@ -309,23 +503,30 @@ class StreamingDriver:
             "measured_Re": rates.measured_effective_rate(round_s),
             "plan": used_plan,
             "bucket": B_used,
+            "n_active": m_used,
             "counters": counters,
         }
         governed = stream.streaming_rate > 0
         if governed and warm and self._estimator is not None:
-            self._estimator.observe(B_used, round_s)
+            if m_used != self.n_nodes:
+                self._estimator.observe_cohort(B_used, m_used, round_s)
+            else:
+                self._estimator.observe(B_used, round_s)
         every = self.engine.replan_every
         if governed and every > 0 and (i + 1) % every == 0 and warm:
             est = self._estimator.estimate() if self._estimator else None
             if est is not None:
                 rec["est_Rp"], rec["est_Rc"] = est.Rp, est.Rc
+            # the re-plan targets the CURRENT cohort (eq. 4 re-inverted at
+            # N = n_active), even while drain-era supersteps are observed
             cur = self.pipeline.plan
+            m_cur = cur.n_active or self.n_nodes
             if len(self.ladder) > 1:
                 observed = rates.observed_stream(
-                    stream, self.n_nodes, used_plan.R, B_used, round_s,
+                    stream, m_used, used_plan.R, B_used, round_s,
                     estimate=est)
                 target_B = rates.select_bucket(
-                    self.ladder, observed, self.n_nodes, cur.R,
+                    self.ladder, observed, m_cur, cur.R,
                     horizon_samples=self._horizon)
                 rec["target_bucket"] = target_B
                 # hysteresis: only `governor.hysteresis` consecutive re-plans
@@ -336,10 +537,11 @@ class StreamingDriver:
             # the wall-time inversion happens at the OBSERVED bucket (the
             # ring may still drain old-width supersteps); the plan is derived
             # at the hysteresis-confirmed one
-            new_plan = rates.replan(stream, self.n_nodes, cur.R, B_used,
+            new_plan = rates.replan(stream, m_cur, cur.R, B_used,
                                     round_s, ladder=self.ladder, estimate=est,
                                     decided_B=decided_B,
-                                    horizon_samples=self._horizon)
+                                    horizon_samples=self._horizon,
+                                    membership=cur.membership)
             if new_plan.B != cur.B:
                 self.pipeline.update_plan(new_plan)
                 rec["replanned"] = new_plan

@@ -211,7 +211,7 @@ def build_superstep(run: RunConfig, mesh, *,
 
 
 def superstep_builder(run: RunConfig, mesh, *,
-                      n_nodes: Optional[int] = None) -> Callable[[int], Callable]:
+                      n_nodes: Optional[int] = None) -> Callable[..., Callable]:
     """Bucket-keyed superstep factory for the adaptive-B governor
     (docs/DESIGN.md §Adaptive batch buckets): `build(B) -> superstep` hands
     `train.driver.StreamingDriver` the function to compile for each
@@ -222,11 +222,27 @@ def superstep_builder(run: RunConfig, mesh, *,
     lives in the driver's compiled-superstep registry (one jitted executable
     per bucket, built lazily, reused with zero retrace when the governor
     revisits a bucket). The loss/grad/optimizer graph is built once here, not
-    once per bucket."""
-    superstep, _ = build_superstep(run, mesh, n_nodes=n_nodes)
+    once per bucket.
 
-    def build(B: int) -> Callable:
-        return superstep
+    `build(B, membership=None)` — a partial `core.mixing.Membership` asks for
+    the *cohort* superstep: the same scan rebuilt (and cached) at
+    n_nodes = n_active, with the gossip operator recomposed over the active
+    cohort (docs/DESIGN.md §Elastic membership). The driver wraps it with the
+    full-axis gather/scatter (`train.driver.elastic_superstep`), so this
+    builder only ever sees dense node axes."""
+    n_full = n_nodes or n_data_nodes(mesh)
+    cohort_cache: Dict[int, Callable] = {}
+
+    def _for_cohort(m: int) -> Callable:
+        fn = cohort_cache.get(m)
+        if fn is None:
+            fn, _ = build_superstep(run, mesh, n_nodes=m)
+            cohort_cache[m] = fn
+        return fn
+
+    def build(B: int, membership=None) -> Callable:
+        m = n_full if membership is None else membership.n_active
+        return _for_cohort(m)
 
     return build
 

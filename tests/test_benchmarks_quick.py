@@ -30,7 +30,8 @@ def test_run_quick_all_suites(tmp_path):
                    "consensus/packed/", "consensus/quantized/",
                    "consensus/quant_accuracy/", "kernel/", "pipeline/",
                    "krasulina/fused/", "krasulina/gossip/",
-                   "governor/cold_switch/", "governor/warm_switch/"):
+                   "governor/cold_switch/", "governor/warm_switch/",
+                   "elastic/throughput/"):
         assert any(n.startswith(prefix) for n in names), (prefix, names)
     # the engine rows carry machine-readable throughput
     pipe = [r for r in artifact["rows"] if r["name"].startswith("pipeline/")]
@@ -56,3 +57,12 @@ def test_run_quick_all_suites(tmp_path):
     assert ss and "retraces=0;" in ss[0]["derived"]
     ge = [r for r in artifact["rows"] if r["name"] == "governor/estimator"]
     assert ge and "err_pct=" in ge[0]["derived"]
+    # elastic-membership contract rows (PR 6), deterministic in quick mode
+    # too: the rejoin superstep must reuse the full-cohort executable (zero
+    # retraces), and consensus error under churn stays within 2x of the
+    # lockstep baseline at a matched sample budget
+    rj = [r for r in artifact["rows"] if r["name"] == "elastic/rejoin"]
+    assert rj and "retraces=0;" in rj[0]["derived"]
+    ce = [r for r in artifact["rows"] if r["name"] == "elastic/consensus"]
+    assert ce and "ratio=" in ce[0]["derived"]
+    assert float(ce[0]["derived"].split("ratio=")[1].split(";")[0]) <= 2.0

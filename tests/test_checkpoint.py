@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config, reduced
 from repro.configs.base import RunConfig, SHAPES
@@ -32,3 +33,60 @@ def test_restore_with_put(tmp_path):
     assert sorted(seen) == ["a", "nested::b"]
     np.testing.assert_array_equal(np.asarray(out["a"]),
                                   2 * np.arange(6.0).reshape(2, 3))
+
+
+def test_restore_mismatch_names_missing_and_extra_keys(tmp_path):
+    """A renamed/stale structure fails with the actual key diff, not a bare
+    KeyError mid-load."""
+    path = str(tmp_path / "ck3")
+    ckpt.save(path, {"a": jnp.ones(2), "old": jnp.ones(3)})
+    target = {"a": jnp.ones(2), "renamed": jnp.ones(3)}
+    with pytest.raises(ValueError) as ei:
+        ckpt.restore(path, jax.eval_shape(lambda: target))
+    msg = str(ei.value)
+    assert "missing from checkpoint: ['renamed']" in msg
+    assert "present in checkpoint but not in target: ['old']" in msg
+
+
+def test_save_is_crash_safe(tmp_path, monkeypatch):
+    """Crash mid-save must never leave a manifest pointing at missing
+    leaves: all .npy files land BEFORE the manifest, and the manifest
+    itself arrives via atomic os.replace — an older checkpoint stays
+    restorable until the new one is fully durable."""
+    import numpy as _np
+
+    path = str(tmp_path / "ck4")
+    tree_v1 = {"a": jnp.zeros(2), "b": jnp.zeros(3)}
+    ckpt.save(path, tree_v1, step=1)
+
+    calls = {"n": 0}
+    real_save = _np.save
+
+    def dying_save(f, arr, **kw):
+        calls["n"] += 1
+        if calls["n"] > 1:
+            raise OSError("disk full")  # crash after the first leaf
+        return real_save(f, arr, **kw)
+
+    monkeypatch.setattr(_np, "save", dying_save)
+    with pytest.raises(OSError):
+        ckpt.save(path, {"a": jnp.ones(2), "b": jnp.ones(3)}, step=2)
+    monkeypatch.setattr(_np, "save", real_save)
+
+    # the old manifest is intact and still restores the OLD values
+    assert ckpt.loaded_step(path) == 1
+    restored = ckpt.restore(path, jax.eval_shape(lambda: tree_v1))
+    np.testing.assert_array_equal(np.asarray(restored["b"]), np.zeros(3))
+    # no half-written manifest is left behind
+    import os
+    assert not os.path.exists(os.path.join(path, "manifest.json.tmp"))
+
+
+def test_save_overwrites_atomically(tmp_path):
+    """A completed re-save replaces the manifest in one step."""
+    path = str(tmp_path / "ck5")
+    ckpt.save(path, {"a": jnp.zeros(2)}, step=1)
+    ckpt.save(path, {"a": jnp.ones(2)}, step=2)
+    assert ckpt.loaded_step(path) == 2
+    out = ckpt.restore(path, jax.eval_shape(lambda: {"a": jnp.zeros(2)}))
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.ones(2))

@@ -168,6 +168,50 @@ def test_prefetch_finite_source_and_errors():
     pf.close()
 
 
+def test_prefetch_close_while_worker_blocked_on_full_ring():
+    """Regression: close() with the worker parked in `_put_stopaware` (ring
+    full, consumer gone) must shut down promptly — no deadlock — and a
+    producer error that never reached the consumer is re-raised exactly
+    once, even if it was stranded by the shutdown itself."""
+    import threading
+    import time as _time
+
+    produced = threading.Event()
+
+    def produce():
+        if produced.is_set():
+            raise RuntimeError("late failure")  # fails once the ring is full
+        produced.set()
+        return 0
+
+    pf = DevicePrefetcher(produce, depth=1)
+    # let the worker fill the depth-1 ring and then die trying to enqueue
+    # the error behind it; the consumer never drains anything
+    assert produced.wait(timeout=5.0)
+    deadline = _time.time() + 5.0
+    while pf._q.qsize() < 1 and _time.time() < deadline:
+        _time.sleep(0.01)
+    with pytest.raises(RuntimeError, match="late failure"):
+        pf.close()  # must return (not deadlock) AND surface the error
+    assert not pf._thread.is_alive()
+    pf.close()  # idempotent: the error is re-raised exactly once
+    # a post-close consumer must not block on the dead worker either
+    with pytest.raises((StopIteration, RuntimeError)):
+        next(pf)
+
+
+def test_prefetch_close_after_error_delivered_does_not_reraise():
+    """An error already surfaced through __next__ is not raised again by
+    close() (the pre-existing latched-error contract)."""
+    def boom():
+        raise RuntimeError("seen already")
+
+    pf = DevicePrefetcher(boom, depth=1)
+    with pytest.raises(RuntimeError, match="seen already"):
+        next(pf)
+    pf.close()  # must NOT raise
+
+
 def test_pipeline_update_plan_keeps_B_fixed():
     pipe = StreamingPipeline(lambda rng, n: {"x": rng.normal(size=(n, 2))},
                              StreamConfig(), 2, 1, batch=8)

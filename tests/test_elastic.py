@@ -1,0 +1,627 @@
+"""Elastic node membership (docs/DESIGN.md §Elastic membership): fault
+injection, straggler policy, masked mixing, and the driver under churn.
+
+* `Membership` mask algebra and the masked mixing operators: doubly
+  stochastic over the active cohort, dropped rows degraded to self-weight 1,
+  dense-vs-circulant parity under the same mask, rejoin bit-identical to the
+  never-left operator
+* `FaultSchedule` DSL parse + replayable death/slow/flaky scripts
+* `PerNodeRoundTime` / `StragglerPolicy`: EWMA smoothing, drop/deadline
+  verdicts debounced through per-node hysteresis, the never-empty guarantee
+* N-aware `BucketLadder` (satellite): cohort re-derivation and stale-ladder
+  rejection when the cohort size changes
+* estimator coherence across membership eras (`observe_cohort`)
+* `swap_membership` plan-swap semantics on the governed pipeline
+* fake-clock driver acceptance: a FaultSchedule killing a node mid-stream and
+  rejoining later completes with ZERO recompiles on rejoin (trace-counted),
+  the governor re-plans (B, mu) at each membership change, and a straggler
+  is dropped/readmitted within hysteresis patience
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (AveragingConfig, GovernorConfig, StreamConfig)
+from repro.configs.paper_pca import FIG7, PCARunConfig
+from repro.core import krasulina, mixing, rates
+from repro.core.faults import FaultSchedule, NodeFault
+from repro.core.mixing import Membership
+from repro.data.pipeline import StreamingPipeline
+from repro.data.synthetic import make_pca_host_sampler, make_pca_stream
+from repro.train.driver import EngineConfig, StreamingDriver, elastic_superstep
+
+
+# ---------------------------------------------------------------------------
+# Membership mask
+# ---------------------------------------------------------------------------
+
+def test_membership_basic_algebra():
+    m = Membership.full(4)
+    assert m.n_active == 4 and m.is_full and m.active_ids == (0, 1, 2, 3)
+    d = m.drop(1, 3)
+    assert d.n_active == 2 and d.active_ids == (0, 2) and not d.is_full
+    assert m.is_full  # frozen: drop returns a new mask
+    r = d.rejoin(1).rejoin(3)
+    assert r == m and hash(r) == hash(m)  # value equality keys registries
+
+
+def test_membership_rejects_malformed():
+    with pytest.raises(ValueError):
+        Membership(3, (True, True))  # mask length mismatch
+    with pytest.raises(ValueError):
+        Membership(2, (False, False))  # nobody left
+    with pytest.raises(ValueError):
+        Membership.full(2).drop(0).drop(1)
+
+
+# ---------------------------------------------------------------------------
+# Masked mixing operators
+# ---------------------------------------------------------------------------
+
+def test_masked_matrix_full_membership_is_identity_op():
+    A = mixing.ring_matrix(6)
+    assert mixing.masked_matrix(A, Membership.full(6)) is A
+
+
+def test_masked_matrix_doubly_stochastic_with_self_weight_rows():
+    A = mixing.ring_matrix(6)
+    mem = Membership.full(6).drop(2, 5)
+    M = mixing.masked_matrix(A, mem)
+    assert mixing.is_doubly_stochastic(M)
+    # dropped nodes hold their state: identity rows AND columns (no mass
+    # leaks to or from a dead node)
+    for i in (2, 5):
+        e = np.zeros(6)
+        e[i] = 1.0
+        np.testing.assert_array_equal(M[i], e)
+        np.testing.assert_array_equal(M[:, i], e)
+    # with a CONNECTED induced subgraph (ring minus one node = a path) the
+    # active block still contracts toward cohort consensus; note a drop
+    # pattern that disconnects the induced graph stalls dense-mask
+    # consensus — the device path avoids this by relabeling the cohort
+    # into its own ring (`masked_schedule`)
+    one = Membership.full(6).drop(2)
+    ids = list(one.active_ids)
+    M1 = mixing.masked_matrix(A, one)
+    assert mixing.is_doubly_stochastic(M1)
+    assert mixing.lambda2(M1[np.ix_(ids, ids)]) < 1.0 - 1e-9
+
+
+def test_masked_matrix_single_survivor_is_identity():
+    A = mixing.ring_matrix(4)
+    M = mixing.masked_matrix(A, Membership(4, (False, True, False, False)))
+    np.testing.assert_array_equal(M, np.eye(4))
+
+
+def test_masked_matrix_rejoin_bit_identical():
+    """Leaving and rejoining restores the exact operator of the never-left
+    mask — full membership is the unmasked matrix itself."""
+    A = mixing.ring_matrix(5)
+    mem = Membership.full(5).drop(3).rejoin(3)
+    np.testing.assert_array_equal(mixing.masked_matrix(A, mem), A)
+    assert mixing.masked_schedule("ring", mem) == mixing.schedule("ring", 5)
+
+
+@pytest.mark.parametrize("topo", ["ring", "circulant2"])
+@pytest.mark.parametrize("rounds", [1, 3])
+def test_masked_dense_vs_circulant_parity(topo, rounds):
+    """The device gossip path (relabeled-cohort circulant schedule on the
+    compacted [m, d] block) equals the dense matrix form of the same masked
+    schedule."""
+    mem = Membership.full(8).drop(1, 6)
+    m = mem.n_active
+    sched = mixing.masked_schedule(topo, mem)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, 5)).astype(np.float32))
+    circ = mixing.circulant_mix_op(sched, m, rounds)(x)
+    dense = mixing.dense_mix_op(mixing.schedule_matrix(sched, m), rounds)(x)
+    np.testing.assert_allclose(np.asarray(circ), np.asarray(dense),
+                               rtol=2e-5, atol=2e-6)
+    # and the cohort operator is doubly stochastic in its own right
+    assert mixing.is_doubly_stochastic(mixing.schedule_matrix(sched, m))
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule
+# ---------------------------------------------------------------------------
+
+def test_fault_dsl_parse_roundtrip():
+    fs = FaultSchedule.parse("death:1@5-12, slow:0@3-9x4, flaky:2@4-20p3", 4)
+    assert fs.faults == (
+        NodeFault(node=1, kind="death", start=5, end=12),
+        NodeFault(node=0, kind="slow", start=3, end=9, factor=4.0),
+        NodeFault(node=2, kind="flaky", start=4, end=20, period=3))
+    # open-ended death
+    fs = FaultSchedule.parse("death:3@7", 4)
+    assert fs.faults[0].end == -1
+    assert not fs.alive(100).active[3]
+
+
+def test_fault_dsl_rejects_malformed():
+    for bad in ("death:1", "explode:0@3", "slow:0@3-9", "flaky:1@2-8",
+                "death:0@9-4"):
+        with pytest.raises(ValueError):
+            FaultSchedule.parse(bad, 4)
+    with pytest.raises(ValueError):
+        FaultSchedule.parse("death:5@2", 4)  # node out of range
+
+
+def test_fault_schedule_death_window_and_rejoin():
+    fs = FaultSchedule.parse("death:1@5-12", 4)
+    assert fs.alive(4).is_full
+    assert fs.alive(5).active_ids == (0, 2, 3)
+    assert fs.alive(11).active_ids == (0, 2, 3)
+    assert fs.alive(12).is_full  # rejoined, bit-identical to never-left
+    assert fs.alive(12) == Membership.full(4)
+    assert fs.events_between(0, 20) and not fs.events_between(6, 10)
+
+
+def test_fault_schedule_slow_and_per_node_times():
+    fs = FaultSchedule.parse("slow:0@3-9x4,death:2@4-6", 4)
+    np.testing.assert_array_equal(fs.time_factors(2), np.ones(4))
+    np.testing.assert_array_equal(fs.time_factors(3), [4.0, 1, 1, 1])
+    assert fs.round_s_per_node(4, 0.5) == [2.0, 0.5, None, 0.5]
+    assert fs.round_s_per_node(9, 0.5) == [0.5] * 4
+
+
+def test_fault_schedule_flaky_alternation():
+    fs = FaultSchedule.parse("flaky:2@4-10p2", 3)
+    # starts dead at 4, alternates every 2 steps, window-exclusive at 10
+    dead = [not fs.alive(s).active[2] for s in range(3, 11)]
+    assert dead == [False, True, True, False, False, True, True, False]
+
+
+def test_fault_schedule_never_empties():
+    fs = FaultSchedule.parse("death:0@2,death:1@3", 2)
+    fs.alive(2)
+    with pytest.raises(ValueError, match="kills every node"):
+        fs.alive(3)
+
+
+# ---------------------------------------------------------------------------
+# Per-node round times + straggler policy
+# ---------------------------------------------------------------------------
+
+def test_per_node_round_time_ewma_and_median():
+    t = rates.PerNodeRoundTime(3, alpha=0.5)
+    assert t.median() is None
+    t.observe_all([1.0, 2.0, None])  # dead node skipped
+    t.observe_all([3.0, 2.0, None])
+    assert t.value(0) == pytest.approx(2.0)  # 0.5*3 + 0.5*1
+    assert t.value(2) is None
+    assert t.median((0, 1)) == pytest.approx(2.0)
+    with pytest.raises(ValueError):
+        t.observe_all([1.0, 2.0])  # wrong arity
+
+
+def test_straggler_wait_mode_is_lockstep():
+    pol = rates.StragglerPolicy(4, "wait")
+    mem = Membership.full(4).drop(2)
+    pol.observe([9.0, 1.0, None, 1.0])
+    assert pol.propose(mem) == mem  # never drops anyone
+    assert pol.effective_round_s(mem, [9.0, 1.0, None, 1.0]) == 9.0
+
+
+def test_straggler_drop_debounced_and_recovers():
+    pol = rates.StragglerPolicy(4, "drop", slow_factor=2.0, patience=2,
+                                alpha=1.0)  # alpha=1: EWMA == last reading
+    full = Membership.full(4)
+    pol.observe([10.0, 1.0, 1.0, 1.0])
+    assert pol.propose(full).is_full        # first verdict: pending
+    pol.observe([10.0, 1.0, 1.0, 1.0])
+    assert pol.propose(full).active_ids == (1, 2, 3)  # confirmed at patience
+    # recovery is debounced by the same patience
+    pol.observe([1.0, 1.0, 1.0, 1.0])
+    assert pol.propose(full).active_ids == (1, 2, 3)
+    pol.observe([1.0, 1.0, 1.0, 1.0])
+    assert pol.propose(full).is_full
+
+
+def test_straggler_deadline_mode_caps_round_time():
+    pol = rates.StragglerPolicy(3, "deadline", deadline_s=2.0, patience=1,
+                                alpha=1.0)
+    full = Membership.full(3)
+    pol.observe([5.0, 1.0, 1.0])
+    got = pol.propose(full)
+    assert got.active_ids == (1, 2)
+    assert pol.effective_round_s(full, [5.0, 1.0, 1.0]) == 2.0  # capped
+    assert pol.effective_round_s(got, [5.0, 1.0, 1.0]) == 1.0
+
+
+def test_straggler_never_empties_cohort():
+    pol = rates.StragglerPolicy(2, "deadline", deadline_s=1.0, patience=1,
+                                alpha=1.0)
+    full = Membership.full(2)
+    pol.observe([5.0, 3.0])  # everyone blows the deadline
+    got = pol.propose(full)
+    assert got.n_active == 1 and got.active_ids == (1,)  # least-slow kept
+
+
+def test_straggler_respects_fault_layer_deaths():
+    """Nodes the fault layer killed stay out even if their (frozen) EWMA
+    looks fine; the straggler only rules on the survivors."""
+    pol = rates.StragglerPolicy(4, "drop", slow_factor=2.0, patience=1,
+                                alpha=1.0)
+    pol.observe([1.0, None, 1.0, 5.0])
+    got = pol.propose(Membership.full(4).drop(1))
+    assert got.active_ids == (0, 2)  # 1 stays dead, 3 evicted vs the median
+
+
+def test_straggler_policy_validation():
+    with pytest.raises(ValueError):
+        rates.StragglerPolicy(2, "yolo")
+    with pytest.raises(ValueError):
+        rates.StragglerPolicy(2, "drop", slow_factor=1.0)
+
+
+# ---------------------------------------------------------------------------
+# N-aware BucketLadder (satellite: cohort re-derivation)
+# ---------------------------------------------------------------------------
+
+def test_ladder_records_N_and_rejects_stale_snap():
+    lad = rates.BucketLadder.from_buckets((8, 16), 4)
+    assert lad.N == 4
+    assert lad.snap(9, N=4) == 16
+    with pytest.raises(ValueError, match="re-derive via `for_cohort`"):
+        lad.snap(9, N=3)
+    # an N-less ladder (legacy construction) never asserts
+    assert rates.BucketLadder((8, 16)).snap(9, N=3) == 16
+
+
+def test_ladder_rejects_buckets_not_multiple_of_N():
+    with pytest.raises(ValueError):
+        rates.BucketLadder((6, 8), N=4)
+
+
+def test_ladder_for_cohort_rederives_and_identity():
+    lad = rates.BucketLadder.from_buckets((8, 16), 4)
+    assert lad.for_cohort(4) is lad  # same cohort: same object, same compiles
+    sub = lad.for_cohort(3)
+    assert sub.N == 3 and sub.buckets == (9, 18)
+    assert all(b % 3 == 0 for b in sub.buckets)
+    # horizon ceiling re-clips at the new N
+    sub = lad.for_cohort(3, horizon_samples=100.0)
+    assert max(sub.buckets) <= 10 and all(b % 3 == 0 for b in sub.buckets)
+
+
+def test_ladder_cohort_rederivation_from_base_is_stable():
+    """Deriving from the FULL-membership base ladder is idempotent per
+    cohort — the discipline the driver follows so a rejoin restores the
+    exact original buckets (chained derivation would drift: 8@N4 -> 9@N3
+    -> 12@N4)."""
+    base = rates.BucketLadder.from_buckets((8, 16), 4)
+    drifted = base.for_cohort(3).for_cohort(4)
+    assert drifted.buckets != base.buckets  # the hazard is real
+    assert base.for_cohort(3) == base.for_cohort(3)
+    assert base.for_cohort(4) is base
+
+
+# ---------------------------------------------------------------------------
+# Estimator coherence across membership eras
+# ---------------------------------------------------------------------------
+
+def test_observe_cohort_keeps_one_fit_across_eras():
+    """Rounds timed at a partial cohort enter the affine fit at the
+    equivalent full-cohort regressor x = B*N/m, so ground truth observed
+    across two membership eras still recovers (R_p, R_c)."""
+    N, R, Rp, Rc = 4, 8, 1e5, 2e3
+    est = rates.RoundTimeEstimator(N, R, window=64)
+    for B in (32, 64, 128):
+        est.observe(B, B / (N * Rp) + R / Rc)          # full-cohort era
+    for B in (24, 48, 96):
+        est.observe_cohort(B, 3, B / (3 * Rp) + R / Rc)  # one node down
+    got = est.estimate()
+    assert got is not None
+    assert got.Rp == pytest.approx(Rp, rel=1e-6)
+    assert got.Rc == pytest.approx(Rc, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# swap_membership on the governed pipeline
+# ---------------------------------------------------------------------------
+
+def _pipe(stream=StreamConfig(), batch=10, n=5, **kw):
+    return StreamingPipeline(lambda rng, k: {"x": rng.normal(size=(k, 2))},
+                             stream, n_nodes=n, rounds_R=1, batch=batch, **kw)
+
+
+def test_swap_membership_initial_stamp_keeps_exact_B():
+    pipe = _pipe(batch=10)
+    got = pipe.swap_membership(Membership.full(5))
+    assert got.B == 10 and got.membership == Membership.full(5)
+    # idempotent: same cohort is a no-op
+    assert pipe.swap_membership(Membership.full(5)) is got
+
+
+def test_swap_membership_ungoverned_rounds_B_to_cohort():
+    pipe = _pipe(batch=10)
+    pipe.swap_membership(Membership.full(5))
+    got = pipe.swap_membership(Membership.full(5).drop(4))
+    assert got.B == 12 and got.B % 4 == 0  # ceil(10/4)*4
+    assert got.membership.n_active == 4
+    # the next superstep is dealt at the cohort width
+    assert pipe.next_superstep(2)["x"].shape == (2, 12, 2)
+    assert pipe.last_superstep_plan.membership.n_active == 4
+
+
+def test_swap_membership_governed_reinverts_eq4_at_cohort():
+    """The plan is re-derived at N = n_active: fewer nodes means less
+    aggregate compute, so the keep-up mu grows for the same stream."""
+    # aggregate compute: 4 nodes keep up with the stream (4*300 > 1e3),
+    # 3 nodes cannot (3*300 < 1e3) — the swap must notice immediately
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=300.0,
+                          comms_rate=1e6)
+    pipe = _pipe(stream=stream, batch=None, n=4)
+    pipe.swap_membership(Membership.full(4))
+    full_plan = pipe.plan
+    assert full_plan.mu == 0 and full_plan.regime == "resourceful"
+    got = pipe.swap_membership(Membership.full(4).drop(3))
+    assert got.B % 3 == 0
+    assert got.mu > 0 and got.regime == "under-provisioned"
+    # returning to full membership re-derives the original plan
+    back = pipe.swap_membership(Membership.full(4))
+    assert (back.B, back.mu) == (full_plan.B, full_plan.mu)
+
+
+def test_swap_membership_snaps_onto_cohort_ladder():
+    base = rates.BucketLadder.from_buckets((10, 20), 5)
+    pipe = _pipe(batch=10, ladder=base)
+    pipe.swap_membership(Membership.full(5), base)
+    got = pipe.swap_membership(Membership.full(5).drop(0), base.for_cohort(4))
+    assert got.B in (12, 20) and got.B % 4 == 0
+    assert pipe.ladder.N == 4
+
+
+# ---------------------------------------------------------------------------
+# elastic_superstep gather/scatter wrapper
+# ---------------------------------------------------------------------------
+
+def test_elastic_superstep_gathers_active_rows_only():
+    n, d = 4, 3
+    state = {"w": jnp.arange(float(n * d)).reshape(n, d), "t": jnp.asarray(7)}
+    ids = jnp.asarray([0, 2, 3], jnp.int32)
+
+    def cohort_fn(sub, batches):
+        assert sub["w"].shape == (3, d)  # dense cohort block
+        return {"w": sub["w"] + 1.0, "t": sub["t"] + 1}, {"m": sub["w"].sum()}
+
+    out, metrics = jax.jit(elastic_superstep(cohort_fn, n))(state, ids, {})
+    want = np.arange(float(n * d)).reshape(n, d)
+    want[[0, 2, 3]] += 1.0
+    np.testing.assert_array_equal(np.asarray(out["w"]), want)  # row 1 frozen
+    assert int(out["t"]) == 8  # scalar leaves pass straight through
+
+
+# ---------------------------------------------------------------------------
+# Driver under churn (fake clock, trace-counted)
+# ---------------------------------------------------------------------------
+
+class _FakeClock:
+    def __init__(self, dt):
+        self.t, self.dt = 0.0, dt
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+def _elastic_driver(faults=None, *, stream=StreamConfig(), gov=None,
+                    clock=None, batch=10, n=5, prefetch=0, traces=None,
+                    horizon=None):
+    run_cfg = PCARunConfig(
+        pca=FIG7, averaging=AveragingConfig(mode="gossip", rounds=2),
+        stream=stream)
+    builder = krasulina.krasulina_superstep_builder(
+        run_cfg.averaging, n, lambda t: 10.0 / t)
+    if traces is not None:
+        inner = builder
+
+        def builder(B, membership=None):  # noqa: F811 — trace-counting wrap
+            raw = inner(B, membership)
+            m = n if membership is None else membership.n_active
+
+            def counted(s, b):
+                traces.append((B, m))  # once per jit trace, not per call
+                return raw(s, b)
+
+            return counted
+
+    w0 = jax.random.normal(jax.random.PRNGKey(0), (FIG7.dim,))
+    state = krasulina.init_krasulina_state(w0 / jnp.linalg.norm(w0),
+                                           run_cfg.averaging, n)
+    return StreamingDriver(
+        run_cfg, None, state, make_pca_host_sampler(make_pca_stream(FIG7)),
+        superstep_builder=builder, n_nodes=n, batch=batch, faults=faults,
+        horizon=horizon,
+        engine=EngineConfig(superstep=2, prefetch_depth=prefetch,
+                            replan_every=1, warmup_supersteps=0,
+                            warmup_per_bucket=0,
+                            governor=gov or GovernorConfig()),
+        clock=clock or _FakeClock(1e-3))
+
+
+def test_driver_requires_decentralized_for_elastic():
+    run_cfg = PCARunConfig(pca=FIG7, averaging=AveragingConfig(mode="exact"))
+    w0 = jax.random.normal(jax.random.PRNGKey(0), (FIG7.dim,))
+    state = krasulina.init_krasulina_state(w0, run_cfg.averaging, 4)
+    with pytest.raises(ValueError, match="decentralized"):
+        StreamingDriver(run_cfg, None, state,
+                        make_pca_host_sampler(make_pca_stream(FIG7)),
+                        n_nodes=4, batch=8,
+                        faults=FaultSchedule.parse("death:1@2-4", 4))
+
+
+def test_driver_rejects_mismatched_fault_schedule():
+    with pytest.raises(ValueError, match="covers 3 nodes"):
+        _elastic_driver(FaultSchedule.parse("death:1@2-4", 3), n=5)
+
+
+def test_driver_rejects_legacy_builder_for_partial_cohort():
+    run_cfg = PCARunConfig(
+        pca=FIG7, averaging=AveragingConfig(mode="gossip", rounds=2))
+    full = krasulina.build_krasulina_superstep(run_cfg.averaging, 4,
+                                               lambda t: 10.0 / t)
+    w0 = jax.random.normal(jax.random.PRNGKey(0), (FIG7.dim,))
+    state = krasulina.init_krasulina_state(w0 / jnp.linalg.norm(w0),
+                                           run_cfg.averaging, 4)
+    driver = StreamingDriver(
+        run_cfg, None, state, make_pca_host_sampler(make_pca_stream(FIG7)),
+        superstep_builder=lambda B: full, n_nodes=4, batch=8,
+        faults=FaultSchedule.parse("death:1@1", 4),
+        engine=EngineConfig(superstep=1, prefetch_depth=0, replan_every=0),
+        clock=_FakeClock(1e-3))
+    driver.run(1)  # full membership: fine
+    with pytest.raises(ValueError, match="membership-aware"):
+        driver.run(1)  # node 1 dies: the 1-arg builder cannot serve it
+
+
+def test_driver_churn_death_rejoin_zero_recompile():
+    """Acceptance: a FaultSchedule kills node 4 mid-stream and rejoins it
+    later; the run completes, dealing each era at a cohort-divisible B, and
+    the rejoin superstep reuses the full-cohort executable — zero retrace."""
+    traces = []
+    faults = FaultSchedule.parse("death:4@2-5", 5)
+    driver = _elastic_driver(faults, traces=traces)
+    driver.run(5)  # supersteps 0..4: full, full, drop-era x3
+    assert driver.membership.n_active == 4
+    assert driver.pipeline.plan.B == 12  # ceil(10/4)*4
+    assert set(traces) == {(10, 5), (12, 4)}
+    n_before = len(traces)
+    driver.run(3)  # superstep 5 rejoins: back to the (10, 5) executable
+    assert driver.membership.is_full
+    assert driver.pipeline.plan.B == 10
+    assert len(traces) == n_before, "rejoin must not retrace"
+    assert driver.compiled_signatures == ((10, 5), (12, 4))
+    # every superstep ran under the cohort that dealt it
+    eras = [(r["bucket"], r["n_active"]) for r in driver.history]
+    assert eras == [(10, 5)] * 2 + [(12, 4)] * 3 + [(10, 5)] * 3
+    # membership events recorded the swap plans
+    evs = driver.membership_events
+    assert [e["superstep"] for e in evs] == [2, 5]
+    assert evs[0]["to"].n_active == 4 and evs[1]["to"].is_full
+    assert evs[0]["plan"].B == 12 and evs[1]["plan"].B == 10
+    assert all(np.isfinite(r["metrics"]["consensus_err"])
+               for r in driver.history)
+
+
+def test_driver_flaky_node_same_size_cohorts_share_executable():
+    """Flaky churn revisits the same cohort SIZE with different masks; the
+    runtime-ids design means they all share one executable per (B, m)."""
+    traces = []
+    faults = FaultSchedule(5, (
+        NodeFault(node=1, kind="death", start=1, end=3),
+        NodeFault(node=3, kind="death", start=4, end=6)))
+    driver = _elastic_driver(faults, traces=traces)
+    driver.run(8)
+    # two distinct 4-node masks, one (12, 4) executable
+    assert set(traces) == {(10, 5), (12, 4)}
+    masks = {e["to"] for e in driver.membership_events
+             if not e["to"].is_full}
+    assert len(masks) == 2
+    assert driver.compiled_signatures == ((10, 5), (12, 4))
+
+
+def test_driver_governed_replan_follows_cohort():
+    """Under a governed stream the swap re-inverts eq. 4 at the cohort
+    immediately (within the same superstep — well inside hysteresis
+    patience), and subsequent re-plans target N = n_active."""
+    stream = StreamConfig(streaming_rate=1e3, processing_rate=1e6,
+                          comms_rate=1e6)
+    faults = FaultSchedule.parse("death:2@2-6", 5)
+    driver = _elastic_driver(faults, stream=stream, batch=None,
+                             clock=_FakeClock(50.0))
+    driver.run(8)
+    evs = driver.membership_events
+    assert [e["superstep"] for e in evs] == [2, 6]
+    for e in evs:
+        m = e["to"].n_active
+        assert e["plan"].membership == e["to"]
+        assert e["plan"].B % m == 0
+        assert e["plan"].mu >= 0
+    # the slow clock drives the governor under-provisioned; its re-plans
+    # carry the live cohort, not the boot-time membership
+    replans = [r["replanned"] for r in driver.history if "replanned" in r]
+    assert replans and all(p.membership is not None for p in replans)
+    drop_era = [r for r in driver.history if r["n_active"] == 4]
+    assert drop_era and all(r["plan"].membership.n_active == 4
+                            for r in drop_era)
+
+
+def test_driver_straggler_drop_and_readmit():
+    """A sustained 10x slowdown evicts the node once its EWMA round time
+    crosses the threshold and `patience` consecutive verdicts agree;
+    recovery readmits it the same way. (The EWMA smooths the verdict, so
+    the drop lands a few supersteps into the slowdown — sustained, not
+    instantaneous, eviction is the point of the policy.)"""
+    faults = FaultSchedule.parse("slow:0@2-30x10", 5)
+    gov = GovernorConfig(straggler_policy="drop", straggler_slow_factor=2.0,
+                         straggler_patience=2)
+    driver = _elastic_driver(faults, gov=gov)
+    driver.run(50)
+    evs = driver.membership_events
+    assert evs, "the straggler was never dropped"
+    assert evs[0]["to"].active_ids == (1, 2, 3, 4)
+    assert 2 < evs[0]["superstep"] < 30  # dropped while actually slow
+    # recovery at step 30 readmits once the EWMA decays below threshold
+    assert evs[-1]["to"].is_full
+    assert driver.membership.is_full
+    # the drop-era plan was dealt at the 4-node cohort
+    assert evs[0]["plan"].B % 4 == 0
+
+
+def test_driver_straggler_without_faults_runs_full_membership():
+    """A drop policy with no fault layer (and uniform timings) never
+    produces a membership event, but the elastic path is live."""
+    gov = GovernorConfig(straggler_policy="drop", straggler_patience=2)
+    driver = _elastic_driver(None, gov=gov)
+    driver.run(4)
+    assert driver.membership == Membership.full(5)
+    assert driver.membership_events == []
+    assert driver.compiled_signatures == ((10, 5),)
+
+
+def test_driver_churn_with_prefetch_ring_drains_old_cohort():
+    """With a prefetch ring, supersteps dealt before a death drain under the
+    membership that dealt them (their samples were drawn); accounting and
+    executables stay coherent."""
+    faults = FaultSchedule.parse("death:3@2-900", 5)
+    driver = _elastic_driver(faults, prefetch=2)
+    with driver:
+        driver.run(8)
+    eras = [(r["bucket"], r["n_active"]) for r in driver.history]
+    # monotone era boundary: full-cohort items all drain before drop-era ones
+    assert eras == sorted(eras, key=lambda e: -e[1])
+    assert eras[0] == (10, 5) and eras[-1] == (12, 4)
+    assert sum(1 for e in eras if e == (10, 5)) >= 2
+    for r in driver.history:
+        assert r["bucket"] % r["n_active"] == 0
+
+
+def test_driver_rejoin_sync_pulls_node_to_cohort_mean():
+    """`_sync_rejoined` overwrites the rejoining rows with the donors' mean
+    on every [N, ...] leaf and leaves scalars alone."""
+    driver = _elastic_driver(FaultSchedule.parse("death:1@1-2", 5))
+    w = np.arange(15.0).reshape(5, 3)
+    driver.state = {"w": jnp.asarray(w), "t": jnp.asarray(3)}
+    driver._sync_rejoined(Membership.full(5).drop(1, 3),
+                          Membership.full(5).drop(3))
+    got = np.asarray(driver.state["w"])
+    donors_mean = w[[0, 2, 4]].mean(0)
+    np.testing.assert_allclose(got[1], donors_mean)
+    np.testing.assert_array_equal(got[[0, 2, 3, 4]], w[[0, 2, 3, 4]])
+    assert int(driver.state["t"]) == 3
+
+
+def test_driver_no_rejoin_sync_keeps_stale_row():
+    gov = GovernorConfig(sync_on_rejoin=False)
+    driver = _elastic_driver(FaultSchedule.parse("death:1@1-2", 5), gov=gov)
+    w = np.arange(15.0).reshape(5, 3)
+    driver.state = {"w": jnp.asarray(w)}
+    prev = Membership.full(5).drop(1)
+    driver._membership = prev
+    driver._apply_membership(2)  # rejoin step: sync gated off
+    np.testing.assert_array_equal(np.asarray(driver.state["w"]), w)
+    assert driver.membership.is_full
