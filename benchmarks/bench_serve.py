@@ -1,0 +1,220 @@
+"""Train-to-serve closed loop (docs/DESIGN.md §Train-to-serve publication):
+a gossip LM learner runs supersteps while a continuous-batching decode engine
+serves Poisson traffic off the learner's published consensus snapshots.
+
+Between supersteps the serving engine polls the `serve.publisher`
+double-buffer and hot-swaps to any newer param version (between decode steps,
+zero in-flight loss), then decodes a fixed window of steps admitting
+deterministic virtual Poisson arrivals. Rows:
+
+* tokens_per_s -- decode throughput of the continuous-batching engine while
+                  the learner trains in the same process
+* latency      -- per-decode-step wall p50/p99 (each step = one token for
+                  every occupied slot)
+* publish      -- CONTRACT: snapshot-publish overhead (publisher dispatch
+                  cost over total closed-loop wall) <= 5%, enforced by the
+                  publisher's EWMA budget governor
+* zero_loss    -- CONTRACT: >= 3 version swaps mid-traffic and zero dropped
+                  in-flight requests (every submitted request completes with
+                  exactly max_new tokens; at least one decode spans a swap)
+* staleness    -- max served-snapshot staleness in supersteps, bounded by the
+                  largest gap between consecutive publishes
+* train_delta  -- learner superstep wall with publishing vs a no-publish
+                  baseline at matched work (informational on shared CPU)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import SHAPES, get_config, reduced
+from repro.configs.base import (AveragingConfig, GovernorConfig, RunConfig,
+                                StreamConfig)
+from repro.data.lm import MarkovTokenStream
+from repro.launch import sharding as shlib
+from repro.launch.mesh import make_host_mesh, n_data_nodes
+from repro.models.common import mesh_rules
+from repro.serve.engine import ContinuousBatchingEngine
+from repro.serve.publisher import SnapshotPublisher
+from repro.train.driver import EngineConfig, StreamingDriver
+from repro.train.trainer import init_state, replicate_for_nodes
+
+SEQ = 32
+BATCH = 4
+K = 2  # rounds per superstep
+PROMPT = 8
+GEN = 10
+SLOTS = 2
+MAX_LEN = 32
+
+
+def _run_cfg():
+    return RunConfig(
+        model=reduced(get_config("granite-8b")), shape=SHAPES["train_4k"],
+        averaging=AveragingConfig("gossip", 2, "ring"),
+        stream=StreamConfig(), optimizer="adam", learning_rate=3e-4,
+        param_dtype="float32")
+
+
+def _sampler(vocab):
+    data = MarkovTokenStream(vocab, seed=0)
+
+    def sample(rng, n):
+        t = data.sample(rng, n, SEQ + 1)
+        return {"tokens": t[:, :-1], "labels": t[:, 1:]}
+
+    return sample
+
+
+def _driver(run, mesh, publisher):
+    n = n_data_nodes(mesh)
+    state = replicate_for_nodes(init_state(run, jax.random.PRNGKey(0)), n)
+    eng = EngineConfig(superstep=K, prefetch_depth=0, replan_every=0,
+                      warmup_supersteps=0, warmup_per_bucket=0,
+                      governor=GovernorConfig())
+    return StreamingDriver(run, mesh, state, _sampler(run.model.vocab_size),
+                           engine=eng, batch=BATCH, publisher=publisher)
+
+
+def _arrivals(n_req: int, steps_per_req: float, seed: int = 0) -> np.ndarray:
+    """Deterministic virtual Poisson arrival times in decode-step units
+    (exponential inter-arrivals; independent of wall clock, so the closed
+    loop replays identically across runs)."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(steps_per_req, size=n_req))
+
+
+def _bench_closed_loop(quick: bool) -> None:
+    supersteps = 8 if quick else 16
+    steps_per_sup = 10 if quick else 16
+    n_req = 10 if quick else 32
+
+    run = _run_cfg()
+    mesh = make_host_mesh()
+    rules = shlib.activation_rules(mesh, run.shape, node_axis=True)
+    pub = SnapshotPublisher(overhead_budget=0.04)  # margin under the 5% row
+    arrivals = _arrivals(n_req, steps_per_sup * supersteps / n_req)
+
+    with mesh_rules(mesh, rules):
+        drv = _driver(run, mesh, pub)
+        with drv:
+            drv.run(1)  # absorb train compiles; also the first publish
+            # settle the publish-cost EWMA at its steady (post-compile) value,
+            # then open a fresh measurement window — one-time compile cost is
+            # not what the 5% contract governs
+            for _ in range(3):
+                pub.publish(drv.state, 1, aux=drv._publish_aux())
+            pub.reset_stats()
+            eng = ContinuousBatchingEngine(
+                run.model, pub.snapshot().params, slots=SLOTS,
+                max_len=MAX_LEN, version=pub.snapshot().version)
+            # absorb serve compiles (prefill@PROMPT, insert, decode)
+            warm = eng.submit(np.arange(PROMPT), 2)
+            eng.drain()
+            assert eng.result(warm) is not None
+
+            prng = np.random.default_rng(1)
+            rids, next_arr, vstep = [], 0, 0
+            step_walls, stale_sup, pub_sups = [], [], [pub.snapshot().superstep]
+            train_wall = serve_wall = 0.0
+            s = 0
+            t_loop0 = time.perf_counter()
+            # run the planned supersteps, then keep training (bounded) until
+            # the governor has allowed >= 3 publishes mid-traffic — the
+            # zero-loss contract needs that many live swaps
+            while s < supersteps or (eng.swaps < 3 and s < supersteps + 32):
+                t0 = time.perf_counter()
+                drv.run(1)
+                train_wall += time.perf_counter() - t0
+                live = s + 2  # 1 warmup superstep + s+1 timed ones
+                if eng.poll(pub):
+                    pub_sups.append(pub.snapshot().superstep)
+                stale_sup.append(pub.staleness(live)["supersteps"])
+                t0 = time.perf_counter()
+                for _ in range(steps_per_sup):
+                    vstep += 1  # virtual clock: ticks even while slots idle
+                    while (next_arr < n_req
+                           and arrivals[next_arr] <= vstep):
+                        rids.append(eng.submit(
+                            prng.integers(0, run.model.vocab_size,
+                                          size=PROMPT), GEN))
+                        next_arr += 1
+                    if not (eng.n_active or eng.n_queued):
+                        continue
+                    t1 = time.perf_counter()
+                    eng.step()
+                    step_walls.append(time.perf_counter() - t1)
+                serve_wall += time.perf_counter() - t0
+                s += 1
+            supersteps = s  # actual supersteps run (matched-work baseline)
+            # late arrivals + tail: drain remaining traffic under live swaps
+            while next_arr < n_req:
+                rids.append(eng.submit(
+                    prng.integers(0, run.model.vocab_size, size=PROMPT), GEN))
+                next_arr += 1
+            t0 = time.perf_counter()
+            eng.drain()
+            serve_wall += time.perf_counter() - t0
+            loop_wall = time.perf_counter() - t_loop0
+
+    done = [eng.result(r) for r in rids]
+    dropped = sum(1 for d in done if d is None or len(d.tokens) != GEN)
+    spanning = sum(1 for d in done if d is not None
+                   and len(set(d.versions)) > 1)
+    toks = sum(len(d.tokens) for d in done if d is not None)
+    ws = sorted(step_walls)
+    p50 = ws[len(ws) // 2] * 1e6
+    p99 = ws[min(len(ws) - 1, int(len(ws) * 0.99))] * 1e6
+
+    emit("serve/tokens_per_s", serve_wall / max(toks, 1) * 1e6,
+         f"tok_s={toks / max(serve_wall, 1e-9):.1f};tokens={toks};"
+         f"decode_steps={eng.decode_steps};slots={SLOTS}")
+    emit("serve/latency", p50,
+         f"p50_us={p50:.0f};p99_us={p99:.0f};steps={len(ws)}")
+
+    st = pub.stats
+    frac = st.total_cost_s / max(loop_wall, 1e-9)
+    emit("serve/publish", st.cost_ewma_s * 1e6,
+         f"overhead_frac={frac:.4f};publishes={st.publishes};"
+         f"swaps={eng.swaps};skipped_budget={st.skipped_budget};"
+         f"total_cost_s={st.total_cost_s:.3f};loop_wall_s={loop_wall:.3f}")
+    # publish-overhead contract: the EWMA budget governor keeps snapshot
+    # dispatch under 5% of closed-loop wall (budget set to 4% for margin)
+    assert frac <= 0.05, ("publish overhead above budget", frac)
+    emit("serve/zero_loss", 0.0,
+         f"submitted={len(rids)};completed={len(rids) - dropped};"
+         f"dropped={dropped};spanning_swap={spanning};swaps={eng.swaps}")
+    # hot-swap contract: live traffic across >= 3 mid-stream publications,
+    # nothing dropped, and at least one request decoded under two versions
+    assert dropped == 0, ("in-flight requests dropped across swaps", dropped)
+    assert eng.swaps >= 3, ("too few mid-traffic version swaps", eng.swaps)
+    assert spanning >= 1, "no request spanned a version swap"
+
+    gaps = [b - a for a, b in zip(pub_sups, pub_sups[1:])] or [1]
+    emit("serve/staleness", 0.0,
+         f"max_supersteps={max(stale_sup)};mean={np.mean(stale_sup):.2f};"
+         f"max_publish_gap={max(gaps)};wall_s={pub.staleness(0)['wall_s']:.3f}")
+    # staleness contract: the served snapshot never trails the live iterate
+    # by more than the largest publish gap the governor allowed
+    assert max(stale_sup) <= max(gaps), (stale_sup, pub_sups)
+
+    # no-publish baseline at matched train work (informational: shared-CPU
+    # wall noise; the within-run overhead_frac above is the contract)
+    with mesh_rules(mesh, rules):
+        base = _driver(run, mesh, None)
+        with base:
+            base.run(1)
+            t0 = time.perf_counter()
+            base.run(supersteps)
+            base_wall = time.perf_counter() - t0
+    delta = (train_wall - base_wall) / max(base_wall, 1e-9)
+    emit("serve/train_delta", train_wall / supersteps * 1e6,
+         f"train_wall_s={train_wall:.3f};baseline_wall_s={base_wall:.3f};"
+         f"delta_frac={delta:.4f}")
+
+
+def run(quick: bool = False) -> None:
+    _bench_closed_loop(quick)

@@ -288,6 +288,22 @@ class GovernorConfig:
 
 
 @dataclass(frozen=True)
+class PublishConfig:
+    """Train-to-serve snapshot publication knobs
+    (`serve/publisher.py`; docs/DESIGN.md §Train-to-serve publication).
+
+    The publisher snapshots the consensus iterate at superstep boundaries
+    into double-buffered device-resident copies with a monotone version
+    counter; `overhead_budget` caps the fraction of training wall time its
+    own governor lets publication consume."""
+
+    enabled: bool = False
+    overhead_budget: float = 0.05  # publish cost / train wall-time ceiling
+    min_interval_s: float = 0.0  # floor between publishes (0 = budget only)
+    block: bool = False  # block on the copy (deterministic tests/benchmarks)
+
+
+@dataclass(frozen=True)
 class RunConfig:
     model: ModelConfig
     shape: ShapeConfig

@@ -160,7 +160,17 @@ def masked_matrix(A: np.ndarray, membership: Membership) -> np.ndarray:
     the subgraph that `A`'s off-diagonal support induces on the active cohort
     — so the block is doubly stochastic over the cohort rather than leaking
     the dropped nodes' weight mass. Full membership returns `A` unchanged
-    (bit-identical rejoin)."""
+    (bit-identical rejoin).
+
+    An adversarial drop set can *disconnect* the induced subgraph (e.g.
+    dropping every other node of a ring leaves the survivors with no edges),
+    in which case Metropolis reweighting degenerates to a non-contracting
+    operator (lambda_2 = 1: consensus never converges). That is detected
+    (induced block disconnected / lambda_2 ~ 1) and the active cohort falls
+    back to **relabeling**: the survivors form their own circulant ring
+    (`masked_schedule`'s device-path semantics densified), which is always
+    connected and doubly stochastic — graceful degradation instead of a
+    silent stall."""
     n = A.shape[0]
     if membership.n != n:
         raise ValueError(f"membership n={membership.n} vs matrix n={n}")
@@ -172,7 +182,14 @@ def masked_matrix(A: np.ndarray, membership: Membership) -> np.ndarray:
         return out
     sub_adj = (np.abs(A[np.ix_(ids, ids)]) > 0).astype(float)
     np.fill_diagonal(sub_adj, 0.0)
-    block = metropolis_weights(sub_adj)
+    if not _connected(sub_adj > 0):
+        # induced subgraph disconnected: relabel the cohort onto its own
+        # ring — same fallback the engine's device gossip path uses
+        block = ring_matrix(len(ids)).astype(A.dtype)
+    else:
+        block = metropolis_weights(sub_adj)
+        if len(ids) > 1 and lambda2(block) >= 1.0 - 1e-9:
+            block = ring_matrix(len(ids)).astype(A.dtype)
     out[np.ix_(ids, ids)] = block
     return out
 

@@ -339,6 +339,16 @@ class PerNodeRoundTime:
     def value(self, node: int) -> Optional[float]:
         return self._ewma[node]
 
+    @property
+    def seeded(self) -> bool:
+        """True once any node has a real observation. The first observation
+        seeds a node's EWMA directly (no synthetic prior), so callers should
+        withhold made-up fallback times — e.g. the driver only feeds times
+        scaled from *measured* warm-up rounds, never a constant seed — or the
+        constant dominates every node's EWMA equally and masks slow/fast
+        ratios until it decays."""
+        return any(v is not None for v in self._ewma)
+
     def median(self, ids=None) -> Optional[float]:
         """Median EWMA over `ids` (default: all nodes with observations)."""
         vals = sorted(v for i, v in enumerate(self._ewma)

@@ -1,0 +1,132 @@
+"""Launcher-level perf hygiene: process environment the XLA runtime reads at
+import time (tcmalloc preload detection, XLA step-marker flags, TF log
+noise), applied by `launch/train.py` and `launch/serve.py` BEFORE `import
+jax`.
+
+This module must therefore stay import-light: no jax, no repro modules that
+pull jax in. Everything is pure env-dict manipulation so it is unit-testable
+without touching the real process environment.
+
+Escape hatch: pass `--no-env-tuning` on any launcher command line (peeked
+from argv before argparse runs, because the tuning must land before the jax
+import that argparse-time application would be too late for).
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Dict, List, Optional
+
+# Well-known tcmalloc locations (Debian/Ubuntu package paths). Preloading
+# tcmalloc avoids glibc-malloc contention on the host-side staging threads;
+# we can only *detect and report* here — LD_PRELOAD must be set before the
+# process starts to affect it, so the launcher exports it for children and
+# prints a hint when the current process runs without it.
+TCMALLOC_PATHS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+)
+
+# Keep one-off large-allocation reports from spamming the log (the superstep
+# staging buffers trip the default 1 GiB threshold constantly).
+TCMALLOC_REPORT_THRESHOLD = "60000000000"
+
+# --xla_step_marker_location=1: mark the outer while loop (the K-round
+# superstep scan) as the step boundary for profiler alignment; 0 would mark
+# the program entry. TPU-only: CPU/GPU XLA builds do not register the flag
+# and hard-fail ("Check failed: Flags::Parse") on any unknown XLA_FLAGS
+# entry, so it is injected only when a TPU runtime is detectable.
+XLA_STEP_MARKER = "--xla_step_marker_location=1"
+
+
+def tpu_available(env: Optional[Dict[str, str]] = None) -> bool:
+    """Best-effort TPU detection WITHOUT importing jax (this module runs
+    before the jax import). An explicit platform request (JAX_PLATFORMS /
+    JAX_PLATFORM_NAME) is authoritative — a toolchain image can ship libtpu
+    while pinning the cpu backend, whose XLA client rejects TPU flags.
+    Without one, a libtpu install or a /dev accel device means jax will
+    initialize the TPU plugin."""
+    env = os.environ if env is None else env
+    plat = env.get("JAX_PLATFORMS", env.get("JAX_PLATFORM_NAME", ""))
+    if plat:
+        return "tpu" in plat
+    try:
+        import importlib.util
+        if importlib.util.find_spec("libtpu") is not None:
+            return True
+    except (ImportError, ValueError):
+        pass
+    return any(os.path.exists(f"/dev/accel{i}") for i in range(4))
+
+
+def find_tcmalloc() -> Optional[str]:
+    """First existing well-known tcmalloc shared object, or None."""
+    for p in TCMALLOC_PATHS:
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def tuned_env(env: Optional[Dict[str, str]] = None,
+              tpu: Optional[bool] = None) -> Dict[str, str]:
+    """Return the perf-hygiene mutations as a dict (pure; does not apply).
+
+    * TF_CPP_MIN_LOG_LEVEL=4 — silence TF/XLA C++ info spam on the hot path
+      (only if the user has not chosen a level).
+    * XLA_FLAGS gains the step-marker flag on TPU runtimes (idempotent:
+      never duplicated, user-provided flags preserved; CPU/GPU XLA rejects
+      unknown flags outright, so non-TPU backends are left untouched).
+    * TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD raised (if unset).
+    * LD_PRELOAD set to a detected tcmalloc (if unset and one exists) so
+      *child* processes get it; the current process is unaffected.
+
+    `tpu` overrides the runtime detection (tests); None = auto-detect.
+    """
+    env = dict(os.environ if env is None else env)
+    out: Dict[str, str] = {}
+    if "TF_CPP_MIN_LOG_LEVEL" not in env:
+        out["TF_CPP_MIN_LOG_LEVEL"] = "4"
+    xla = env.get("XLA_FLAGS", "")
+    tpu = tpu_available(env) if tpu is None else tpu
+    if tpu and "--xla_step_marker_location" not in xla:
+        out["XLA_FLAGS"] = f"{XLA_STEP_MARKER} {xla}".strip()
+    if "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD" not in env:
+        out["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"] = TCMALLOC_REPORT_THRESHOLD
+    tc = find_tcmalloc()
+    if tc is not None and not env.get("LD_PRELOAD"):
+        out["LD_PRELOAD"] = tc
+    return out
+
+
+def wants_tuning(argv: Optional[List[str]] = None) -> bool:
+    """The escape hatch, peeked from raw argv (pre-argparse)."""
+    argv = sys.argv if argv is None else argv
+    return "--no-env-tuning" not in argv
+
+
+def apply(env: Optional[Dict[str, str]] = None, *, echo: bool = False) -> Dict[str, str]:
+    """Apply `tuned_env` to os.environ (or the given dict, for tests).
+    Returns the mutations that were applied."""
+    target = os.environ if env is None else env
+    changes = tuned_env(dict(target))
+    target.update(changes)
+    if echo and changes:
+        print("env tuning: " + " ".join(f"{k}={v}" for k, v in
+                                        sorted(changes.items())),
+              file=sys.stderr)
+    if echo and find_tcmalloc() and "tcmalloc" not in os.environ.get(
+            "LD_PRELOAD", ""):
+        print("env tuning: tcmalloc present but not preloaded in THIS "
+              "process (LD_PRELOAD only affects children); relaunch with "
+              f"LD_PRELOAD={find_tcmalloc()} for host-thread malloc relief",
+              file=sys.stderr)
+    return changes
+
+
+def apply_from_argv(argv: Optional[List[str]] = None) -> Dict[str, str]:
+    """What launcher modules call at import time, before `import jax`:
+    apply tuning unless `--no-env-tuning` is on the command line."""
+    if not wants_tuning(argv):
+        return {}
+    return apply(echo=False)

@@ -11,6 +11,12 @@ from __future__ import annotations
 import argparse
 import time
 
+# perf hygiene BEFORE the jax import (XLA reads XLA_FLAGS / TF log level at
+# import time); `--no-env-tuning` on the command line skips it
+from repro.launch import env as _env
+
+_env.apply_from_argv()
+
 import jax
 import jax.numpy as jnp
 
@@ -28,6 +34,17 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--window-override", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--no-env-tuning", action="store_true",
+                    help="skip the launcher perf hygiene (launch/env.py); "
+                         "applied at import time, declared here for --help")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching decode loop (slot-based "
+                         "admission, prefill-on-admit) instead of the static "
+                         "batch generate path")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV slot pool size for --continuous")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="synthetic requests to serve with --continuous")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -36,6 +53,9 @@ def main():
     dtype = jnp.dtype(args.dtype)
     params = registry.init_params(jax.random.PRNGKey(0), cfg, dtype,
                                   window_override=args.window_override)
+    if args.continuous:
+        _serve_continuous(cfg, params, args, dtype)
+        return
     prompt = registry.synth_batch(jax.random.PRNGKey(1), cfg, args.batch,
                                   args.prompt_len, mode="prefill")
     max_len = args.prompt_len + args.gen
@@ -62,6 +82,31 @@ def main():
     print(f"prefill: {t_prefill:.2f}s  decode: {t_decode:.2f}s "
           f"({args.batch * (args.gen - 1) / max(t_decode, 1e-9):.1f} tok/s)")
     print("sample token ids:", out[0, :16].tolist())
+
+
+def _serve_continuous(cfg, params, args, dtype):
+    """Continuous-batching loop over synthetic prompts (the production decode
+    path; see docs/DESIGN.md §Train-to-serve publication)."""
+    import numpy as np
+
+    max_len = args.prompt_len + args.gen
+    eng = engine.ContinuousBatchingEngine(
+        cfg, params, slots=args.slots, max_len=max_len, dtype=dtype,
+        window_override=args.window_override)
+    rng = np.random.default_rng(0)
+    rids = [eng.submit(rng.integers(0, cfg.vocab_size, size=args.prompt_len),
+                       args.gen) for _ in range(args.requests)]
+    t0 = time.time()
+    eng.drain()
+    wall = time.time() - t0
+    done = [eng.result(r) for r in rids]
+    toks = sum(len(r.tokens) for r in done)
+    print(f"arch={cfg.name} slots={args.slots} requests={args.requests} "
+          f"prompt={args.prompt_len} gen={args.gen}")
+    print(f"continuous decode: {wall:.2f}s  {toks} tokens "
+          f"({toks / max(wall, 1e-9):.1f} tok/s, "
+          f"{eng.decode_steps} decode steps)")
+    print("sample token ids:", done[0].tokens[:16])
 
 
 if __name__ == "__main__":

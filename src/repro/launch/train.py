@@ -15,12 +15,18 @@ from __future__ import annotations
 
 import argparse
 
+# perf hygiene BEFORE the jax import (XLA reads XLA_FLAGS / TF log level at
+# import time); `--no-env-tuning` on the command line skips it
+from repro.launch import env as _env
+
+_env.apply_from_argv()
+
 import jax
 import numpy as np
 
 from repro.configs import SHAPES, get_config, reduced as reduce_cfg
-from repro.configs.base import (AveragingConfig, GovernorConfig, RunConfig,
-                                StreamConfig)
+from repro.configs.base import (AveragingConfig, GovernorConfig, PublishConfig,
+                                RunConfig, StreamConfig)
 from repro.core.faults import FaultSchedule
 from repro.data.lm import MarkovTokenStream
 from repro.launch import sharding as shlib
@@ -90,6 +96,16 @@ def main():
                          "syncing it to the cohort mean")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 mesh (requires 256 devices)")
+    ap.add_argument("--no-env-tuning", action="store_true",
+                    help="skip the launcher perf hygiene (launch/env.py); "
+                         "applied at import time, declared here for --help")
+    ap.add_argument("--publish", action="store_true",
+                    help="publish consensus param snapshots at superstep "
+                         "boundaries (serve/publisher.py) for a serving "
+                         "replica to adopt")
+    ap.add_argument("--publish-budget", type=float, default=0.05,
+                    help="publish-governor overhead budget: max fraction of "
+                         "train wall time spent on snapshot copies")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -125,13 +141,24 @@ def main():
     data = MarkovTokenStream(cfg.vocab_size, seed=0)
     sample_fn = lambda rng, n: _draw(data, rng, n, args.seq)
 
+    publisher = None
+    if args.publish:
+        from repro.serve.publisher import SnapshotPublisher
+
+        pub_cfg = PublishConfig(enabled=True,
+                                overhead_budget=args.publish_budget)
+        publisher = SnapshotPublisher(
+            overhead_budget=pub_cfg.overhead_budget,
+            min_interval_s=pub_cfg.min_interval_s, block=pub_cfg.block)
+
     with mesh_rules(mesh, rules):
         state = init_state(run, jax.random.PRNGKey(run.seed))
         if decentralized:
             state = replicate_for_nodes(state, n_nodes)
         with StreamingDriver(run, mesh, state, sample_fn, engine=engine,
                              batch=args.batch, faults=faults,
-                             horizon=args.horizon or None) as driver:
+                             horizon=args.horizon or None,
+                             publisher=publisher) as driver:
             plan = driver.pipeline.plan
             print(f"plan: B={plan.B} mu={plan.mu} regime={plan.regime} "
                   f"nodes={n_nodes} K={engine.superstep} "
@@ -139,6 +166,16 @@ def main():
                   f"buckets={list(driver.ladder.buckets)}")
             state, history = driver.run(supersteps, log_fn=_log,
                                         log_every=args.log_every)
+    if publisher is not None:
+        st = publisher.stats
+        stale = publisher.staleness(supersteps)
+        print(f"publisher: v{publisher.version} publishes={st.publishes} "
+              f"skipped(budget={st.skipped_budget} "
+              f"interval={st.skipped_interval}) "
+              f"cost_ewma={st.cost_ewma_s * 1e3:.2f}ms "
+              f"total_cost={st.total_cost_s:.3f}s "
+              f"staleness={stale['supersteps']} supersteps "
+              f"/ {stale['wall_s']:.2f}s")
     if args.checkpoint:
         ckpt.save(args.checkpoint, state, step=supersteps * engine.superstep,
                   meta={"arch": args.arch, "reduced": args.reduced})

@@ -240,7 +240,9 @@ def apply_attention(
     window: int = 0,
     use_rope: bool = True,
     cache: Optional[Params] = None,  # {"k","v"} [B, S_max, KH, hd]
-    cache_index: Optional[jax.Array] = None,  # scalar int: write offset
+    cache_index: Optional[jax.Array] = None,  # scalar int or [B] vector (per-slot
+    # decode, continuous batching): write offset per batch row; vector form
+    # requires S == 1
     cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
     B, S, _ = x.shape
@@ -276,10 +278,15 @@ def apply_attention(
         W = cache["k"].shape[1]
         if S == 1:
             slot = cache_index % W
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            if getattr(cache_index, "ndim", 0) == 1:
+                rows = jnp.arange(B)
+                ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
             new_cache = {"k": ck, "v": cv}
             kvv = jnp.minimum(cache_index + 1, W)
             out = blockwise_attention(q, ck, cv, causal=False, kv_valid=kvv)
@@ -304,10 +311,17 @@ def apply_attention(
         if S > 1:
             k = pshard(k, "act_kv")
             v = pshard(v, "act_kv")
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, cache_index, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, cache_index, 0, 0))
+        if getattr(cache_index, "ndim", 0) == 1:
+            # per-slot decode: row b writes its own position cache_index[b]
+            # (scatter instead of dynamic_update_slice); S must be 1
+            rows = jnp.arange(B)
+            ck = cache["k"].at[rows, cache_index].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, cache_index].set(v[:, 0].astype(cache["v"].dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                              (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                              (0, cache_index, 0, 0))
         new_cache = {"k": pshard(ck, "act_cache_kv"), "v": pshard(cv, "act_cache_kv")}
         k, v = ck, cv
         kv_valid = cache_index + S
@@ -375,10 +389,18 @@ def apply_mla(
     kv_valid = None
     q_offset = 0
     if cache is not None:
-        c1 = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype),
-                                          (0, cache_index, 0))
-        c2 = jax.lax.dynamic_update_slice(cache["krope"], k_rope.astype(cache["krope"].dtype),
-                                          (0, cache_index, 0, 0))
+        if getattr(cache_index, "ndim", 0) == 1:
+            # per-slot decode (S == 1): scatter each row at its own position
+            rows = jnp.arange(B)
+            c1 = cache["ckv"].at[rows, cache_index].set(
+                ckv[:, 0].astype(cache["ckv"].dtype))
+            c2 = cache["krope"].at[rows, cache_index].set(
+                k_rope[:, 0].astype(cache["krope"].dtype))
+        else:
+            c1 = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                                              (0, cache_index, 0))
+            c2 = jax.lax.dynamic_update_slice(cache["krope"], k_rope.astype(cache["krope"].dtype),
+                                              (0, cache_index, 0, 0))
         new_cache = {"ckv": c1, "krope": c2}
         ckv, k_rope = c1, c2
         kv_valid = cache_index + S

@@ -191,6 +191,8 @@ def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
     x = _embed(cfg, params, batch)
     B, Sq = batch["tokens"].shape
     base = jnp.asarray(0 if cache_index is None else cache_index)
+    if base.ndim == 1:  # per-slot decode: row b starts at its own position
+        base = base[:, None]
     positions = jnp.broadcast_to(jnp.arange(Sq)[None] + base, (B, Sq))
 
     def superblock(carry, xs):
@@ -294,7 +296,8 @@ def prefill(params: Params, cfg: ModelConfig, batch, cache, *, window_override: 
 
 def decode_step(params: Params, cfg: ModelConfig, tokens, cache, index, *,
                 window_override: int = 0):
-    """tokens: [B, 1]; index: scalar int32 (current length). Returns (logits, cache)."""
+    """tokens: [B, 1]; index: scalar int32 (current length) or [B] int32
+    vector (per-slot lengths, continuous batching). Returns (logits, cache)."""
     logits, _, new_cache = forward(params, cfg, {"tokens": tokens}, remat=False,
                                    cache=cache, cache_index=index,
                                    window_override=window_override)

@@ -143,7 +143,8 @@ class StreamingDriver:
                  batch: Optional[int] = None, horizon: Optional[float] = None,
                  n_nodes: Optional[int] = None, seed: int = 0,
                  clock: Callable[[], float] = time.perf_counter,
-                 faults: Optional[FaultSchedule] = None):
+                 faults: Optional[FaultSchedule] = None,
+                 publisher: Optional[Any] = None):
         if engine.superstep < 1:
             raise ValueError("superstep K must be >= 1")
         if mesh is None and n_nodes is None:
@@ -234,6 +235,17 @@ class StreamingDriver:
         self._estimator = (rates.RoundTimeEstimator(
             self.n_nodes, run_cfg.averaging.rounds, window=gov.window)
             if gov.estimate_rates else None)
+        # train-to-serve publication (see docs/DESIGN.md
+        # §Train-to-serve publication): snapshots are taken at the
+        # superstep boundary, after
+        # the timed window — publication cost is engine bookkeeping the
+        # publisher's own governor budgets, not stream processing
+        self._publisher = publisher
+        if publisher is not None:
+            from repro.train.trainer import publish_extract
+            publisher.configure(extract=publish_extract(
+                self.n_nodes if self.decentralized else None))
+        self._pub_masks: Dict[Optional[Membership], Optional[jax.Array]] = {}
         self.history: List[Dict[str, Any]] = []
 
     def _make_ladder(self, gov: GovernorConfig) -> rates.BucketLadder:
@@ -390,9 +402,30 @@ class StreamingDriver:
             metrics = jax.device_get(metrics)  # one fetch per K rounds
             wall_s = max(self.clock() - t0, 1e-12)
             rec = self._observe(metrics, wall_s, counters, used_plan)
+            if self._publisher is not None:
+                # outside the timed window, at the plan-latch barrier: the
+                # publisher's copy dispatch is async and its own governor
+                # keeps the cost within the configured overhead budget
+                snap = self._publisher.maybe_publish(
+                    self.state, self._supersteps_done, aux=self._publish_aux())
+                rec["published_version"] = snap.version if snap else None
             if log_fn and (i % log_every == 0 or i == supersteps - 1):
                 log_fn(rec)
         return self.state, self.history
+
+    def _publish_aux(self) -> Optional[jax.Array]:
+        """The publisher extract's aux: a [N] float membership mask for
+        decentralized runs (consensus mean over *active* nodes), None in
+        exact mode. Cached per membership so steady state pays no H2D."""
+        if not self.decentralized:
+            return None
+        mem = self._membership
+        mask = self._pub_masks.get(mem)
+        if mask is None:
+            mask = (jnp.ones((self.n_nodes,), jnp.float32) if mem is None
+                    else jnp.asarray(np.asarray(mem.active, np.float32)))
+            self._pub_masks[mem] = mask
+        return mask
 
     # ---------------------------------------------------------- membership
 
@@ -414,10 +447,16 @@ class StreamingDriver:
         desired = (self._faults.alive(step) if self._faults is not None
                    else Membership.full(self.n_nodes))
         if self._straggler is not None:
-            if self._faults is not None:
-                base = self._last_round_s if self._last_round_s else 1.0
+            if self._faults is not None and self._last_round_s:
+                # per-node times are synthesized from MEASURED warm-up round
+                # times only: before the first timed superstep there is no
+                # base to scale the fault factors by, and feeding a made-up
+                # 1.0 s seed would pollute every node's EWMA with the same
+                # large constant — ratios to the cohort median then stay
+                # ~1 until the seed decays, delaying eviction by ~1/alpha
+                # supersteps (the pre-PR-7 behavior)
                 self._straggler.observe(
-                    self._faults.round_s_per_node(step, base))
+                    self._faults.round_s_per_node(step, self._last_round_s))
             desired = self._straggler.propose(desired)
         prev = self._membership
         if desired == prev:

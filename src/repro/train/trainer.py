@@ -57,6 +57,34 @@ def replicate_for_nodes(state: TrainState, n_nodes: int) -> TrainState:
                         state)
 
 
+def publish_extract(n_nodes: Optional[int] = None) -> Callable:
+    """Extract fn for `serve.publisher.SnapshotPublisher`: map the live
+    TrainState to the params a serving replica should load.
+
+    Exact-averaging runs (`n_nodes=None`) publish `state.params` as-is. A
+    decentralized run passes `n_nodes` and a [N] float membership mask as the
+    publisher's `aux`: leaves carrying the leading node axis are reduced to
+    the *consensus iterate* — the mask-weighted mean over active nodes (the
+    quantity the paper's eq. 17 averaging drives every node toward), so
+    dropped nodes' stale rows never pollute the served weights. Runs inside
+    the publisher's jitted copy, billed to the publish governor."""
+
+    def extract(state, mask=None):
+        params = state.params if hasattr(state, "params") else state
+        if n_nodes is None or mask is None:
+            return params
+        w = mask / jnp.sum(mask)
+
+        def consensus(p):
+            if getattr(p, "ndim", 0) and p.shape[0] == n_nodes:
+                return jnp.tensordot(w, p, axes=1).astype(p.dtype)
+            return p
+
+        return jax.tree.map(consensus, params)
+
+    return extract
+
+
 def build_train_step(run: RunConfig, mesh, *,
                      n_nodes: Optional[int] = None) -> Tuple[Callable, Callable]:
     """Returns (train_step, state_spec_fn).

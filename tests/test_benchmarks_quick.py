@@ -31,7 +31,7 @@ def test_run_quick_all_suites(tmp_path):
                    "consensus/quant_accuracy/", "kernel/", "pipeline/",
                    "krasulina/fused/", "krasulina/gossip/",
                    "governor/cold_switch/", "governor/warm_switch/",
-                   "elastic/throughput/"):
+                   "elastic/throughput/", "serve/"):
         assert any(n.startswith(prefix) for n in names), (prefix, names)
     # the engine rows carry machine-readable throughput
     pipe = [r for r in artifact["rows"] if r["name"].startswith("pipeline/")]
@@ -66,3 +66,20 @@ def test_run_quick_all_suites(tmp_path):
     ce = [r for r in artifact["rows"] if r["name"] == "elastic/consensus"]
     assert ce and "ratio=" in ce[0]["derived"]
     assert float(ce[0]["derived"].split("ratio=")[1].split(";")[0]) <= 2.0
+    # train-to-serve contract rows (PR 7): snapshot publication overhead on
+    # the closed loop stays under the 5% budget, and continuous-batching
+    # traffic crosses >= 3 mid-stream version swaps with zero dropped
+    # in-flight requests
+
+    def field(row, key):
+        return float(row["derived"].split(f"{key}=")[1].split(";")[0])
+
+    sp = [r for r in artifact["rows"] if r["name"] == "serve/publish"]
+    assert sp and field(sp[0], "overhead_frac") <= 0.05
+    sz = [r for r in artifact["rows"] if r["name"] == "serve/zero_loss"]
+    assert sz and field(sz[0], "dropped") == 0
+    assert field(sz[0], "swaps") >= 3
+    assert field(sz[0], "submitted") == field(sz[0], "completed")
+    st = [r for r in artifact["rows"] if r["name"] == "serve/staleness"]
+    assert st and field(st[0], "max_supersteps") <= field(st[0],
+                                                          "max_publish_gap")

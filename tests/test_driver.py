@@ -344,3 +344,70 @@ def test_driver_runs_with_prefetch_and_counts_rounds():
     assert [rec["round"] for rec in history] == [3, 6]
     assert history[-1]["counters"].samples_consumed == 6 * BATCH
     assert all(np.isfinite(rec["metrics"]["loss"]) for rec in history)
+
+
+# ---------------------------------------------------------------------------
+# Train-to-serve publication (PR 7)
+# ---------------------------------------------------------------------------
+
+def test_driver_publishes_consensus_snapshots():
+    """With a publisher attached the driver publishes at superstep
+    boundaries: versions are monotone, each history record carries the
+    published version (or None on a governed skip), and the snapshot param
+    tree matches the model param structure — including the consensus mean
+    over the node axis in decentralized mode."""
+    from repro.serve.publisher import SnapshotPublisher
+
+    for mode, n_nodes in (("exact", 1), ("gossip", 1)):
+        run_cfg = _run_cfg(mode=mode, rounds=2)
+        mesh = make_mesh((1, 1), ("data", "model"))
+        decentralized = mode != "exact"
+        pub = SnapshotPublisher(overhead_budget=0.0)  # ungoverned: always
+        with mesh_rules(mesh, activation_rules(mesh, run_cfg.shape,
+                                               node_axis=decentralized)):
+            state = init_state(run_cfg, jax.random.PRNGKey(0))
+            if decentralized:
+                state = replicate_for_nodes(state, n_nodes)
+            driver = StreamingDriver(
+                run_cfg, mesh, state, _sample_fn(), batch=BATCH,
+                n_nodes=n_nodes, publisher=pub,
+                engine=EngineConfig(superstep=2, prefetch_depth=0,
+                                    replan_every=0, warmup_supersteps=0))
+            _, history = driver.run(3)
+        assert pub.version == 3
+        assert [r["published_version"] for r in history] == [1, 2, 3]
+        snap = pub.snapshot()
+        ref = jax.eval_shape(lambda: driver.state.params)
+        leaves = jax.tree_util.tree_leaves(snap.params)
+        ref_leaves = jax.tree_util.tree_leaves(ref)
+        if decentralized:
+            # node axis averaged away: snapshot leaves drop the leading dim
+            assert all(s.shape == r.shape[1:]
+                       for s, r in zip(leaves, ref_leaves))
+        else:
+            assert all(s.shape == r.shape
+                       for s, r in zip(leaves, ref_leaves))
+        assert snap.superstep == 3
+
+
+def test_driver_publish_governor_skip_records_none():
+    """A budget-starved publisher skips mid-run publishes; the driver records
+    published_version=None for those supersteps and the first publish still
+    always lands."""
+    from repro.serve.publisher import SnapshotPublisher
+
+    run_cfg = _run_cfg()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    pub = SnapshotPublisher(overhead_budget=1e-12)  # everything over budget
+    pub.stats.cost_ewma_s = 10.0  # pretend publishes are very expensive
+    with mesh_rules(mesh, activation_rules(mesh, run_cfg.shape)):
+        state = init_state(run_cfg, jax.random.PRNGKey(0))
+        driver = StreamingDriver(
+            run_cfg, mesh, state, _sample_fn(), batch=BATCH, publisher=pub,
+            engine=EngineConfig(superstep=2, prefetch_depth=0,
+                                replan_every=0, warmup_supersteps=0))
+        _, history = driver.run(3)
+    versions = [r["published_version"] for r in history]
+    assert versions[0] == 1  # unconditional first publish
+    assert versions[1:] == [None, None]
+    assert pub.stats.skipped_budget == 2

@@ -625,3 +625,93 @@ def test_driver_no_rejoin_sync_keeps_stale_row():
     driver._apply_membership(2)  # rejoin step: sync gated off
     np.testing.assert_array_equal(np.asarray(driver.state["w"]), w)
     assert driver.membership.is_full
+
+
+# ---------------------------------------------------------------------------
+# PR 7 regression: straggler EWMAs seed from measured rounds, not a constant
+# ---------------------------------------------------------------------------
+
+def test_straggler_seed_from_measured_times_detects_faster():
+    """Seeding every node's EWMA with the same synthetic constant (the old
+    1.0 s fallback) masks slow/fast ratios until the seed decays at
+    0.5^k — detection of a real straggler is delayed by many rounds. Seeding
+    from the first MEASURED observation detects at the patience bound."""
+    def rounds_to_evict(synthetic_seed):
+        pol = rates.StragglerPolicy(4, "drop", slow_factor=2.0, patience=2)
+        full = Membership.full(4)
+        if synthetic_seed:  # pre-fix driver behavior: base = 1.0 s fallback
+            pol.observe([1.0, 1.0, 1.0, 1.0])
+            pol.propose(full)
+        # true times: 1 ms rounds, node 0 sustained 10x slow
+        for k in range(1, 40):
+            pol.observe([1e-2, 1e-3, 1e-3, 1e-3])
+            if not pol.propose(full).is_full:
+                return k
+        raise AssertionError("straggler never detected")
+
+    fast = rounds_to_evict(synthetic_seed=False)
+    slow = rounds_to_evict(synthetic_seed=True)
+    assert fast == 2  # patience consecutive verdicts, no warm-up lag
+    assert slow >= fast + 4, (fast, slow)  # the polluted EWMA delays eviction
+
+
+def test_driver_withholds_observation_until_first_measured_round():
+    """The driver feeds the straggler policy only times scaled from MEASURED
+    rounds: before the first timed superstep nothing is observed (no
+    synthetic seed), and afterwards every EWMA is on the measured-ms scale,
+    not a made-up 1.0 s constant."""
+    faults = FaultSchedule.parse("slow:0@0-30x10", 5)
+    gov = GovernorConfig(straggler_policy="drop", straggler_slow_factor=2.0,
+                         straggler_patience=2)
+    driver = _elastic_driver(faults, gov=gov)
+    assert not driver._straggler.times.seeded
+    driver.run(1)  # membership for superstep 0 resolves pre-measurement
+    driver.run(5)
+    times = driver._straggler.times
+    assert times.seeded
+    vals = [times.value(i) for i in range(5) if times.value(i) is not None]
+    assert vals and max(vals) < 0.5, vals  # ms-scale, no 1.0 s pollution
+    # and the sustained straggler was evicted promptly (patience + seed lag
+    # of the measured base only)
+    evs = driver.membership_events
+    assert evs and evs[0]["to"].active_ids == (1, 2, 3, 4)
+    assert evs[0]["superstep"] <= 4
+
+
+# ---------------------------------------------------------------------------
+# PR 7: masked_matrix falls back to cohort relabeling when the induced
+# subgraph disconnects
+# ---------------------------------------------------------------------------
+
+def test_masked_matrix_disconnected_drop_set_relabels_cohort():
+    """Adversarial drop set: killing alternate nodes of a ring leaves the
+    survivors with NO edges among themselves (the induced subgraph is fully
+    disconnected). The dense mask must not silently return a stalled
+    operator (lambda_2 = 1); it relabels the cohort onto its own ring."""
+    A = mixing.ring_matrix(6)
+    mem = Membership.full(6).drop(1, 3, 5)
+    ids = list(mem.active_ids)
+    M = mixing.masked_matrix(A, mem)
+    assert mixing.is_doubly_stochastic(M)
+    block = M[np.ix_(ids, ids)]
+    # the active block contracts (relabeled ring), instead of stalling at I
+    assert mixing.lambda2(block) < 1.0 - 1e-9
+    np.testing.assert_allclose(block, mixing.ring_matrix(3), atol=1e-12)
+    # dead nodes still hold their state exactly
+    for i in (1, 3, 5):
+        e = np.zeros(6)
+        e[i] = 1.0
+        np.testing.assert_array_equal(M[i], e)
+        np.testing.assert_array_equal(M[:, i], e)
+
+
+def test_masked_matrix_partitioned_drop_set_relabels_cohort():
+    """A drop set that PARTITIONS the survivors (two arcs of a ring that
+    cannot reach each other) also triggers the relabeling fallback — the
+    Metropolis block would be block-diagonal with lambda_2 = 1."""
+    A = mixing.ring_matrix(8)
+    mem = Membership.full(8).drop(0, 4)  # survivors split into 1-3 and 5-7
+    ids = list(mem.active_ids)
+    M = mixing.masked_matrix(A, mem)
+    assert mixing.is_doubly_stochastic(M)
+    assert mixing.lambda2(M[np.ix_(ids, ids)]) < 1.0 - 1e-9

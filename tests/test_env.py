@@ -1,0 +1,72 @@
+"""Launcher perf hygiene (launch/env.py): pure env-dict mutations, idempotent
+TPU-gated XLA flag injection, and the --no-env-tuning escape hatch."""
+import os
+
+from repro.launch import env
+
+
+def test_tuned_env_is_pure_and_sets_defaults():
+    base = {}
+    before = dict(base)
+    out = env.tuned_env(base, tpu=True)
+    assert base == before  # pure: the input dict is never mutated
+    assert out["TF_CPP_MIN_LOG_LEVEL"] == "4"
+    assert out["XLA_FLAGS"] == env.XLA_STEP_MARKER
+    assert out["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"] == \
+        env.TCMALLOC_REPORT_THRESHOLD
+
+
+def test_tuned_env_preserves_user_choices():
+    base = {"TF_CPP_MIN_LOG_LEVEL": "0",
+            "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "1",
+            "LD_PRELOAD": "/opt/custom.so"}
+    out = env.tuned_env(base, tpu=True)
+    assert "TF_CPP_MIN_LOG_LEVEL" not in out
+    assert "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD" not in out
+    assert "LD_PRELOAD" not in out  # user preload wins over tcmalloc
+
+
+def test_step_marker_is_tpu_only():
+    """CPU/GPU XLA builds hard-fail on unknown XLA_FLAGS entries, so the
+    step marker must never be injected off-TPU."""
+    out = env.tuned_env({}, tpu=False)
+    assert "XLA_FLAGS" not in out
+    # explicit platform request counts as TPU presence
+    assert env.tpu_available({"JAX_PLATFORMS": "tpu,cpu"})
+    assert not env.tpu_available({"JAX_PLATFORMS": "cpu"})
+
+
+def test_xla_flags_injection_is_idempotent_and_additive():
+    out = env.tuned_env({"XLA_FLAGS": "--xla_foo=bar"}, tpu=True)
+    assert out["XLA_FLAGS"] == f"{env.XLA_STEP_MARKER} --xla_foo=bar"
+    # a user-chosen step-marker location is never overridden or duplicated
+    again = env.tuned_env({"XLA_FLAGS": out["XLA_FLAGS"]}, tpu=True)
+    assert "XLA_FLAGS" not in again
+    custom = env.tuned_env({"XLA_FLAGS": "--xla_step_marker_location=0"},
+                           tpu=True)
+    assert "XLA_FLAGS" not in custom
+
+
+def test_wants_tuning_escape_hatch():
+    assert env.wants_tuning(["prog", "--arch", "granite-8b"])
+    assert not env.wants_tuning(["prog", "--no-env-tuning"])
+    assert env.apply_from_argv(["prog", "--no-env-tuning"]) == {}
+
+
+def test_apply_mutates_target_and_reports_changes():
+    target = {}
+    changes = env.apply(target)
+    assert changes and all(target[k] == v for k, v in changes.items())
+    assert target["TF_CPP_MIN_LOG_LEVEL"] == "4"
+    # second apply is a no-op on the already-tuned dict (except LD_PRELOAD,
+    # which depends on whether the container ships tcmalloc)
+    changes2 = {k: v for k, v in env.apply(target).items()
+                if k != "LD_PRELOAD"}
+    assert changes2 == {}
+
+
+def test_find_tcmalloc_only_returns_existing_paths():
+    tc = env.find_tcmalloc()
+    assert tc is None or os.path.exists(tc)
+    if tc is not None:
+        assert "tcmalloc" in tc

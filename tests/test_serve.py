@@ -53,3 +53,213 @@ def test_serve_state_index_advances(setup):
     assert int(st.index) == 8
     st, _ = engine.serve_step(params, cfg, st)
     assert int(st.index) == 9
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching (PR 7: train-to-serve hot publication)
+# ---------------------------------------------------------------------------
+
+import numpy as np
+
+from repro.serve.engine import ContinuousBatchingEngine
+from repro.serve.publisher import SnapshotPublisher
+
+
+def _prompts(cfg, n, length, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=length) for _ in range(n)]
+
+
+def test_continuous_matches_eager_generate(setup):
+    """More requests than slots: admissions churn through the pool, and every
+    request's token ids equal the static batch-1 generate path."""
+    cfg, params = setup
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=32)
+    prompts = _prompts(cfg, 5, 8, seed=1)
+    rids = [eng.submit(p, 6) for p in prompts]
+    eng.drain()
+    for rid, p in zip(rids, prompts):
+        req = eng.result(rid)
+        assert len(req.tokens) == 6
+        ref = engine.generate(params, cfg, {"tokens": jnp.asarray(p[None])},
+                              32, 6, dtype=jnp.float32)
+        assert ref[0].tolist() == req.tokens
+
+
+def test_continuous_mamba_family_rides_same_plumbing():
+    """Recurrent-state families use the identical slot cache path (their
+    sequences are non-degenerate under random init, exercising the cache)."""
+    cfg = reduced(get_config("mamba2-2.7b"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=48)
+    prompts = _prompts(cfg, 3, 10, seed=3)
+    rids = [eng.submit(p, 12) for p in prompts]
+    eng.drain()
+    for rid, p in zip(rids, prompts):
+        ref = engine.generate(params, cfg, {"tokens": jnp.asarray(p[None])},
+                              48, 12, dtype=jnp.float32)
+        assert ref[0].tolist() == eng.result(rid).tokens
+
+
+def test_decode_spanning_swap_bit_identical(setup):
+    """A request alive across a version flip produces exactly the token ids
+    of decoding each segment under its own params (zero in-flight loss, no
+    cache invalidation)."""
+    cfg, params = setup
+    p_b = jax.tree.map(lambda a: -a, params)  # definitely different logits
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=48)
+    prompt = _prompts(cfg, 1, 10, seed=5)[0]
+    rid = eng.submit(prompt, 10)
+    for _ in range(4):
+        eng.step()
+    n_a = len(next(iter(eng._active.values())).tokens)  # tokens under v0
+    assert 0 < n_a < 10
+    eng.swap_params(p_b, version=1)
+    eng.drain()
+    req = eng.result(rid)
+    assert req.versions == [0] * n_a + [1] * (10 - n_a)
+
+    # segmented reference on the scalar serve path
+    st = engine.init_serve(cfg, 1, 48, jnp.float32)
+    st = engine.prefill(params, cfg, {"tokens": jnp.asarray(prompt[None])}, st)
+    ref = [int(st.last_tokens[0, 0])]
+    for _ in range(9):
+        p = params if len(ref) < n_a else p_b
+        st, t = engine.serve_step(p, cfg, st)
+        ref.append(int(t[0, 0]))
+    assert ref == req.tokens
+
+
+def test_zero_loss_across_three_swaps(setup):
+    """Traffic continues across >= 3 swaps: every submitted request completes
+    with exactly max_new tokens and the per-token version trace is monotone."""
+    cfg, params = setup
+    eng = ContinuousBatchingEngine(cfg, params, slots=2, max_len=32)
+    rids = [eng.submit(p, 8) for p in _prompts(cfg, 6, 8, seed=7)]
+    swaps = 0
+    while eng.n_active or eng.n_queued:
+        eng.step()
+        if swaps < 3 and eng.decode_steps % 3 == 0 and eng.decode_steps > 0:
+            eng.swap_params(jax.tree.map(lambda a: a * 0.99, eng.params))
+            swaps += 1
+    assert swaps == 3 and eng.swaps == 3
+    spanning = 0
+    for rid in rids:
+        req = eng.result(rid)
+        assert len(req.tokens) == 8, "request dropped tokens across a swap"
+        assert req.versions == sorted(req.versions), "non-monotone versions"
+        spanning += len(set(req.versions)) > 1
+    assert spanning >= 1
+
+
+def test_engine_validates_pool_and_monotone_versions(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="bad pool"):
+        ContinuousBatchingEngine(cfg, params, slots=0)
+    eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=16)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(np.arange(10), 8)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(np.zeros((0,)), 4)
+    eng.swap_params(params, version=3)
+    with pytest.raises(ValueError, match="non-monotone"):
+        eng.swap_params(params, version=3)
+
+
+def test_encdec_family_rejected():
+    cfg = reduced(get_config("seamless-m4t-medium"))
+    with pytest.raises(NotImplementedError, match="decoder-only"):
+        ContinuousBatchingEngine(cfg, params=None)
+
+
+# ---------------------------------------------------------------------------
+# SnapshotPublisher
+# ---------------------------------------------------------------------------
+
+def test_publisher_versions_monotone_and_double_buffered():
+    pub = SnapshotPublisher(overhead_budget=0.0)  # ungoverned
+    assert pub.snapshot() is None and pub.version == 0
+    tree = {"w": jnp.arange(4.0)}
+    s1 = pub.publish(tree, 1)
+    s2 = pub.publish(jax.tree.map(lambda a: a + 1, tree), 2)
+    s3 = pub.publish(jax.tree.map(lambda a: a + 2, tree), 3)
+    assert (s1.version, s2.version, s3.version) == (1, 2, 3)
+    assert pub.snapshot() is s3
+    assert pub._back is s2  # predecessor stays live (double buffer)
+    # published leaves are fresh buffers, not aliases of the source tree
+    np.testing.assert_array_equal(np.asarray(s3.params["w"]),
+                                  np.arange(4.0) + 2)
+    assert s3.params["w"] is not tree["w"]
+
+
+def test_publisher_extract_and_staleness():
+    # extract: consensus mean over a leading node axis, weighted by a mask
+    def extract(tree, mask):
+        w = mask / jnp.sum(mask)
+        return jax.tree.map(lambda p: jnp.tensordot(w, p, axes=1), tree)
+
+    pub = SnapshotPublisher(overhead_budget=0.0, extract=extract, block=True)
+    tree = {"w": jnp.asarray([[1.0, 1.0], [3.0, 3.0], [100.0, 100.0]])}
+    mask = jnp.asarray([1.0, 1.0, 0.0])  # node 2 inactive
+    snap = pub.publish(tree, superstep=4, aux=mask)
+    np.testing.assert_allclose(np.asarray(snap.params["w"]), [2.0, 2.0])
+    st = pub.staleness(7)
+    assert st["supersteps"] == 3 and st["wall_s"] >= 0.0
+    assert pub.staleness(4)["supersteps"] == 0
+
+
+def test_publisher_budget_governor_skips_and_recovers():
+    t = [0.0]
+    pub = SnapshotPublisher(overhead_budget=0.5, clock=lambda: t[0])
+    tree = {"w": jnp.ones(2)}
+
+    def publish_at(now, step):
+        t[0] = now
+        return pub.maybe_publish(tree, step)
+
+    assert publish_at(0.0, 0) is not None  # first publish unconditional
+    cost = pub.stats.cost_ewma_s  # 0 under the fake clock
+    pub.stats.cost_ewma_s = 1.0  # pretend publishes cost 1s
+    assert publish_at(1.0, 1) is None  # 1.0 > 0.5 * 1.0 elapsed: skip
+    assert pub.stats.skipped_budget == 1
+    assert publish_at(3.0, 2) is not None  # 1.0 <= 0.5 * 3.0: allowed
+    assert pub.version == 2
+    del cost
+
+
+def test_publisher_min_interval_and_reset_stats():
+    t = [0.0]
+    pub = SnapshotPublisher(overhead_budget=0.0, min_interval_s=10.0,
+                            clock=lambda: t[0])
+    tree = {"w": jnp.ones(2)}
+    assert pub.maybe_publish(tree, 0) is not None
+    t[0] = 5.0
+    assert pub.maybe_publish(tree, 1) is None  # inside min interval
+    assert pub.stats.skipped_interval == 1
+    t[0] = 11.0
+    assert pub.maybe_publish(tree, 2) is not None
+    pub.stats.cost_ewma_s = 0.25
+    pub.reset_stats()
+    assert pub.stats.publishes == 0 and pub.stats.cost_ewma_s == 0.25
+    pub.reset_stats(keep_ewma=False)
+    assert pub.stats.cost_ewma_s is None
+
+
+def test_publisher_configure_is_idempotent():
+    first = lambda tree: tree
+    second = lambda tree: None
+    pub = SnapshotPublisher()
+    pub.configure(extract=first)
+    pub.configure(extract=second)  # ignored: an extract is already installed
+    assert pub._extract is first
+
+
+def test_engine_poll_adopts_only_newer_versions(setup):
+    cfg, params = setup
+    pub = SnapshotPublisher(overhead_budget=0.0)
+    eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=16)
+    assert not eng.poll(pub)  # nothing published yet
+    pub.publish(params, 1)
+    assert eng.poll(pub) and eng.version == 1
+    assert not eng.poll(pub)  # same version: no swap
+    assert eng.swaps == 1
