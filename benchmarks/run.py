@@ -21,17 +21,17 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset: "
                          "rates,dmb,krasulina,dsgd,consensus,kernels,pipeline,"
-                         "governor,elastic,serve,roofline")
+                         "governor,elastic,serve,checkpoint,roofline")
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: tiny shapes, no paper-regime asserts")
     ap.add_argument("--json", default="", metavar="OUT",
                     help="write rows as a JSON artifact to this path")
     args = ap.parse_args()
 
-    from benchmarks import (bench_consensus, bench_dmb, bench_dsgd,
-                            bench_elastic, bench_governor, bench_kernels,
-                            bench_krasulina, bench_pipeline, bench_rates,
-                            bench_roofline, bench_serve, common)
+    from benchmarks import (bench_checkpoint, bench_consensus, bench_dmb,
+                            bench_dsgd, bench_elastic, bench_governor,
+                            bench_kernels, bench_krasulina, bench_pipeline,
+                            bench_rates, bench_roofline, bench_serve, common)
 
     suites = {
         "rates": bench_rates.run,       # Fig. 5
@@ -44,6 +44,7 @@ def main() -> None:
         "governor": bench_governor.run,  # adaptive-B bucket ladder
         "elastic": bench_elastic.run,   # node churn vs lockstep baseline
         "serve": bench_serve.run,       # train-to-serve closed loop
+        "checkpoint": bench_checkpoint.run,  # async snapshot / kill-resume
         "roofline": bench_roofline.run,  # deliverable (g)
     }
     chosen = [s.strip() for s in args.only.split(",") if s.strip()] or list(suites)

@@ -304,6 +304,27 @@ class PublishConfig:
 
 
 @dataclass(frozen=True)
+class SnapshotConfig:
+    """Fault-tolerance knobs for the async checkpoint subsystem
+    (`train/snapshot.py`; docs/DESIGN.md §Fault-tolerant streaming).
+
+    The snapshotter captures the full run state (TrainState + governor +
+    splitter + membership + publisher version) at superstep boundaries and
+    writes it from a background thread; `overhead_budget` caps the smoothed
+    training-thread dispatch cost as a fraction of wall time between
+    snapshots, mirroring the publisher's governor."""
+
+    enabled: bool = False
+    root: str = ""  # checkpoint directory (step_NNNNNNNN/ subdirs)
+    every: int = 1  # superstep cadence between snapshot attempts
+    keep_last: int = 3  # retention depth (newest-valid fallback on restore)
+    overhead_budget: float = 0.05  # snapshot cost / train wall-time ceiling
+    retries: int = 3  # leaf-write retry-with-backoff attempts in the writer
+    backoff_s: float = 0.05
+    block: bool = False  # wait for durability (deterministic tests only)
+
+
+@dataclass(frozen=True)
 class RunConfig:
     model: ModelConfig
     shape: ShapeConfig

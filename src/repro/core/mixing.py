@@ -137,6 +137,14 @@ class Membership:
     def is_full(self) -> bool:
         return all(self.active)
 
+    def to_json(self) -> dict:
+        """JSON form for checkpoint manifests (train.snapshot)."""
+        return {"n": self.n, "active": [bool(a) for a in self.active]}
+
+    @classmethod
+    def from_json(cls, state: dict) -> "Membership":
+        return cls(int(state["n"]), tuple(bool(a) for a in state["active"]))
+
 
 def masked_schedule(topology: str, membership: Membership,
                     self_weight: float = 0.0) -> Schedule:

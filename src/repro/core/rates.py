@@ -68,6 +68,24 @@ class Plan:
     def n_active(self) -> Optional[int]:
         return None if self.membership is None else self.membership.n_active
 
+    def to_json(self) -> dict:
+        """JSON form for checkpoint manifests (train.snapshot): everything a
+        resumed driver needs to adopt the exact plan, membership included."""
+        return {"B": self.B, "mu": self.mu, "R": self.R, "Re": self.Re,
+                "regime": self.regime,
+                "membership": (None if self.membership is None
+                               else self.membership.to_json())}
+
+    @classmethod
+    def from_json(cls, state: dict) -> "Plan":
+        mem = state.get("membership")
+        if mem is not None:
+            from repro.core.mixing import Membership
+            mem = Membership.from_json(mem)
+        return cls(B=int(state["B"]), mu=int(state["mu"]), R=int(state["R"]),
+                   Re=float(state["Re"]), regime=state["regime"],
+                   membership=mem)
+
 
 def plan(stream: StreamConfig, N: int, R: int, *, B: Optional[int] = None,
          horizon_samples: Optional[float] = None) -> Plan:
@@ -256,6 +274,24 @@ class RoundTimeEstimator:
             return
         self.observe(B * self.N / n_active, round_s)
 
+    def state_dict(self) -> dict:
+        """JSON-serializable snapshot of the fit: the observation window as
+        [[B, round_s], ...] plus the dims it was built for (checked on load
+        so a checkpoint cannot silently feed a differently-shaped fit)."""
+        return {"N": self.N, "R": self.R,
+                "window": self._obs.maxlen,
+                "obs": [[float(b), float(t)] for b, t in self._obs]}
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore the observation window exactly — the resumed estimator
+        produces bit-identical estimates to the uninterrupted one."""
+        if (state["N"], state["R"]) != (self.N, self.R):
+            raise ValueError(
+                f"estimator snapshot is for N={state['N']} R={state['R']}, "
+                f"but this estimator has N={self.N} R={self.R}")
+        self._obs = deque(((b, t) for b, t in state["obs"]),
+                          maxlen=state.get("window", self._obs.maxlen))
+
     def estimate(self) -> Optional[RateEstimate]:
         n = len(self._obs)
         if n < 3 or len({b for b, _ in self._obs}) < 2:
@@ -288,6 +324,13 @@ class BucketHysteresis:
         self.patience = patience
         self._pending: Optional[int] = None
         self._streak = 0
+
+    def state_dict(self) -> dict:
+        return {"pending": self._pending, "streak": self._streak}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._pending = state["pending"]
+        self._streak = int(state["streak"])
 
     def step(self, current_B: int, target_B: int) -> int:
         """Returns the bucket to adopt now: `target_B` once confirmed, else
@@ -335,6 +378,17 @@ class PerNodeRoundTime:
             prev = self._ewma[i]
             self._ewma[i] = t if prev is None else (
                 self.alpha * t + (1.0 - self.alpha) * prev)
+
+    def state_dict(self) -> dict:
+        return {"n": self.n, "alpha": self.alpha,
+                "ewma": [None if v is None else float(v)
+                         for v in self._ewma]}
+
+    def load_state_dict(self, state: dict) -> None:
+        if state["n"] != self.n:
+            raise ValueError(f"EWMA snapshot is for n={state['n']}, "
+                             f"but this tracker has n={self.n}")
+        self._ewma = list(state["ewma"])
 
     def value(self, node: int) -> Optional[float]:
         return self._ewma[node]
@@ -397,6 +451,27 @@ class StragglerPolicy:
         self.times = PerNodeRoundTime(n, alpha=alpha)
         self._hyst = [BucketHysteresis(patience) for _ in range(n)]
         self._kept = [True] * n  # straggler verdict per node (debounced)
+
+    def state_dict(self) -> dict:
+        """JSON-serializable snapshot of everything the policy accumulates:
+        per-node EWMAs, debounce streaks, and the kept/evicted verdicts. The
+        policy's *parameters* (mode, factors, patience) come from config and
+        are echoed only for a consistency check on load."""
+        return {"n": self.n, "mode": self.mode,
+                "times": self.times.state_dict(),
+                "hyst": [h.state_dict() for h in self._hyst],
+                "kept": [bool(k) for k in self._kept]}
+
+    def load_state_dict(self, state: dict) -> None:
+        if (state["n"], state["mode"]) != (self.n, self.mode):
+            raise ValueError(
+                f"straggler snapshot is for n={state['n']} "
+                f"mode={state['mode']!r}, but this policy has n={self.n} "
+                f"mode={self.mode!r}")
+        self.times.load_state_dict(state["times"])
+        for h, hs in zip(self._hyst, state["hyst"]):
+            h.load_state_dict(hs)
+        self._kept = [bool(k) for k in state["kept"]]
 
     def _too_slow(self, node: int, cohort_ids) -> bool:
         t = self.times.value(node)

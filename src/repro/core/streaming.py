@@ -106,6 +106,42 @@ class GovernedPlanMixin:
             self.plan = new
             return new
 
+    def splitter_state(self) -> dict:
+        """JSON-serializable snapshot of the splitter: the t' counter quad,
+        the PRNG's exact bit-generator state, and the live plan
+        (docs/DESIGN.md §Fault-tolerant streaming).
+
+        Called from the producer thread right after a superstep is dealt
+        (the prefetcher's `meta` hook), the snapshot pins the stream position
+        of that superstep's last sample — restoring it re-deals every sample
+        after that point identically, which is how staged-but-unconsumed
+        supersteps lost in a crash are regenerated rather than skipped. The
+        stream itself cannot be replayed; only the synthesis position can."""
+        with self._plan_lock:
+            return {"counters": [int(self.samples_arrived),
+                                 int(self.samples_consumed),
+                                 int(self.samples_discarded),
+                                 int(self.rounds)],
+                    "rng": self._rng.bit_generator.state,
+                    "plan": self.plan.to_json()}
+
+    def load_splitter_state(self, state: dict, *,
+                            plan: Optional[Plan] = None) -> None:
+        """Restore a `splitter_state` snapshot: counters, PRNG position, and
+        the live plan (override with `plan` to adopt the consumer-side
+        post-replan plan instead of the one the snapshot's producer saw).
+        The ladder is not part of the snapshot — hosts re-derive it from
+        config and re-adopt before restoring, so the restored plan is never
+        re-snapped here."""
+        with self._plan_lock:
+            (self.samples_arrived, self.samples_consumed,
+             self.samples_discarded, self.rounds) = (
+                int(x) for x in state["counters"])
+            self._rng.bit_generator.state = state["rng"]
+            p = plan if plan is not None else Plan.from_json(state["plan"])
+            self.plan = p
+            self._last_superstep_plan = p
+
     def _latch_plan(self) -> Plan:
         with self._plan_lock:
             return self.plan

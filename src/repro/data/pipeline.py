@@ -18,6 +18,13 @@ Two streaming-engine extensions (see train.driver for the full picture):
   Each staged item carries a counter snapshot so consumer-visible accounting
   (`samples_arrived`, `samples_discarded`, `rounds`) stays coherent with the
   batch being trained on, not with how far ahead the producer has run.
+* **Checkpoint continuity** — the splitter's exact stream position
+  (counter quad + PRNG bit-generator state + live plan) is exported by
+  `splitter_state()` / restored by `load_splitter_state()` (both from
+  `GovernedPlanMixin`). `train.snapshot` threads that snapshot through the
+  prefetch ring via the `meta` hook, so a resumed run re-deals the
+  staged-but-unconsumed supersteps a crash threw away instead of skipping
+  those stream samples (docs/DESIGN.md §Fault-tolerant streaming).
 * **Adaptive B** — `update_plan` may move B between the buckets of an adopted
   `core.rates.BucketLadder` mid-stream
   (docs/DESIGN.md §Adaptive batch buckets). The plan is latched once per

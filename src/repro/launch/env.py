@@ -105,6 +105,49 @@ def wants_tuning(argv: Optional[List[str]] = None) -> bool:
     return "--no-env-tuning" not in argv
 
 
+# ---------------------------------------------------------------------------
+# Persistent compilation cache (docs/DESIGN.md §Fault-tolerant streaming)
+# ---------------------------------------------------------------------------
+
+def compilation_cache_env(cache_dir: str) -> Dict[str, str]:
+    """Env mutations enabling jax's persistent compilation cache at
+    `cache_dir` (pure; must land before `import jax`). Opt-in: a restarted
+    run re-traces every (B, cohort) bucket-ladder signature, and without the
+    cache each retrace pays a cold XLA compile — with it, restart cost is a
+    disk hit per signature. Thresholds are zeroed so even the small
+    supersteps of tests/benchmarks are cached (jax's defaults skip
+    sub-second compiles)."""
+    return {"JAX_COMPILATION_CACHE_DIR": cache_dir,
+            "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS": "0",
+            "JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES": "-1"}
+
+
+def compilation_cache_dir_from_argv(argv: Optional[List[str]] = None
+                                    ) -> Optional[str]:
+    """Peek `--compilation-cache-dir PATH` (or `=PATH`) from raw argv —
+    pre-argparse, because the cache location must be in the environment
+    before the jax import that argparse-time application would be too late
+    for."""
+    argv = sys.argv if argv is None else argv
+    for i, a in enumerate(argv):
+        if a == "--compilation-cache-dir" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--compilation-cache-dir="):
+            return a.split("=", 1)[1]
+    return None
+
+
+def enable_compilation_cache(cache_dir: str) -> None:
+    """In-process variant for code running after `import jax` (tests, the
+    kill-and-resume workers): point the live jax config at `cache_dir` with
+    the same zeroed thresholds."""
+    import jax
+
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+
+
 def apply(env: Optional[Dict[str, str]] = None, *, echo: bool = False) -> Dict[str, str]:
     """Apply `tuned_env` to os.environ (or the given dict, for tests).
     Returns the mutations that were applied."""
@@ -126,7 +169,16 @@ def apply(env: Optional[Dict[str, str]] = None, *, echo: bool = False) -> Dict[s
 
 def apply_from_argv(argv: Optional[List[str]] = None) -> Dict[str, str]:
     """What launcher modules call at import time, before `import jax`:
-    apply tuning unless `--no-env-tuning` is on the command line."""
-    if not wants_tuning(argv):
-        return {}
-    return apply(echo=False)
+    apply tuning unless `--no-env-tuning` is on the command line, and wire
+    the persistent compilation cache when `--compilation-cache-dir` is.
+    The cache is independent of the tuning escape hatch — it is opt-in via
+    its own flag, not perf hygiene."""
+    changes: Dict[str, str] = {}
+    cache_dir = compilation_cache_dir_from_argv(argv)
+    if cache_dir is not None:
+        cc = compilation_cache_env(cache_dir)
+        os.environ.update(cc)
+        changes.update(cc)
+    if wants_tuning(argv):
+        changes.update(apply(echo=False))
+    return changes

@@ -55,7 +55,26 @@ def main():
     ap.add_argument("--processing-rate", type=float, default=0.0)
     ap.add_argument("--comms-rate", type=float, default=0.0)
     ap.add_argument("--dtype", default="float32")
-    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--checkpoint", default="",
+                    help="checkpoint directory; with --checkpoint-every 0 a "
+                         "single end-of-run save, otherwise the root for "
+                         "step_NNNNNNNN/ async snapshots")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="async snapshot cadence in supersteps (0 = only the "
+                         "legacy end-of-run save); requires --checkpoint")
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="checkpoints retained under the root (the newest "
+                         "VALID one is never pruned)")
+    ap.add_argument("--checkpoint-budget", type=float, default=0.05,
+                    help="snapshot-governor overhead budget: max fraction of "
+                         "train wall time spent dispatching snapshot copies")
+    ap.add_argument("--resume", default="",
+                    help="resume from this checkpoint root (newest valid "
+                         "step) or a specific step_NNNNNNNN directory")
+    ap.add_argument("--compilation-cache-dir", default="",
+                    help="persistent XLA compilation cache directory so a "
+                         "resumed run skips recompiles (launch/env.py); "
+                         "applied at import time, declared here for --help")
     ap.add_argument("--log-every", type=int, default=1,
                     help="log every this many supersteps")
     ap.add_argument("--superstep", type=int, default=8,
@@ -151,6 +170,17 @@ def main():
             overhead_budget=pub_cfg.overhead_budget,
             min_interval_s=pub_cfg.min_interval_s, block=pub_cfg.block)
 
+    snapshotter = None
+    if args.checkpoint_every > 0:
+        if not args.checkpoint:
+            ap.error("--checkpoint-every needs --checkpoint DIR as the root")
+        from repro.train.snapshot import RunSnapshotter
+
+        snapshotter = RunSnapshotter(args.checkpoint,
+                                     every=args.checkpoint_every,
+                                     keep_last=args.keep_last,
+                                     overhead_budget=args.checkpoint_budget)
+
     with mesh_rules(mesh, rules):
         state = init_state(run, jax.random.PRNGKey(run.seed))
         if decentralized:
@@ -158,8 +188,12 @@ def main():
         with StreamingDriver(run, mesh, state, sample_fn, engine=engine,
                              batch=args.batch, faults=faults,
                              horizon=args.horizon or None,
-                             publisher=publisher) as driver:
+                             publisher=publisher, snapshotter=snapshotter,
+                             resume_from=args.resume or None) as driver:
             plan = driver.pipeline.plan
+            if driver.resumed_from:
+                print(f"resumed: {driver.resumed_from} "
+                      f"(superstep {driver._supersteps_done})")
             print(f"plan: B={plan.B} mu={plan.mu} regime={plan.regime} "
                   f"nodes={n_nodes} K={engine.superstep} "
                   f"prefetch={engine.prefetch_depth} "
@@ -176,7 +210,15 @@ def main():
               f"total_cost={st.total_cost_s:.3f}s "
               f"staleness={stale['supersteps']} supersteps "
               f"/ {stale['wall_s']:.2f}s")
-    if args.checkpoint:
+    if snapshotter is not None:
+        st = snapshotter.stats
+        print(f"snapshotter: saves={st.saves} "
+              f"skipped(cadence={st.skipped_cadence} "
+              f"budget={st.skipped_budget} busy={st.skipped_busy}) "
+              f"failures={st.failures} "
+              f"cost_ewma={st.cost_ewma_s * 1e3:.2f}ms "
+              f"total_cost={st.total_cost_s:.3f}s -> {args.checkpoint}")
+    elif args.checkpoint:
         ckpt.save(args.checkpoint, state, step=supersteps * engine.superstep,
                   meta={"arch": args.arch, "reduced": args.reduced})
         print(f"checkpoint -> {args.checkpoint}")

@@ -165,6 +165,29 @@ class SnapshotPublisher:
                 return None
         return self.publish(tree, superstep, aux=aux)
 
+    # ------------------------------------------------------------ persistence
+
+    def state_dict(self) -> dict:
+        """JSON-serializable continuity state for checkpoint/restore
+        (train.snapshot): the version counter and cost EWMA. The snapshot
+        buffers themselves are NOT persisted — served params are re-derived
+        from the restored TrainState at the next publish; what must survive
+        a restart is version monotonicity, so a subscriber that saw version
+        v before the crash can never observe a *different* params tree
+        labelled <= v after it."""
+        st = self.stats
+        return {"version": self._version, "cost_ewma_s": st.cost_ewma_s}
+
+    def load_state_dict(self, state: dict) -> None:
+        with self._lock:
+            if state["version"] < self._version:
+                raise ValueError(
+                    f"publisher version would move backwards: "
+                    f"{self._version} -> {state['version']}")
+            self._version = int(state["version"])
+        if state.get("cost_ewma_s") is not None:
+            self.stats.cost_ewma_s = float(state["cost_ewma_s"])
+
     # ---------------------------------------------------------------- readers
 
     def snapshot(self) -> Optional[Snapshot]:

@@ -1,16 +1,25 @@
 """Minimal dependency-free checkpointing: pytree -> a directory with one .npy
-per leaf plus a JSON manifest (paths, dtypes, optimizer step, RunConfig echo).
+per leaf plus a JSON manifest (paths, dtypes, CRC32 checksums, optimizer step,
+RunConfig echo).
 
 Arrays are fetched with jax.device_get (works for sharded arrays on any
 addressable mesh) and restored with the caller-provided sharding function, so
 restore works across mesh changes — the manifest stores only logical shapes.
+
+On top of the single-directory save/restore, this module provides the
+multi-checkpoint layout the async snapshot subsystem (`train.snapshot`) uses:
+step-numbered subdirectories (`step_00000042/`), `newest_valid` scanning that
+skips torn or corrupt checkpoints, and `prune` retention of the last k.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
-from typing import Any, Callable, Optional
+import re
+import time
+import zlib
+from typing import Any, Callable, List, Optional
 
 import jax
 import numpy as np
@@ -18,6 +27,7 @@ import numpy as np
 Tree = Any
 
 _SEP = "::"
+_STEP_DIR_RE = re.compile(r"^step_(\d{8})$")
 
 
 def _flatten(tree: Tree):
@@ -29,42 +39,122 @@ def _flatten(tree: Tree):
     return out
 
 
-def save(path: str, tree: Tree, *, step: int = 0, meta: Optional[dict] = None) -> None:
+def _crc32(arr: np.ndarray) -> int:
+    """Content checksum of a leaf: CRC32 over the raw array bytes (C order).
+    Computed on the exact bytes handed to np.save, so a torn write, a
+    bit-rotted block, or a truncated file fails verification on restore."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _save_leaf(path: str, arr: np.ndarray, *, retries: int = 0,
+               backoff_s: float = 0.05) -> None:
+    """np.save with retry-with-backoff for transient OSErrors (full disk
+    being drained, an NFS blip): up to `retries` retries with exponential
+    backoff, then the last error propagates. A partial file from a failed
+    attempt is overwritten by the retry (np.save truncates)."""
+    attempt = 0
+    while True:
+        try:
+            np.save(path, arr)
+            return
+        except OSError:
+            if attempt >= retries:
+                raise
+            time.sleep(backoff_s * (2 ** attempt))
+            attempt += 1
+
+
+def _live_files(path: str) -> set:
+    """Leaf files the current durable manifest references (empty if none).
+    A re-save must never write over these: they back the checkpoint that
+    stays restorable if the new save crashes partway."""
+    try:
+        return {ent["file"] for ent in load_manifest(path)["leaves"].values()}
+    except Exception:
+        return set()
+
+
+def save(path: str, tree: Tree, *, step: int = 0, meta: Optional[dict] = None,
+         retries: int = 0, backoff_s: float = 0.05) -> None:
     """Crash-safe save: every leaf .npy is written BEFORE the manifest, and
     the manifest lands via temp-file + atomic `os.replace` — so a checkpoint
     directory either has a manifest whose leaves are all complete on disk, or
-    no (new) manifest at all. A crash mid-save can leave orphan leaf files
-    but never a manifest pointing at missing/truncated arrays, and an
-    overwrite of an existing checkpoint keeps the old manifest valid until
-    the new one is fully durable."""
+    no (new) manifest at all. Leaf files are step-versioned and never reuse a
+    name the live manifest references, so an in-place re-save cannot clobber
+    the previous checkpoint's data mid-write: the manifest replace atomically
+    switches which leaf set is live. A crash mid-save can leave orphan leaf
+    files but never a manifest pointing at missing/torn arrays. Once the new
+    manifest is durable, leaf files it does not reference (this save's
+    predecessors, or debris from a crashed save) are deleted.
+
+    Each leaf entry carries a CRC32 of the array bytes; `restore` verifies
+    them so silent corruption fails loudly with the leaf name. Transient
+    leaf-write OSErrors are retried `retries` times with exponential
+    backoff (`_save_leaf`)."""
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
+    live = _live_files(path)
     manifest = {"step": step, "meta": meta or {}, "leaves": {}}
     for key, leaf in flat.items():
         arr = np.asarray(jax.device_get(leaf))
-        fname = key.replace("/", "_") + ".npy"
-        np.save(os.path.join(path, fname), arr)
+        base = key.replace("/", "_") + f".{step:08d}"
+        fname = base + ".npy"
+        g = 0
+        while fname in live:
+            g += 1
+            fname = f"{base}.g{g}.npy"
+        _save_leaf(os.path.join(path, fname), arr, retries=retries,
+                   backoff_s=backoff_s)
         manifest["leaves"][key] = {"file": fname, "dtype": str(arr.dtype),
-                                   "shape": list(arr.shape)}
+                                   "shape": list(arr.shape),
+                                   "crc32": _crc32(arr)}
     tmp = os.path.join(path, "manifest.json.tmp")
     with open(tmp, "w") as f:
         json.dump(manifest, f, indent=1)
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, os.path.join(path, "manifest.json"))
+    _clean_orphans(path, manifest)
 
 
-def restore(path: str, like: Tree, *, put: Optional[Callable] = None) -> Tree:
+def _clean_orphans(path: str, manifest: dict) -> None:
+    """Delete leaf files the durable manifest does not reference — the
+    debris a previous crashed save documented itself as leaving. Runs only
+    after a successful manifest replace, so everything removed is provably
+    unreachable; removal errors are ignored (orphans are harmless, just
+    disk)."""
+    referenced = {ent["file"] for ent in manifest["leaves"].values()}
+    try:
+        entries = os.listdir(path)
+    except OSError:
+        return
+    for fname in entries:
+        if fname.endswith(".npy") and fname not in referenced:
+            try:
+                os.remove(os.path.join(path, fname))
+            except OSError:
+                pass
+
+
+def load_manifest(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def restore(path: str, like: Tree, *, put: Optional[Callable] = None,
+            verify: bool = True) -> Tree:
     """Restore into the structure of `like`. `put(key, np_array)` may place each
     leaf onto devices (e.g. with a NamedSharding); default: jnp.asarray.
 
     A structure mismatch between `like` and the checkpoint raises ValueError
     naming the missing and extra leaf keys — a renamed optimizer field or a
-    stale checkpoint fails with the actual diff, not a bare KeyError."""
+    stale checkpoint fails with the actual diff, not a bare KeyError. With
+    `verify` (default), each loaded leaf is checked against its manifest
+    CRC32: a torn or bit-rotted file raises ValueError naming the leaf
+    instead of silently loading garbage."""
     import jax.numpy as jnp
 
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = load_manifest(path)
     flat_like = _flatten(like)
     want, have = set(flat_like), set(manifest["leaves"])
     if want != have:
@@ -77,7 +167,17 @@ def restore(path: str, like: Tree, *, put: Optional[Callable] = None) -> Tree:
     leaves_out = {}
     for key in flat_like:
         ent = manifest["leaves"][key]
-        arr = np.load(os.path.join(path, ent["file"]))
+        fpath = os.path.join(path, ent["file"])
+        try:
+            arr = np.load(fpath)
+        except Exception as e:
+            raise ValueError(
+                f"checkpoint leaf {key!r} ({ent['file']}) at {path!r} is "
+                f"unreadable: {e}") from e
+        if verify and "crc32" in ent and _crc32(arr) != ent["crc32"]:
+            raise ValueError(
+                f"checkpoint leaf {key!r} ({ent['file']}) at {path!r} failed "
+                f"its CRC32 check: the file is torn or corrupt")
         leaves_out[key] = put(key, arr) if put else jnp.asarray(arr)
     # rebuild in the order of `like`'s flatten
     paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
@@ -87,5 +187,81 @@ def restore(path: str, like: Tree, *, put: Optional[Callable] = None) -> Tree:
 
 
 def loaded_step(path: str) -> int:
-    with open(os.path.join(path, "manifest.json")) as f:
-        return json.load(f)["step"]
+    return load_manifest(path)["step"]
+
+
+# ---------------------------------------------------------------------------
+# Multi-checkpoint layout (used by train.snapshot)
+# ---------------------------------------------------------------------------
+
+
+def step_dir(root: str, step: int) -> str:
+    """The step-numbered checkpoint subdirectory for a snapshot at `step`."""
+    return os.path.join(root, f"step_{step:08d}")
+
+
+def list_steps(root: str) -> List[int]:
+    """Ascending snapshot steps present under `root` (manifest or not)."""
+    try:
+        entries = os.listdir(root)
+    except OSError:
+        return []
+    steps = []
+    for e in entries:
+        m = _STEP_DIR_RE.match(e)
+        if m and os.path.isdir(os.path.join(root, e)):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def is_valid(path: str) -> bool:
+    """A checkpoint directory is valid iff its manifest parses and every
+    referenced leaf file passes its CRC32 check — i.e. `restore` would
+    succeed structurally. Cheap enough to scan at resume time (one read per
+    leaf) and strict enough that a SIGKILL mid-save can never be selected."""
+    try:
+        manifest = load_manifest(path)
+        for key, ent in manifest["leaves"].items():
+            arr = np.load(os.path.join(path, ent["file"]))
+            if "crc32" in ent and _crc32(arr) != ent["crc32"]:
+                return False
+    except Exception:
+        return False
+    return True
+
+
+def newest_valid(root: str) -> Optional[str]:
+    """The newest *valid* checkpoint directory under `root`, or None. A torn
+    newest checkpoint (killed mid-save: missing manifest, or corrupt leaves)
+    falls back to the next-newest valid one — resume never loads garbage."""
+    for step in reversed(list_steps(root)):
+        path = step_dir(root, step)
+        if is_valid(path):
+            return path
+    return None
+
+
+def prune(root: str, keep_last: int) -> List[str]:
+    """Retention: delete all but the newest `keep_last` step directories.
+    Returns the removed paths. Never removes the newest valid checkpoint
+    (even if older than `keep_last` invalid ones sit above it)."""
+    import shutil
+
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1: {keep_last}")
+    steps = list_steps(root)
+    if len(steps) <= keep_last:
+        return []
+    keep = set(steps[-keep_last:])
+    newest = newest_valid(root)
+    removed = []
+    for step in steps:
+        path = step_dir(root, step)
+        if step in keep or path == newest:
+            continue
+        try:
+            shutil.rmtree(path)
+            removed.append(path)
+        except OSError:
+            pass
+    return removed

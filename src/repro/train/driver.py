@@ -144,7 +144,9 @@ class StreamingDriver:
                  n_nodes: Optional[int] = None, seed: int = 0,
                  clock: Callable[[], float] = time.perf_counter,
                  faults: Optional[FaultSchedule] = None,
-                 publisher: Optional[Any] = None):
+                 publisher: Optional[Any] = None,
+                 snapshotter: Optional[Any] = None,
+                 resume_from: Optional[str] = None):
         if engine.superstep < 1:
             raise ValueError("superstep K must be >= 1")
         if mesh is None and n_nodes is None:
@@ -247,6 +249,18 @@ class StreamingDriver:
                 self.n_nodes if self.decentralized else None))
         self._pub_masks: Dict[Optional[Membership], Optional[jax.Array]] = {}
         self.history: List[Dict[str, Any]] = []
+        # fault tolerance (docs/DESIGN.md §Fault-tolerant streaming): the
+        # snapshotter runs at the superstep boundary, after publication —
+        # same barrier, same async-dispatch discipline, its own cost governor.
+        # `_last_splitter_state` is the splitter snapshot that rode the
+        # prefetch `meta` with the superstep just consumed: restoring it
+        # re-deals the staged-but-unconsumed supersteps a crash threw away.
+        self._snapshotter = snapshotter
+        self._last_splitter_state: Optional[dict] = None
+        self.resumed_from: Optional[str] = None
+        if resume_from is not None:
+            from repro.train import snapshot as _snapshot
+            self.resumed_from = _snapshot.restore_driver(self, resume_from)
 
     def _make_ladder(self, gov: GovernorConfig) -> rates.BucketLadder:
         """Resolve the governor's B ladder: explicit buckets (clipped to the
@@ -364,7 +378,11 @@ class StreamingDriver:
             self._prefetcher = DevicePrefetcher(
                 self._host_superstep, stage=self._stage,
                 counters=self.pipeline.counters,
-                meta=lambda: self.pipeline.last_superstep_plan,
+                # the meta snapshot carries BOTH the plan that dealt the
+                # superstep and the splitter's post-deal stream position, so
+                # the consumer-side checkpoint pins exactly what it consumed
+                meta=lambda: (self.pipeline.last_superstep_plan,
+                              self.pipeline.splitter_state()),
                 depth=self.engine.prefetch_depth)
         source = self._prefetcher
         for i in range(supersteps):
@@ -381,11 +399,14 @@ class StreamingDriver:
             if source is not None:
                 staged = next(source)
                 counters = source.counters
-                used_plan = source.meta
+                used_plan, split_state = source.meta or (None, None)
             else:
                 staged = self._stage(self._host_superstep())
                 counters = self.pipeline.counters()
                 used_plan = self.pipeline.last_superstep_plan
+                split_state = self.pipeline.splitter_state()
+            if split_state is not None:
+                self._last_splitter_state = split_state
             # after a bucket or membership switch the ring may still drain
             # supersteps dealt at the old width/cohort: each batch runs
             # through the compiled executable of the (bucket, cohort) that
@@ -409,6 +430,12 @@ class StreamingDriver:
                 snap = self._publisher.maybe_publish(
                     self.state, self._supersteps_done, aux=self._publish_aux())
                 rec["published_version"] = snap.version if snap else None
+            if self._snapshotter is not None:
+                # superstep boundary, after publication: the copy dispatch is
+                # async and the writer thread owns all disk I/O — the
+                # snapshotter's cost governor bounds what lands here
+                ck = self._snapshotter.maybe_snapshot(self)
+                rec["checkpoint"] = ck["step"] if ck else None
             if log_fn and (i % log_every == 0 or i == supersteps - 1):
                 log_fn(rec)
         return self.state, self.history
@@ -493,10 +520,13 @@ class StreamingDriver:
         self.state = jax.tree.map(fix, self.state)
 
     def close(self) -> None:
-        """Stop the prefetch thread (idempotent)."""
+        """Stop the prefetch thread and flush/stop the snapshot writer
+        (idempotent)."""
         if self._prefetcher is not None:
             self._prefetcher.close()
             self._prefetcher = None
+        if self._snapshotter is not None:
+            self._snapshotter.close()
 
     def __enter__(self) -> "StreamingDriver":
         return self

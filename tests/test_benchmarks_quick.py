@@ -31,7 +31,7 @@ def test_run_quick_all_suites(tmp_path):
                    "consensus/quant_accuracy/", "kernel/", "pipeline/",
                    "krasulina/fused/", "krasulina/gossip/",
                    "governor/cold_switch/", "governor/warm_switch/",
-                   "elastic/throughput/", "serve/"):
+                   "elastic/throughput/", "serve/", "checkpoint/"):
         assert any(n.startswith(prefix) for n in names), (prefix, names)
     # the engine rows carry machine-readable throughput
     pipe = [r for r in artifact["rows"] if r["name"].startswith("pipeline/")]
@@ -83,3 +83,12 @@ def test_run_quick_all_suites(tmp_path):
     st = [r for r in artifact["rows"] if r["name"] == "serve/staleness"]
     assert st and field(st[0], "max_supersteps") <= field(st[0],
                                                           "max_publish_gap")
+    # fault-tolerance contract rows (PR 8): async snapshot dispatch stays
+    # under 5% of loop wall with the writer thread owning all disk I/O, and
+    # a driver resumed from the cut finishes bit-identical to the
+    # uninterrupted run
+    ck = [r for r in artifact["rows"] if r["name"] == "checkpoint/overhead"]
+    assert ck and field(ck[0], "overhead_frac") <= 0.05
+    assert field(ck[0], "failures") == 0
+    cr = [r for r in artifact["rows"] if r["name"] == "checkpoint/resume"]
+    assert cr and field(cr[0], "bit_identical") == 1

@@ -90,3 +90,95 @@ def test_save_overwrites_atomically(tmp_path):
     assert ckpt.loaded_step(path) == 2
     out = ckpt.restore(path, jax.eval_shape(lambda: {"a": jnp.zeros(2)}))
     np.testing.assert_array_equal(np.asarray(out["a"]), np.ones(2))
+
+
+def test_crc_detects_torn_leaf(tmp_path):
+    """A bit-flipped leaf file fails restore loudly, naming the leaf."""
+    import os
+
+    path = str(tmp_path / "ck6")
+    tree = {"a": jnp.arange(8.0), "nested": {"b": jnp.ones(4)}}
+    ckpt.save(path, tree)
+    fname = ckpt.load_manifest(path)["leaves"]["nested::b"]["file"]
+    fpath = os.path.join(path, fname)
+    raw = bytearray(open(fpath, "rb").read())
+    raw[-1] ^= 0xFF  # corrupt the last data byte
+    open(fpath, "wb").write(bytes(raw))
+    with pytest.raises(ValueError, match="nested::b.*CRC32"):
+        ckpt.restore(path, jax.eval_shape(lambda: tree))
+    # verify=False skips the check (explicit opt-out still loads)
+    ckpt.restore(path, jax.eval_shape(lambda: tree), verify=False)
+    assert not ckpt.is_valid(path)
+
+
+def test_successful_save_cleans_orphans(tmp_path):
+    """Leaf debris from a crashed save is removed once a later save lands a
+    durable manifest; files the manifest references survive."""
+    import os
+
+    path = str(tmp_path / "ck7")
+    ckpt.save(path, {"a": jnp.zeros(2)}, step=1)
+    orphan = os.path.join(path, "stale_leaf.00000000.npy")
+    np.save(orphan, np.zeros(3))
+    ckpt.save(path, {"a": jnp.ones(2)}, step=2)
+    assert not os.path.exists(orphan)
+    npys = [f for f in os.listdir(path) if f.endswith(".npy")]
+    assert npys == [ckpt.load_manifest(path)["leaves"]["a"]["file"]]
+    out = ckpt.restore(path, jax.eval_shape(lambda: {"a": jnp.zeros(2)}))
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.ones(2))
+
+
+def test_leaf_write_retries_transient_oserror(tmp_path, monkeypatch):
+    """Two transient OSErrors then success: save completes; with retries
+    exhausted the last error propagates."""
+    import numpy as _np
+
+    fails = {"n": 2}
+    real_save = _np.save
+
+    def flaky_save(f, arr, **kw):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("NFS blip")
+        return real_save(f, arr, **kw)
+
+    monkeypatch.setattr(_np, "save", flaky_save)
+    path = str(tmp_path / "ck8")
+    ckpt.save(path, {"a": jnp.ones(2)}, retries=3, backoff_s=0.001)
+    assert ckpt.is_valid(path)
+
+    fails["n"] = 99
+    with pytest.raises(OSError):
+        ckpt.save(str(tmp_path / "ck9"), {"a": jnp.ones(2)}, retries=2,
+                  backoff_s=0.001)
+
+
+def test_newest_valid_skips_torn_checkpoint(tmp_path):
+    """A step-layout root with a torn newest checkpoint resumes from the
+    next-newest valid one; prune keeps the last k."""
+    import os
+
+    root = str(tmp_path / "run")
+    tree = {"a": jnp.zeros(2)}
+    for step in (1, 2, 3):
+        ckpt.save(ckpt.step_dir(root, step), {"a": jnp.full(2, float(step))},
+                  step=step)
+    assert ckpt.list_steps(root) == [1, 2, 3]
+    assert ckpt.newest_valid(root) == ckpt.step_dir(root, 3)
+
+    # tear step 3 two ways: corrupt a leaf, then drop the manifest entirely
+    p3 = ckpt.step_dir(root, 3)
+    fname = ckpt.load_manifest(p3)["leaves"]["a"]["file"]
+    open(os.path.join(p3, fname), "wb").write(b"not an npy")
+    assert ckpt.newest_valid(root) == ckpt.step_dir(root, 2)
+    os.remove(os.path.join(p3, "manifest.json"))
+    assert ckpt.newest_valid(root) == ckpt.step_dir(root, 2)
+
+    # retention: keep_last=1 keeps torn step 3 (newest dir) AND the newest
+    # valid checkpoint (step 2); only step 1 goes
+    removed = ckpt.prune(root, keep_last=1)
+    assert removed == [ckpt.step_dir(root, 1)]
+    assert ckpt.list_steps(root) == [2, 3]
+    assert ckpt.newest_valid(root) == ckpt.step_dir(root, 2)
+    with pytest.raises(ValueError):
+        ckpt.prune(root, keep_last=0)

@@ -53,6 +53,28 @@ def test_wants_tuning_escape_hatch():
     assert env.apply_from_argv(["prog", "--no-env-tuning"]) == {}
 
 
+def test_compilation_cache_argv_peek_and_env():
+    peek = env.compilation_cache_dir_from_argv
+    assert peek(["prog", "--arch", "x"]) is None
+    assert peek(["prog", "--compilation-cache-dir", "/tmp/cc"]) == "/tmp/cc"
+    assert peek(["prog", "--compilation-cache-dir=/tmp/cc2"]) == "/tmp/cc2"
+    assert peek(["prog", "--compilation-cache-dir"]) is None  # dangling flag
+    cc = env.compilation_cache_env("/tmp/cc")
+    assert cc["JAX_COMPILATION_CACHE_DIR"] == "/tmp/cc"
+    # thresholds zeroed so sub-second test compiles still hit the cache
+    assert cc["JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS"] == "0"
+    assert cc["JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES"] == "-1"
+
+
+def test_compilation_cache_is_independent_of_tuning_escape_hatch(monkeypatch):
+    for k in env.compilation_cache_env("/x"):
+        monkeypatch.delenv(k, raising=False)
+    changes = env.apply_from_argv(
+        ["prog", "--no-env-tuning", "--compilation-cache-dir", "/tmp/cc3"])
+    assert changes == env.compilation_cache_env("/tmp/cc3")
+    assert os.environ["JAX_COMPILATION_CACHE_DIR"] == "/tmp/cc3"
+
+
 def test_apply_mutates_target_and_reports_changes():
     target = {}
     changes = env.apply(target)
