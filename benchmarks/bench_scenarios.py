@@ -1,0 +1,256 @@
+"""Scenario-matrix benchmark (docs/DESIGN.md §Scenario harness): excess risk
+across the topology x link x stream grid the paper's assumptions span.
+
+Each cell of `core.scenarios`' 3 x 3 x 3 matrix (time-varying topology
+schedules x link loss / bandwidth caps x IID / drifting / label-skewed
+streams) runs the streaming engine end-to-end — governed splitter, K-round
+superstep, `ScheduledMixOp` time-varying consensus — at a matched sample
+budget and seed, so the only thing that varies between cells is the scenario.
+PCA cells run gossip Krasulina (excess risk via `core.problems.
+pca_excess_risk` against the stream's covariance at the final drift clock);
+logreg cells run a gossip SGD superstep (excess risk vs the Bayes separator
+on a pooled held-out draw).
+
+Rows:
+
+* matrix      -- `scenarios/matrix/<topo>/<link>/<stream>` per cell:
+                 us/round plus excess_risk / consensus_err / rounds
+* retrace     -- CONTRACT: mid-stream topology switches compile NOTHING —
+                 one jit trace for the whole time-varying run
+                 (trace-counted, not inferred)
+* tv_vs_static-- CONTRACT: the B-connected time-varying schedule stays
+                 within 2x of the static ring's excess risk at a matched
+                 budget (eq. 17 — every window of the schedule mixes)
+* lossy       -- CONTRACT: the Bernoulli-loss cell still converges
+                 (excess risk falls below its start) and is bit-deterministic
+                 across runs and prefetch depths (counter-based link RNG)
+* governor    -- CONTRACT: under a bandwidth-capped link model the
+                 estimator's R_c moves DOWN and the replanned mu moves UP
+                 vs the clean cell (eq. 4 re-inverted from measured round
+                 times; `core.rates.rate_limited` is the ground truth)
+
+All contract rows are asserted in quick AND full mode — every run here is
+deterministic (ungoverned plans, seeded samplers, counter-based link drops).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import AveragingConfig, GovernorConfig, StreamConfig
+from repro.configs.paper_pca import PCARunConfig
+from repro.core import krasulina, problems, rates, scenarios
+from repro.train.driver import EngineConfig, StreamingDriver
+
+N = 8
+B = 16
+K = 2
+SEED = 0
+
+
+def _logreg_builder(n_nodes: int, stepsize: float, mix):
+    """Gossip SGD on the logreg cells: per-node `core.problems.logistic_grad`
+    step, then the scenario's time-varying consensus operator (the carry's
+    round counter is the schedule clock, as in the Krasulina path)."""
+
+    def build(Bq: int, membership=None):
+        def superstep(state, batches):
+            def step(carry, batch):
+                w, t = carry
+                t = t + 1
+                g = jax.vmap(problems.logistic_grad)(w, batch["x"],
+                                                     batch["y"])
+                w = mix(w - stepsize * g, t=t)
+                wbar = jnp.mean(w, axis=0)
+                spread = jnp.mean(jnp.sum((w - wbar) ** 2, axis=-1))
+                return (w, t), {"metric": jnp.zeros(()),
+                                "consensus_err": spread}
+
+            return jax.lax.scan(step, state, batches)
+
+        return superstep
+
+    return build
+
+
+def _driver(scn, stream, traces, prefetch: int = 0):
+    """One scenario cell on the streaming engine: ungoverned plan (matched
+    budget, deterministic), scenario links on the driver's fault schedule
+    (link-only -> standard non-elastic path + bw/drop observability)."""
+    mix = scenarios.build_mix(scn)
+    run_cfg = PCARunConfig(pca=scenarios.PCA_CFG,
+                           averaging=scenarios.averaging_config(scn),
+                           stream=StreamConfig())
+    if stream.kind.endswith("logreg"):
+        d = scenarios.LOGREG_CFG.dim
+        inner = _logreg_builder(N, 0.2, mix)
+        state = (jnp.zeros((N, d + 1)), jnp.zeros((), jnp.int32))
+    else:
+        inner = krasulina.krasulina_superstep_builder(
+            run_cfg.averaging, N, lambda t: 10.0 / t, mix=mix)
+        w0 = jax.random.normal(jax.random.PRNGKey(SEED),
+                               (scenarios.PCA_CFG.dim,))
+        state = krasulina.init_krasulina_state(w0 / jnp.linalg.norm(w0),
+                                               run_cfg.averaging, N)
+
+    def builder(Bq, membership=None):
+        raw = inner(Bq, membership)
+
+        def counted(s, b):
+            traces.append(Bq)  # once per jit trace, not per call
+            return raw(s, b)
+
+        return counted
+
+    return StreamingDriver(
+        run_cfg, None, state, stream.sample, superstep_builder=builder,
+        n_nodes=N, batch=B, faults=scenarios.fault_schedule(scn), seed=SEED,
+        engine=EngineConfig(superstep=K, prefetch_depth=prefetch,
+                            replan_every=0, warmup_supersteps=0,
+                            warmup_per_bucket=0, governor=GovernorConfig()))
+
+
+def _excess_risk(scn, stream, driver) -> float:
+    """Cell excess risk at the final iterate (node mean)."""
+    w = np.asarray(driver.state[0]) if isinstance(driver.state, tuple) \
+        else np.asarray(driver.state.w)
+    wbar = w.mean(axis=0)
+    if stream.kind == "iid_pca":
+        return float(problems.pca_excess_risk(
+            jnp.asarray(wbar), stream.pca.cov, stream.pca.lambda1))
+    if stream.kind == "drift_pca":
+        cov = jnp.asarray(stream.drift.cov_at(driver.pipeline.samples_consumed),
+                          jnp.float32)
+        return float(problems.pca_excess_risk(jnp.asarray(wbar), cov,
+                                              stream.drift.lambda1))
+    # pooled held-out draw from the same skewed mixture: w* is its Bayes
+    # separator, so risk(w) - risk(w*) >= 0 up to sampling noise
+    batch = stream.logreg.sample(np.random.default_rng(10_000), 8192)
+    x, y = jnp.asarray(batch["x"]), jnp.asarray(batch["y"])
+    return float(problems.logistic_loss(jnp.asarray(wbar), x, y)
+                 - problems.logistic_loss(jnp.asarray(stream.logreg.w_star),
+                                          x, y))
+
+
+def _run_cell(topo: str, link: str, skey: str, steps: int,
+              prefetch: int = 0):
+    scn = scenarios.make_scenario(topo, link, skey, n_nodes=N, seed=SEED)
+    stream = scenarios.build_stream(scn)
+    traces: list = []
+    with _driver(scn, stream, traces, prefetch=prefetch) as drv:
+        t0 = time.perf_counter()
+        drv.run(steps)
+        wall = time.perf_counter() - t0
+        err = _excess_risk(scn, stream, drv)
+        final = (np.asarray(drv.state[0]) if isinstance(drv.state, tuple)
+                 else np.asarray(drv.state.w)).copy()
+        cons = drv.history[-1]["metrics"]["consensus_err"]
+    return {"excess": err, "consensus": cons, "wall": wall,
+            "traces": len(traces), "rounds": steps * K, "final": final}
+
+
+def _bench_matrix(quick: bool) -> dict:
+    steps = 4 if quick else 10
+    cells = {}
+    for topo in scenarios.TOPOLOGY_AXIS:
+        for link in scenarios.LINK_AXIS:
+            for skey in scenarios.STREAM_AXIS:
+                r = _run_cell(topo, link, skey, steps)
+                cells[(topo, link, skey)] = r
+                emit(f"scenarios/matrix/{topo}/{link}/{skey}",
+                     r["wall"] / r["rounds"] * 1e6,
+                     f"excess_risk={r['excess']:.5f};"
+                     f"consensus_err={r['consensus']:.3e};"
+                     f"rounds={r['rounds']};traces={r['traces']}")
+    return cells
+
+
+def _bench_contracts(cells: dict, quick: bool) -> None:
+    steps = 4 if quick else 10
+
+    # zero retraces across mid-stream topology switches: the time-varying
+    # cell cycles ring -> torus -> expander every 2 rounds, yet compiles
+    # exactly once (the phase is runtime data in the ScheduledMixOp)
+    tv = cells[("tv_rte", "clean", "iid_pca")]
+    retraces = tv["traces"] - 1
+    switches = tv["rounds"] // 2 - 1
+    emit("scenarios/retrace", 0.0,
+         f"retraces={retraces};topology_switches={switches};"
+         f"jit_traces={tv['traces']}")
+    assert retraces == 0, ("topology switches retraced the superstep", tv)
+
+    # eq. 17: the B-connected schedule tracks the static ring at matched
+    # budget (same seed, same sample sequence — only the mixing varies)
+    static = cells[("ring", "clean", "iid_pca")]
+    ratio = tv["excess"] / max(static["excess"], 1e-12)
+    emit("scenarios/tv_vs_static", 0.0,
+         f"ratio={ratio:.3f};tv_excess={tv['excess']:.5f};"
+         f"static_excess={static['excess']:.5f};rounds={tv['rounds']}")
+    assert ratio <= 2.0, ("time-varying schedule lost >2x vs static ring",
+                          tv["excess"], static["excess"])
+
+    # Bernoulli link loss: still converges, and the realization is a pure
+    # function of (seed, round, edge) — bit-identical across a rerun and
+    # across prefetch depths 0 vs 2
+    lossy = cells[("ring", "lossy", "iid_pca")]
+    rerun = _run_cell("ring", "lossy", "iid_pca", steps)
+    deep = _run_cell("ring", "lossy", "iid_pca", steps, prefetch=2)
+    identical = (np.array_equal(lossy["final"], rerun["final"])
+                 and np.array_equal(lossy["final"], deep["final"]))
+    w0 = jax.random.normal(jax.random.PRNGKey(SEED),
+                           (scenarios.PCA_CFG.dim,))
+    pca = scenarios.build_stream(
+        scenarios.make_scenario("ring", "lossy", "iid_pca", n_nodes=N)).pca
+    start = float(problems.pca_excess_risk(w0 / jnp.linalg.norm(w0),
+                                           pca.cov, pca.lambda1))
+    convergent = lossy["excess"] < start
+    emit("scenarios/lossy", 0.0,
+         f"deterministic={int(identical)};convergent={int(convergent)};"
+         f"excess_risk={lossy['excess']:.5f};start={start:.5f}")
+    assert identical, "lossy cell not bit-deterministic across runs/prefetch"
+    assert convergent, ("lossy cell did not converge", lossy["excess"], start)
+
+
+def _bench_governor_direction(quick: bool) -> None:
+    R = 2
+    Rp_true, Rc_true = 1e5, 2e3
+    # R_s high enough that the round interval matters: arrivals per round
+    # exceed B in both regimes, so the discard count mu is the adaptation
+    nominal = StreamConfig(streaming_rate=1e5, processing_rate=Rp_true,
+                           comms_rate=Rc_true)
+    scn = scenarios.get_scenario("ring/ratelimited/iid_pca")
+    bw = scenarios.comm_factor(scn, 5)  # inside the bw window
+    assert bw > 1.0, ("scenario's bandwidth window not active", bw)
+    limited = rates.rate_limited(nominal, bw)
+    out = {}
+    for label, truth_stream in (("clean", nominal), ("limited", limited)):
+        est = rates.RoundTimeEstimator(N, R, window=64)
+        rng = np.random.default_rng(0)
+        for _ in range(4 if quick else 16):
+            for Bq in (32, 64, 128, 256):
+                truth = Bq / (N * Rp_true) + R / truth_stream.comms_rate
+                est.observe(Bq, truth * (1.0 + 0.02 * rng.normal()))
+        e = est.estimate()
+        wall = 64 / (N * Rp_true) + R / truth_stream.comms_rate
+        # the governor never sees the cap: it replans from the NOMINAL
+        # config plus what it measured (eq. 4 re-inverted)
+        p = rates.replan(nominal, N, R, 64, wall, estimate=e)
+        out[label] = (e, p)
+    (e0, p0), (e1, p1) = out["clean"], out["limited"]
+    direction = int(e1.Rc < e0.Rc and p1.mu > p0.mu)
+    emit("scenarios/governor", 0.0,
+         f"direction={direction};est_Rc_clean={e0.Rc:.1f};"
+         f"est_Rc_limited={e1.Rc:.1f};mu_clean={p0.mu};mu_limited={p1.mu};"
+         f"bw_factor={bw:g}")
+    assert direction == 1, ("rate-limited links must push est R_c down and "
+                            "mu up", out)
+
+
+def run(quick: bool = False) -> None:
+    cells = _bench_matrix(quick)
+    _bench_contracts(cells, quick)
+    _bench_governor_direction(quick)

@@ -21,7 +21,8 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset: "
                          "rates,dmb,krasulina,dsgd,consensus,kernels,pipeline,"
-                         "governor,elastic,serve,checkpoint,roofline")
+                         "governor,elastic,scenarios,serve,checkpoint,"
+                         "roofline")
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: tiny shapes, no paper-regime asserts")
     ap.add_argument("--json", default="", metavar="OUT",
@@ -31,7 +32,8 @@ def main() -> None:
     from benchmarks import (bench_checkpoint, bench_consensus, bench_dmb,
                             bench_dsgd, bench_elastic, bench_governor,
                             bench_kernels, bench_krasulina, bench_pipeline,
-                            bench_rates, bench_roofline, bench_serve, common)
+                            bench_rates, bench_roofline, bench_scenarios,
+                            bench_serve, common)
 
     suites = {
         "rates": bench_rates.run,       # Fig. 5
@@ -43,6 +45,7 @@ def main() -> None:
         "pipeline": bench_pipeline.run,  # streaming engine (superstep/prefetch)
         "governor": bench_governor.run,  # adaptive-B bucket ladder
         "elastic": bench_elastic.run,   # node churn vs lockstep baseline
+        "scenarios": bench_scenarios.run,  # topology x link x stream matrix
         "serve": bench_serve.run,       # train-to-serve closed loop
         "checkpoint": bench_checkpoint.run,  # async snapshot / kill-resume
         "roofline": bench_roofline.run,  # deliverable (g)

@@ -288,6 +288,40 @@ class GovernorConfig:
 
 
 @dataclass(frozen=True)
+class ScenarioConfig:
+    """One named cell of the scenario harness (`core/scenarios.py`;
+    docs/DESIGN.md §Scenario harness): a seeded, deterministic composition of
+    the three orthogonal axes the paper's assumptions quantify over —
+
+    * **topology schedule**: the time-varying mixing graph of eq. 17, as
+      (topology, rounds) segments cycled by the consensus round counter.
+      Topologies: ring | torus | circulant2 | expander | geometric.
+    * **link model**: per-edge loss/bandwidth faults in the extended
+      `core.faults.FaultSchedule` DSL ('link:1-2@4-20p0.1,bw:0-3@5-15x4');
+      empty = loss-free links. Link windows index consensus rounds.
+    * **stream**: the per-node data distribution — iid_pca | drift_pca |
+      iid_logreg | skew_logreg, with `stream_param` the drift rate
+      (radians/sample) or the Dirichlet concentration alpha.
+
+    Pure data (hashable, serializable); `core.scenarios` owns construction of
+    the operators, samplers, and fault schedules it names."""
+
+    name: str
+    n_nodes: int = 8
+    rounds: int = 2  # R consensus rounds per algorithm step
+    # ((topology, n_rounds), ...): consecutive segments of the cyclic schedule
+    topology_schedule: Tuple[Tuple[str, int], ...] = (("ring", 1),)
+    links: str = ""  # FaultSchedule DSL, link:/bw: tokens only
+    stream: str = "iid_pca"
+    stream_param: float = 0.0
+    seed: int = 0
+    self_weight: float = 0.0  # circulant self-weight (0 -> uniform)
+    # link-loss realization horizon in rounds (0 -> auto: cover the link
+    # windows and the topology period; realizations repeat beyond it)
+    period_rounds: int = 0
+
+
+@dataclass(frozen=True)
 class PublishConfig:
     """Train-to-serve snapshot publication knobs
     (`serve/publisher.py`; docs/DESIGN.md §Train-to-serve publication).

@@ -37,9 +37,14 @@ import jax.numpy as jnp
 
 from repro.configs.base import AveragingConfig
 from repro.core import packing
-from repro.core.mixing import CirculantMixOp, circulant_mix_op, schedule
+from repro.core.mixing import (CirculantMixOp, ScheduledMixOp,
+                               circulant_mix_op, schedule)
 
 Tree = Any
+# the consensus engine: a static CirculantMixOp or a time-varying
+# ScheduledMixOp (scenario harness) — both are called uniformly through
+# `_mix_call`, which routes the traced round counter `t` to scheduled ops
+MixOp = Any
 
 
 def make_gossip_mix(cfg: AveragingConfig, n_nodes: int, *,
@@ -61,34 +66,45 @@ def make_gossip_mix(cfg: AveragingConfig, n_nodes: int, *,
                             block_d=cfg.quant_block_d)
 
 
-def _packable(mix: CirculantMixOp) -> bool:
+def _packable(mix: MixOp) -> bool:
     """Quantized global-stats configs pin per-leaf statistics (the bit-identity
     oracle), so they keep the per-leaf dispatch; everything else packs."""
     return not (mix.quantization != "none" and mix.stats == "global")
 
 
-def _apply_mix(mix: CirculantMixOp, spec: packing.PackSpec, g: int,
-               buf: jax.Array, key: Any = None) -> jax.Array:
+def _mix_call(mix: MixOp, x: jax.Array, *, key: Any = None, t: Any = None,
+              **kw) -> jax.Array:
+    """Uniform call: scheduled (time-varying) ops take the traced round
+    counter `t` to pick the active phase; static ops take the compressor key."""
+    if isinstance(mix, ScheduledMixOp):
+        return mix(x, t=t, **kw)
+    return mix(x, key=key, **kw)
+
+
+def _apply_mix(mix: MixOp, spec: packing.PackSpec, g: int,
+               buf: jax.Array, key: Any = None, t: Any = None) -> jax.Array:
     if mix.quantization != "none" and mix.stats == "segment":
         widths = tuple(spec.leaf_width(i) for i in spec.groups[g])
-        return mix(buf, seg_widths=widths, key=key)
-    return mix(buf, key=key)
+        return _mix_call(mix, buf, key=key, t=t, seg_widths=widths)
+    return _mix_call(mix, buf, key=key, t=t)
 
 
 def gossip_average(tree: Tree, n_nodes: int, cfg: AveragingConfig,
-                   mix: Optional[CirculantMixOp] = None, *,
-                   key: Any = None) -> Tree:
+                   mix: Optional[MixOp] = None, *,
+                   key: Any = None, t: Any = None) -> Tree:
     """R rounds of doubly-stochastic consensus over the leading node axis —
     one packed pass per dtype group by default, per-leaf when `cfg.packed`
     is off or the quantized global-stats oracle is selected. `key` (optional)
     is the per-step base key for stochastic compressors — see
-    `CirculantMixOp.__call__`."""
+    `CirculantMixOp.__call__`. `t` (optional) is the traced round counter a
+    time-varying `ScheduledMixOp` uses to select its active phase."""
     if mix is None:
         mix = make_gossip_mix(cfg, n_nodes)
     if not (cfg.packed and _packable(mix)):
-        return jax.tree.map(lambda g: mix(g, key=key), tree)
+        return jax.tree.map(lambda g: _mix_call(mix, g, key=key, t=t), tree)
     bufs, spec = packing.pack_tree(tree)
-    outs = tuple(_apply_mix(mix, spec, g, b, key) for g, b in enumerate(bufs))
+    outs = tuple(_apply_mix(mix, spec, g, b, key, t)
+                 for g, b in enumerate(bufs))
     return packing.unpack_tree(outs, spec)
 
 
@@ -98,7 +114,7 @@ def exact_average(tree: Tree) -> Tree:
 
 
 def _hmix_buffer(g: jax.Array, pods: int, per_pod: int,
-                 mix: CirculantMixOp, key: Any = None) -> jax.Array:
+                 mix: MixOp, key: Any = None, t: Any = None) -> jax.Array:
     """Reduce-scatter hierarchical consensus on one [N, ...] buffer/leaf."""
     shp = g.shape
     flat = g.reshape(pods, per_pod, -1)  # [P, M, F]
@@ -111,7 +127,7 @@ def _hmix_buffer(g: jax.Array, pods: int, per_pod: int,
     scattered = pod_mean.reshape(pods, per_pod, chunk)  # ... scatter
     # cross-pod gossip, one chunk per lane; pad columns sit at the tail of
     # the flattened layout and are masked out of compressor statistics
-    mixed = mix(scattered, valid_d=f if pad else None, key=key)
+    mixed = _mix_call(mix, scattered, valid_d=f if pad else None, key=key, t=t)
     gathered = mixed.reshape(pods, 1, chunk * per_pod)[..., :f]  # all-gather
     g = jnp.broadcast_to(gathered, (pods, per_pod, f))
     return g.reshape(shp)
@@ -119,8 +135,8 @@ def _hmix_buffer(g: jax.Array, pods: int, per_pod: int,
 
 def hierarchical_average(tree: Tree, pods: int, per_pod: int,
                          cfg: AveragingConfig,
-                         mix: Optional[CirculantMixOp] = None, *,
-                         key: Any = None) -> Tree:
+                         mix: Optional[MixOp] = None, *,
+                         key: Any = None, t: Any = None) -> Tree:
     """Exact averaging within each pod (fast ICI), gossip across pods (slow
     DCN) — in reduce-scatter form.
 
@@ -143,7 +159,7 @@ def hierarchical_average(tree: Tree, pods: int, per_pod: int,
         mix = make_gossip_mix(cfg, pods)
 
     def hmix(g):
-        return _hmix_buffer(g, pods, per_pod, mix, key)
+        return _hmix_buffer(g, pods, per_pod, mix, key, t)
 
     if not (cfg.packed and _packable(mix)):
         return jax.tree.map(hmix, tree)
@@ -153,27 +169,28 @@ def hierarchical_average(tree: Tree, pods: int, per_pod: int,
 
 def average_gradients(tree: Tree, cfg: AveragingConfig, *, n_nodes: int,
                       pods: int = 1,
-                      mix: Optional[CirculantMixOp] = None,
-                      key: Any = None) -> Tree:
+                      mix: Optional[MixOp] = None,
+                      key: Any = None, t: Any = None) -> Tree:
     """Dispatch on the paper's averaging mode. `tree` leaves: [n_nodes, ...].
 
     `mix` is the prebuilt consensus engine (gossip: over `n_nodes`;
     hierarchical: over `pods`); built from `cfg` on the fly when omitted.
-    `key` is the optional per-step base key for stochastic compressors."""
+    `key` is the optional per-step base key for stochastic compressors; `t`
+    the optional traced round counter for time-varying schedules."""
     if cfg.mode == "exact":
         return exact_average(tree)
     if cfg.mode == "gossip":
-        return gossip_average(tree, n_nodes, cfg, mix, key=key)
+        return gossip_average(tree, n_nodes, cfg, mix, key=key, t=t)
     if cfg.mode == "hierarchical":
         assert n_nodes % pods == 0
         return hierarchical_average(tree, pods, n_nodes // pods, cfg, mix,
-                                    key=key)
+                                    key=key, t=t)
     raise ValueError(f"unknown averaging mode {cfg.mode!r}")
 
 
 def average_and_error(tree: Tree, cfg: AveragingConfig, *, n_nodes: int,
-                      pods: int = 1, mix: Optional[CirculantMixOp] = None,
-                      key: Any = None) -> Tuple[Tree, jax.Array]:
+                      pods: int = 1, mix: Optional[MixOp] = None,
+                      key: Any = None, t: Any = None) -> Tuple[Tree, jax.Array]:
     """Averaging plus the epsilon-consensus diagnostic with ONE pack: the
     mixed packed buffers feed both the unpack and the fused error reduction,
     so the trainer stops paying a second per-leaf (or re-pack) sweep."""
@@ -187,15 +204,15 @@ def average_and_error(tree: Tree, cfg: AveragingConfig, *, n_nodes: int,
                               else n_nodes)
     if not (cfg.packed and _packable(mix)):
         mixed = average_gradients(tree, cfg, n_nodes=n_nodes, pods=pods,
-                                  mix=mix, key=key)
+                                  mix=mix, key=key, t=t)
         return mixed, consensus_error(mixed)
     bufs, spec = packing.pack_tree(tree)
     if cfg.mode == "gossip":
-        outs = tuple(_apply_mix(mix, spec, g, b, key)
+        outs = tuple(_apply_mix(mix, spec, g, b, key, t)
                      for g, b in enumerate(bufs))
     else:
         assert n_nodes % pods == 0
-        outs = tuple(_hmix_buffer(b, pods, n_nodes // pods, mix, key)
+        outs = tuple(_hmix_buffer(b, pods, n_nodes // pods, mix, key, t)
                      for b in bufs)
     err = _packed_consensus_error(outs, spec)
     return packing.unpack_tree(outs, spec), err

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from repro.configs.base import AveragingConfig
 from repro.core.averaging import make_gossip_mix
 from repro.core.dsgd import jit_driver
-from repro.core.mixing import CirculantMixOp
+from repro.core.mixing import CirculantMixOp, DenseMixOp, ScheduledMixOp
 from repro.core.quantize import STOCHASTIC
 from repro.kernels.ops import krasulina_xi, krasulina_xi_gossip
 
@@ -57,7 +57,11 @@ def _resolve_fuse_xi(mix: CirculantMixOp, fuse_xi: Optional[bool]) -> bool:
     always on TPU (tile-resident consensus, one HBM write), never by default
     on CPU/GPU where the MixOp's composed-schedule impl (roll/matmul) is the
     fast path and the kernel would run in interpret mode. Quantized configs
-    can't fuse (nonlinear per-round compressor)."""
+    can't fuse (nonlinear per-round compressor), and time-varying
+    `ScheduledMixOp` schedules never do (the kernel bakes one circulant
+    schedule; the scheduled op's phase is runtime data)."""
+    if isinstance(mix, (ScheduledMixOp, DenseMixOp)):
+        return False  # no circulant schedule for the kernel to bake
     if mix.quantization != "none":
         return False
     if fuse_xi is not None:
@@ -70,13 +74,21 @@ def _gossip_xi(w: jax.Array, z: jax.Array, mix: CirculantMixOp, fused: bool,
     """Gossip-averaged pseudo-gradients: xi per node, R consensus rounds.
     `t` (the round counter) is folded into the MixOp seed so stochastic
     compressors draw fresh per-round noise every scan step (the fused kernel
-    path only exists for quantization="none", where the key is moot)."""
+    path only exists for quantization="none", where the key is moot). A
+    time-varying `ScheduledMixOp` receives `t` itself — the carry's round
+    counter is the schedule clock, so topology switches are pure runtime
+    data (zero retraces) and replay identically on resume."""
     if fused:
         return krasulina_xi_gossip(w, z, mix.sched, mix.rounds)
+    h = jax.vmap(krasulina_xi)(w, z)
+    if isinstance(mix, ScheduledMixOp):
+        return mix(h, t=t)
+    if isinstance(mix, DenseMixOp):
+        return mix(h)  # dense operators are linear-only, no key to thread
     step_key = None
     if mix.quantization in STOCHASTIC:
         step_key = jax.random.fold_in(jax.random.PRNGKey(mix.seed), t)
-    return mix(jax.vmap(krasulina_xi)(w, z), key=step_key)
+    return mix(h, key=step_key)
 
 
 def _check_averaging(averaging: AveragingConfig) -> None:

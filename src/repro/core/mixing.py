@@ -265,6 +265,30 @@ def _circulant_regular(n: int, deg: int) -> np.ndarray:
     return adj
 
 
+def random_geometric(n: int, seed: int = 0, radius: Optional[float] = None,
+                     max_tries: int = 50) -> np.ndarray:
+    """Random geometric graph on the unit square, Metropolis weights — the
+    'spatially clustered' topology family of the scenario harness
+    (core/scenarios.py). Nodes are uniform points; edges connect pairs within
+    `radius` (default: the standard connectivity threshold
+    sqrt(2 ln n / n)). If the sample is disconnected the radius is grown and
+    the points resampled — deterministic for a fixed seed."""
+    if n == 1:
+        return np.ones((1, 1))
+    rng = np.random.default_rng(seed)
+    r = radius if radius is not None else float(
+        np.sqrt(2.0 * np.log(max(n, 2)) / n))
+    for _ in range(max_tries):
+        pts = rng.random((n, 2))
+        d = np.linalg.norm(pts[:, None] - pts[None, :], axis=-1)
+        adj = d <= r
+        np.fill_diagonal(adj, False)
+        if _connected(adj):
+            return metropolis_weights(adj.astype(float))
+        r *= 1.25
+    raise RuntimeError("failed to sample a connected geometric graph")
+
+
 def _connected(adj: np.ndarray) -> bool:
     n = adj.shape[0]
     seen = {0}
@@ -572,3 +596,115 @@ def circulant_mix_op(sched: Schedule, n: int, rounds: int, *,
              if impl == "matmul" else None)
     return CirculantMixOp(sched, fused, A_eff, n, rounds, quantization, impl,
                           stats, block_d, seed)
+
+
+# ---------------------------------------------------------------------------
+# Time-varying operators (ScheduledMixOp — scenario harness, eq. 17's
+# B-connected graph sequences; docs/DESIGN.md §Scenario harness)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ScheduledMixOp:
+    """Time-varying R-round consensus operator: a stack of precomputed
+    per-phase effective operators plus a round→phase lookup table, with the
+    active phase selected as **runtime data** — switching topology (or
+    realizing a per-round lossy-link draw) never retraces the superstep.
+
+    `A_stack` [P, n, n] holds each phase's R-round effective operator,
+    constructed for bit-parity with the static paths: circulant phases use the
+    same `schedule_matrix(compose_schedule(...))` float32 constants the
+    `CirculantMixOp` matmul impl applies, and dense phases the same
+    `matrix_power` product `dense_mix_op` builds — so a constant schedule is
+    bit-identical to the static op it degenerates to. `phase_by_round`
+    [period] int32 maps the round counter t (mod period) to a phase; both are
+    pytree *children*, so the phase gather and the matmul trace once and
+    re-execute for every subsequent round/realization.
+
+    Linear operator only (no compressor state): `quantization` is always
+    "none", and `key`/`seg_widths`/`valid_d` are accepted and ignored so the
+    op is call-compatible with `CirculantMixOp` in `core.averaging` and
+    `core.krasulina`. Callers pass the traced round counter `t` (the
+    Krasulina carry's round index, or the optimizer step on the LM path) to
+    advance the schedule; `t=None` pins phase 0 (the static-parity mode)."""
+
+    A_stack: Any  # [P, n, n] per-phase effective R-round operators (child)
+    phase_by_round: Any  # [period] int32 round->phase lookup (child)
+    n: int
+    rounds: int
+    period: int
+    quantization: str = "none"
+    stats: str = "global"
+
+    def __call__(self, x: jax.Array, *, t: Any = None, phase: Any = None,
+                 seg_widths: Optional[Tuple[int, ...]] = None,
+                 valid_d: Optional[int] = None, key: Any = None) -> jax.Array:
+        del seg_widths, valid_d, key  # linear: no compressor statistics
+        assert x.shape[0] == self.n, (
+            f"MixOp built for n={self.n} applied to node axis {x.shape[0]}")
+        if self.rounds == 0 or self.n == 1:
+            return x
+        if phase is None:
+            if t is None:
+                phase = 0
+            else:
+                phase = self.phase_by_round[
+                    jnp.asarray(t, jnp.int32) % self.period]
+        A = self.A_stack[phase]
+        flat = x.reshape(self.n, -1)
+        out = jnp.asarray(A, x.dtype) @ flat
+        return out.reshape(x.shape)
+
+    @property
+    def n_phases(self) -> int:
+        return int(self.A_stack.shape[0])
+
+    def phase_at(self, t: int) -> int:
+        """Host-side phase lookup (tests / observability)."""
+        return int(np.asarray(self.phase_by_round)[int(t) % self.period])
+
+    def tree_flatten(self):
+        return (self.A_stack, self.phase_by_round), (
+            self.n, self.rounds, self.period, self.quantization, self.stats)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+
+def scheduled_mix_op(phases, n: int, rounds: int,
+                     phase_by_round=None) -> ScheduledMixOp:
+    """Build a time-varying MixOp from per-phase one-round operators.
+
+    Each entry of `phases` is either a circulant `Schedule` (tuple of
+    (shift, weight)) or a dense [n, n] doubly-stochastic matrix; its R-round
+    effective operator is precomputed here, once, exactly the way the static
+    factories do (`compose_schedule`+`schedule_matrix` for circulants,
+    `matrix_power` for dense) so a constant schedule stays bit-identical to
+    `CirculantMixOp`/`DenseMixOp`. `phase_by_round` maps round t -> phase
+    index, cyclic with its length (default: round-robin over the phases)."""
+    if not phases:
+        raise ValueError("need at least one phase")
+    mats = []
+    for p in phases:
+        if isinstance(p, tuple):  # circulant schedule
+            eff = compose_schedule(p, rounds, n) if rounds > 0 else ((0, 1.0),)
+            mats.append(jnp.asarray(
+                np.asarray(schedule_matrix(eff, n), np.float32)))
+        else:
+            A = jnp.asarray(p, jnp.float32)
+            if A.shape != (n, n):
+                raise ValueError(f"phase matrix shape {A.shape} != ({n}, {n})")
+            mats.append(jnp.linalg.matrix_power(A, rounds)
+                        if rounds > 1 else A)
+    if phase_by_round is None:
+        phase_by_round = tuple(range(len(mats)))
+    lut = np.asarray(phase_by_round, np.int32)
+    if lut.ndim != 1 or lut.size == 0:
+        raise ValueError("phase_by_round must be a non-empty 1D sequence")
+    if lut.min() < 0 or lut.max() >= len(mats):
+        raise ValueError(f"phase ids must be in [0, {len(mats)}); got "
+                         f"[{lut.min()}, {lut.max()}]")
+    return ScheduledMixOp(jnp.stack(mats), jnp.asarray(lut), n, rounds,
+                          int(lut.size))

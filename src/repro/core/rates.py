@@ -38,6 +38,23 @@ def effective_rate(B: float, N: int, R: int, Rp: float, Rc: float) -> float:
     return 1.0 / (B / (N * Rp) + _comm_time(R, Rc))
 
 
+def rate_limited(stream: StreamConfig, bw_factor: float) -> StreamConfig:
+    """The stream as seen through a bandwidth-capped network: a `bw:i-jxF`
+    link fault (core/faults.py) makes the lockstep consensus round block on
+    the capped edge, which is equivalent to dividing the network rate R_c by
+    the cap factor in eq. 4. Used by the scenario harness to derive ground
+    truth for simulated round times; the closed loop itself never consumes
+    this — the governor *measures* the inflated round time and its estimator
+    recovers the lower R_c on its own (that direction is what
+    `benchmarks/bench_scenarios.py` asserts). A no-comms-model stream
+    (comms_rate <= 0) has nothing to cap and passes through unchanged."""
+    if bw_factor < 1.0:
+        raise ValueError(f"bandwidth cap factor must be >= 1: {bw_factor}")
+    if stream.comms_rate <= 0 or bw_factor == 1.0:
+        return stream
+    return dataclasses.replace(stream, comms_rate=stream.comms_rate / bw_factor)
+
+
 def max_rounds(B: float, N: int, Rs: float, Rp: float, Rc: float) -> int:
     """Largest R compatible with keeping up with the stream (eq. 3)."""
     slack = 1.0 / Rs - 1.0 / (N * Rp)

@@ -34,7 +34,8 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh, n_data_nodes
 from repro.models.common import mesh_rules
 from repro.train import checkpoint as ckpt
 from repro.train.driver import EngineConfig, StreamingDriver
-from repro.train.trainer import init_state, replicate_for_nodes
+from repro.train.trainer import (init_state, replicate_for_nodes,
+                                 superstep_builder)
 
 
 def main():
@@ -103,6 +104,15 @@ def main():
                     help="fault-injection spec for elastic membership, e.g. "
                          "'death:1@5-12,slow:0@3-9x4' "
                          "(see core/faults.py; needs --averaging gossip)")
+    ap.add_argument("--scenario", default="",
+                    help="named scenario from core/scenarios.py: replaces "
+                         "--topology/--rounds with the scenario's "
+                         "time-varying mixing schedule and adds its link "
+                         "model (loss/bandwidth) to --faults; the stream "
+                         "axis stays the LM token stream (the synthetic "
+                         "streams are exercised by "
+                         "benchmarks/bench_scenarios.py); needs "
+                         "--averaging gossip")
     ap.add_argument("--straggler-policy", default="wait",
                     choices=["wait", "drop", "deadline"],
                     help="straggler handling: wait (lockstep), drop "
@@ -131,14 +141,29 @@ def main():
     if args.reduced:
         cfg = reduce_cfg(cfg)
     mesh = make_production_mesh() if args.production_mesh else make_host_mesh()
+    n_nodes = n_data_nodes(mesh)
+    scenario = None
+    averaging = AveragingConfig(args.averaging, args.rounds, args.topology)
+    if args.scenario:
+        if args.averaging != "gossip":
+            ap.error("--scenario needs --averaging gossip")
+        import dataclasses
+
+        from repro.core import scenarios as scenario_lib
+
+        scenario = scenario_lib.get_scenario(args.scenario)
+        if scenario.n_nodes != n_nodes:
+            # scenarios are registered at their canonical size; re-root the
+            # schedule on this mesh's node axis (link endpoints must fit)
+            scenario = dataclasses.replace(scenario, n_nodes=n_nodes)
+        averaging = scenario_lib.averaging_config(scenario)
     run = RunConfig(
         model=cfg, shape=SHAPES["train_4k"],
-        averaging=AveragingConfig(args.averaging, args.rounds, args.topology),
+        averaging=averaging,
         stream=StreamConfig(args.streaming_rate, args.processing_rate,
                             args.comms_rate),
         optimizer=args.optimizer, learning_rate=args.lr, param_dtype=args.dtype)
 
-    n_nodes = n_data_nodes(mesh)
     decentralized = args.averaging != "exact"
     rules = shlib.activation_rules(mesh, run.shape, node_axis=decentralized)
     buckets = tuple(int(b) for b in args.buckets.split(",") if b.strip())
@@ -149,8 +174,17 @@ def main():
                               straggler_slow_factor=args.straggler_factor,
                               straggler_deadline_s=args.straggler_deadline,
                               sync_on_rejoin=not args.no_rejoin_sync)
-    faults = (FaultSchedule.parse(args.faults, n_nodes)
-              if args.faults else None)
+    # the scenario's link model rides the same fault schedule as any node
+    # faults from --faults (link windows index consensus rounds, node
+    # windows supersteps — core/faults.py)
+    fault_spec = ",".join(
+        s for s in (args.faults, scenario.links if scenario else "") if s)
+    faults = (FaultSchedule.parse(fault_spec, n_nodes,
+                                  seed=scenario.seed if scenario else 0)
+              if fault_spec else None)
+    builder = (superstep_builder(run, mesh, n_nodes=n_nodes,
+                                 mix=scenario_lib.build_mix(scenario))
+               if scenario is not None else None)
     engine = EngineConfig(superstep=args.superstep,
                           prefetch_depth=args.prefetch,
                           replan_every=args.replan_every,
@@ -186,11 +220,17 @@ def main():
         if decentralized:
             state = replicate_for_nodes(state, n_nodes)
         with StreamingDriver(run, mesh, state, sample_fn, engine=engine,
+                             superstep_builder=builder,
                              batch=args.batch, faults=faults,
                              horizon=args.horizon or None,
                              publisher=publisher, snapshotter=snapshotter,
                              resume_from=args.resume or None) as driver:
             plan = driver.pipeline.plan
+            if scenario is not None:
+                sched = " ".join(f"{t}x{s}"
+                                 for t, s in scenario.topology_schedule)
+                print(f"scenario: {scenario.name} [{sched}] "
+                      f"links='{scenario.links}' rounds={scenario.rounds}")
             if driver.resumed_from:
                 print(f"resumed: {driver.resumed_from} "
                       f"(superstep {driver._supersteps_done})")

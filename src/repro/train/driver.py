@@ -160,11 +160,18 @@ class StreamingDriver:
         self.n_nodes = n_nodes or n_data_nodes(mesh)
         self._horizon = horizon
         gov = engine.governor
-        # elastic membership (docs/DESIGN.md §Elastic membership): a fault
-        # schedule and/or a non-lockstep straggler policy turn joins/leaves
-        # into plan swaps on the governed pipeline
+        # elastic membership (docs/DESIGN.md §Elastic membership): NODE
+        # faults and/or a non-lockstep straggler policy turn joins/leaves
+        # into plan swaps on the governed pipeline. Link-only schedules
+        # (loss / bandwidth — docs/DESIGN.md §Scenario harness) stay on the
+        # standard path: they reshape the mixing operator and the round
+        # times, not the cohort
         self._faults = faults
-        self._elastic = faults is not None or gov.straggler_policy != "wait"
+        if faults is not None and faults.n != self.n_nodes:
+            raise ValueError(f"fault schedule covers {faults.n} nodes "
+                             f"but the driver has {self.n_nodes}")
+        self._elastic = ((faults is not None and faults.has_node_faults)
+                         or gov.straggler_policy != "wait")
         if self._elastic:
             if not self.decentralized:
                 raise ValueError("elastic membership needs a decentralized "
@@ -172,9 +179,6 @@ class StreamingDriver:
             if run_cfg.averaging.mode == "hierarchical":
                 raise ValueError("elastic membership is not defined for "
                                  "pod-structured hierarchical averaging")
-            if faults is not None and faults.n != self.n_nodes:
-                raise ValueError(f"fault schedule covers {faults.n} nodes "
-                                 f"but the driver has {self.n_nodes}")
         self._straggler = (rates.StragglerPolicy(
             self.n_nodes, gov.straggler_policy,
             slow_factor=gov.straggler_slow_factor,
@@ -575,6 +579,12 @@ class StreamingDriver:
             "n_active": m_used,
             "counters": counters,
         }
+        if self._faults is not None and self._faults.has_link_faults:
+            # link-model observability (docs/DESIGN.md §Scenario harness):
+            # the active bandwidth slowdown and the Bernoulli edge drops
+            # realized at this superstep's last consensus round
+            rec["bw_factor"] = self._faults.bw_factor(rec["round"])
+            rec["link_drops"] = self._faults.link_drops(rec["round"])
         governed = stream.streaming_rate > 0
         if governed and warm and self._estimator is not None:
             if m_used != self.n_nodes:

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import RunConfig
 from repro.core.averaging import average_and_error, make_gossip_mix
+from repro.core.mixing import ScheduledMixOp
 from repro.core.quantize import STOCHASTIC
 from repro.launch import sharding as shlib
 from repro.launch.mesh import data_axes, n_data_nodes
@@ -86,7 +87,8 @@ def publish_extract(n_nodes: Optional[int] = None) -> Callable:
 
 
 def build_train_step(run: RunConfig, mesh, *,
-                     n_nodes: Optional[int] = None) -> Tuple[Callable, Callable]:
+                     n_nodes: Optional[int] = None,
+                     mix: Optional[Any] = None) -> Tuple[Callable, Callable]:
     """Returns (train_step, state_spec_fn).
 
     train_step(state, batch) -> (state, metrics); call under `mesh_rules`.
@@ -96,6 +98,12 @@ def build_train_step(run: RunConfig, mesh, *,
     devices (the vmap'd node axis is then partly or fully local), which is how
     the CPU container exercises gossip semantics and the pipeline benchmark
     drives decentralized supersteps on one device.
+
+    `mix` overrides the consensus engine built from `run.averaging` — the
+    scenario harness (core/scenarios.py) injects a time-varying
+    `core.mixing.ScheduledMixOp` here; the optimizer's step counter is its
+    phase clock. Scheduled operators are linear-only, so quantized configs
+    reject the override.
     """
     cfg = run.model
     update = make_optimizer(run.optimizer, run.learning_rate,
@@ -160,7 +168,11 @@ def build_train_step(run: RunConfig, mesh, *,
     # lets impl="auto" keep the collective-permute roll lowering on sharded
     # node axes and take the matmul/kernel fast path on single-device runs
     gossip_n = pods if run.averaging.mode == "hierarchical" else n_nodes
-    mix = make_gossip_mix(run.averaging, gossip_n, mesh=mesh)
+    if mix is None:
+        mix = make_gossip_mix(run.averaging, gossip_n, mesh=mesh)
+    elif isinstance(mix, ScheduledMixOp) and run.averaging.quantization != "none":
+        raise ValueError("ScheduledMixOp is linear-only: quantized averaging "
+                         "configs keep their static per-round operator")
 
     def train_step(state: TrainState, batch):
         # batch leaves: [n_nodes, B/n_nodes, ...]
@@ -172,6 +184,12 @@ def build_train_step(run: RunConfig, mesh, *,
         # into one [N, D] buffer per dtype, the consensus engine and the
         # error diagnostic both run on that buffer — one pack per step,
         # one mixing pass per buffer instead of one chain per leaf
+        #
+        # the optimizer's step counter doubles as the round clock: stochastic
+        # compressors fold it into their key, and a time-varying
+        # ScheduledMixOp reads it as the schedule phase index — runtime data
+        # either way, so the K-round scan stays a single trace
+        t = jnp.reshape(state.opt.step, (-1,))[0]
         step_key = None
         if run.averaging.quantization in STOCHASTIC:
             # per-STEP base key for the stochastic compressor: fold the
@@ -179,10 +197,9 @@ def build_train_step(run: RunConfig, mesh, *,
             # K-round superstep scan draws fresh per-round noise every round
             # instead of replaying the seed-derived sequence (the MixOp still
             # folds the round index in per consensus round)
-            t = jnp.reshape(state.opt.step, (-1,))[0]
             step_key = jax.random.fold_in(jax.random.PRNGKey(mix.seed), t)
         mixed, cerr = average_and_error(grads, run.averaging, n_nodes=n_nodes,
-                                       pods=pods, mix=mix, key=step_key)
+                                       pods=pods, mix=mix, key=step_key, t=t)
         new_params, new_opt = jax.vmap(update)(mixed, state.opt, state.params)
         metrics = jax.tree.map(jnp.mean, metrics)
         metrics = dict(metrics, loss=jnp.mean(l), consensus_err=cerr)
@@ -218,7 +235,8 @@ def _state_specs(state_shapes: TrainState, *, run: RunConfig, mesh, node_axes):
 
 
 def build_superstep(run: RunConfig, mesh, *,
-                    n_nodes: Optional[int] = None) -> Tuple[Callable, Callable]:
+                    n_nodes: Optional[int] = None,
+                    mix: Optional[Any] = None) -> Tuple[Callable, Callable]:
     """The K-round device scan: fold K consecutive train steps into ONE jitted
     call via `lax.scan` (paper Fig. 4's amortization of fixed per-round costs).
 
@@ -230,7 +248,7 @@ def build_superstep(run: RunConfig, mesh, *,
     K is read from the batch shapes at trace time; each distinct K compiles
     once (jit caches by shape), so pick K once per run.
     """
-    train_step, spec_fn = build_train_step(run, mesh, n_nodes=n_nodes)
+    train_step, spec_fn = build_train_step(run, mesh, n_nodes=n_nodes, mix=mix)
 
     def superstep(state: TrainState, batches):
         return jax.lax.scan(train_step, state, batches)
@@ -239,7 +257,8 @@ def build_superstep(run: RunConfig, mesh, *,
 
 
 def superstep_builder(run: RunConfig, mesh, *,
-                      n_nodes: Optional[int] = None) -> Callable[..., Callable]:
+                      n_nodes: Optional[int] = None,
+                      mix: Optional[Any] = None) -> Callable[..., Callable]:
     """Bucket-keyed superstep factory for the adaptive-B governor
     (docs/DESIGN.md §Adaptive batch buckets): `build(B) -> superstep` hands
     `train.driver.StreamingDriver` the function to compile for each
@@ -257,14 +276,19 @@ def superstep_builder(run: RunConfig, mesh, *,
     n_nodes = n_active, with the gossip operator recomposed over the active
     cohort (docs/DESIGN.md §Elastic membership). The driver wraps it with the
     full-axis gather/scatter (`train.driver.elastic_superstep`), so this
-    builder only ever sees dense node axes."""
+    builder only ever sees dense node axes.
+
+    The prebuilt `mix` override (scenario harness) only applies at full
+    membership — its operator stack is sized for the full node axis; cohort
+    supersteps recompose their own operator over the active cohort."""
     n_full = n_nodes or n_data_nodes(mesh)
     cohort_cache: Dict[int, Callable] = {}
 
     def _for_cohort(m: int) -> Callable:
         fn = cohort_cache.get(m)
         if fn is None:
-            fn, _ = build_superstep(run, mesh, n_nodes=m)
+            fn, _ = build_superstep(run, mesh, n_nodes=m,
+                                    mix=mix if m == n_full else None)
             cohort_cache[m] = fn
         return fn
 

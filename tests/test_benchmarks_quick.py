@@ -31,7 +31,8 @@ def test_run_quick_all_suites(tmp_path):
                    "consensus/quant_accuracy/", "kernel/", "pipeline/",
                    "krasulina/fused/", "krasulina/gossip/",
                    "governor/cold_switch/", "governor/warm_switch/",
-                   "elastic/throughput/", "serve/", "checkpoint/"):
+                   "elastic/throughput/", "scenarios/matrix/", "serve/",
+                   "checkpoint/"):
         assert any(n.startswith(prefix) for n in names), (prefix, names)
     # the engine rows carry machine-readable throughput
     pipe = [r for r in artifact["rows"] if r["name"].startswith("pipeline/")]
@@ -92,3 +93,23 @@ def test_run_quick_all_suites(tmp_path):
     assert field(ck[0], "failures") == 0
     cr = [r for r in artifact["rows"] if r["name"] == "checkpoint/resume"]
     assert cr and field(cr[0], "bit_identical") == 1
+    # scenario-harness contract rows (PR 9), deterministic in quick mode:
+    # the topology x link x stream matrix carries excess risk per cell,
+    # mid-stream topology switches never retrace, the B-connected
+    # time-varying schedule stays within 2x of the static ring at a matched
+    # budget, the lossy cell converges bit-deterministically, and
+    # rate-limited links push the estimator's R_c down / replanned mu up
+    mx = [r for r in artifact["rows"]
+          if r["name"].startswith("scenarios/matrix/")]
+    assert len(mx) >= 27 and all("excess_risk=" in r["derived"] for r in mx)
+    sr = [r for r in artifact["rows"] if r["name"] == "scenarios/retrace"]
+    assert sr and field(sr[0], "retraces") == 0
+    tv = [r for r in artifact["rows"] if r["name"] == "scenarios/tv_vs_static"]
+    assert tv and field(tv[0], "ratio") <= 2.0
+    lo = [r for r in artifact["rows"] if r["name"] == "scenarios/lossy"]
+    assert lo and field(lo[0], "deterministic") == 1
+    assert field(lo[0], "convergent") == 1
+    gv = [r for r in artifact["rows"] if r["name"] == "scenarios/governor"]
+    assert gv and field(gv[0], "direction") == 1
+    assert field(gv[0], "est_Rc_limited") < field(gv[0], "est_Rc_clean")
+    assert field(gv[0], "mu_limited") > field(gv[0], "mu_clean")

@@ -1,0 +1,418 @@
+"""Scenario-harness tests (core/scenarios.py + the mixing contracts it must
+keep — docs/DESIGN.md §Scenario harness):
+
+* property suite (tests/_prop.py): every topology the registry can produce is
+  doubly stochastic with lambda_2 < 1 at any size; every registered
+  scenario's realized per-round operators stay doubly stochastic and their
+  B-round window products contract (eq. 17 B-connectivity); lossy
+  realizations are the Metropolis reweighting of the surviving graph
+* parity regression: a constant-schedule `ScheduledMixOp` is bit-identical
+  to the static `CirculantMixOp` / `DenseMixOp` on both the Krasulina and
+  the LM superstep
+* determinism: link-drop masks are a pure function of (seed, round, edge) —
+  identical across schedule instances, driver runs, and prefetch depths;
+  `FaultSchedule.parse(str(s)) == s` round-trips the extended DSL
+* statistics: per-node label skew matches its Beta(alpha, alpha) draw; the
+  drifting PCA stream's top eigenvector rotates at the configured rate
+* engine integration: mid-stream topology switches retrace nothing
+  (trace-counted); link-only fault schedules stay on the non-elastic driver
+  path and surface bw_factor / link_drops in the history
+"""
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from _prop import given, settings, st
+
+from repro.configs import get_config, reduced
+from repro.configs.base import (AveragingConfig, GovernorConfig, RunConfig,
+                                ScenarioConfig, SHAPES, StreamConfig)
+from repro.configs.paper_logreg import LogRegConfig
+from repro.configs.paper_pca import FIG7, PCARunConfig
+from repro.core import krasulina, mixing, scenarios
+from repro.core.faults import FaultSchedule, LinkFault
+from repro.data import synthetic
+from repro.data.lm import MarkovTokenStream
+from repro.launch.mesh import make_mesh
+from repro.launch.sharding import activation_rules
+from repro.models.common import mesh_rules
+from repro.train.driver import EngineConfig, StreamingDriver
+from repro.train.trainer import (build_superstep, init_state,
+                                 make_node_batch, replicate_for_nodes)
+
+
+# ---------------------------------------------------------------------------
+# Property suite: operator contracts for everything the registry can produce
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=24, deadline=None)
+@given(st.sampled_from(scenarios.TOPOLOGIES), st.integers(2, 12),
+       st.integers(0, 5))
+def test_topology_operator_contracts(topology, n, seed):
+    A = scenarios.topology_matrix(topology, n, seed=seed)
+    assert A.shape == (n, n)
+    assert np.all(A >= -1e-12)
+    assert mixing.is_doubly_stochastic(A)
+    assert mixing.lambda2(A) < 1.0 - 1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(sorted(scenarios.SCENARIOS)))
+def test_registered_scenario_rounds_doubly_stochastic(name):
+    scn = scenarios.get_scenario(name)
+    for A in scenarios.one_round_matrices(scn):
+        assert np.all(np.asarray(A) >= -1e-12)
+        assert mixing.is_doubly_stochastic(np.asarray(A))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(sorted(scenarios.SCENARIOS)))
+def test_registered_scenario_b_connected(name):
+    """eq. 17: every full-period window product of realized one-round
+    operators contracts — the union graph over the window connects."""
+    scn = scenarios.get_scenario(name)
+    assert scenarios.window_lambda2(scn) < 1.0 - 1e-9
+
+
+def test_tv_schedule_b_connected_at_window_b():
+    """The time-varying schedule is B-connected at B = one topology cycle,
+    not just over the (possibly much longer) link period."""
+    scn = scenarios.get_scenario("tv_rte/clean/iid_pca")
+    assert scenarios.window_lambda2(scn, window=6) < 1.0 - 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 10), st.integers(1, 40))
+def test_lossy_realization_is_metropolis_of_surviving_graph(n, t):
+    """When the drop leaves the graph connected, the realized operator is
+    exactly `metropolis_weights` of the surviving adjacency."""
+    sched = FaultSchedule(n, links=(LinkFault(0, 1, "link", 1, 64, prob=1.0),),
+                          seed=3)
+    A = scenarios.topology_matrix("circulant2", n)
+    got = sched.lossy_matrix(A, t)
+    adj = (A > 0).astype(float)
+    np.fill_diagonal(adj, 0.0)
+    adj[0, 1] = adj[1, 0] = 0.0
+    expect = mixing.metropolis_weights(adj)
+    np.testing.assert_allclose(got, expect, atol=1e-12)
+    assert mixing.is_doubly_stochastic(got)
+
+
+def test_lossy_disconnection_degrades_to_self_weight():
+    """Dropping the only edge of a 2-ring folds its mass onto the diagonal:
+    still doubly stochastic, consensus paused for the round (the B-round
+    window recovers it — eq. 17)."""
+    sched = FaultSchedule(2, links=(LinkFault(0, 1, "link", 1, 8, prob=1.0),),
+                          seed=0)
+    A = scenarios.topology_matrix("ring", 2)
+    got = sched.lossy_matrix(A, 3)
+    np.testing.assert_allclose(got, np.eye(2), atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Parity: constant-schedule ScheduledMixOp == static mix ops, bitwise
+# ---------------------------------------------------------------------------
+
+N = 8
+R = 2
+
+
+def test_scheduled_equals_circulant_on_krasulina_superstep():
+    av = AveragingConfig(mode="gossip", rounds=R, topology="ring")
+    static = mixing.circulant_mix_op(mixing.schedule("ring", N), N, R,
+                                     impl="matmul")
+    sched = mixing.scheduled_mix_op([mixing.schedule("ring", N)], N, R)
+    stepsize = lambda t: 5.0 / t
+    a = krasulina.build_krasulina_superstep(av, N, stepsize, mix=static,
+                                            fuse_xi=False)
+    b = krasulina.build_krasulina_superstep(av, N, stepsize, mix=sched)
+    w0 = jax.random.normal(jax.random.PRNGKey(1), (FIG7.dim,))
+    state = krasulina.init_krasulina_state(w0 / jnp.linalg.norm(w0), av, N)
+    batches = {"z": jax.random.normal(jax.random.PRNGKey(2),
+                                      (3, N, 4, FIG7.dim))}
+    sa, ma = jax.jit(a)(state, batches)
+    sb, mb = jax.jit(b)(state, batches)
+    np.testing.assert_array_equal(np.asarray(sa.w), np.asarray(sb.w))
+    np.testing.assert_array_equal(np.asarray(ma["consensus_err"]),
+                                  np.asarray(mb["consensus_err"]))
+
+
+def test_scheduled_equals_dense_on_krasulina_superstep():
+    av = AveragingConfig(mode="gossip", rounds=R)
+    A = scenarios.topology_matrix("geometric", N, seed=4)
+    static = mixing.dense_mix_op(A, R)
+    sched = mixing.scheduled_mix_op([A], N, R)
+    stepsize = lambda t: 5.0 / t
+    a = krasulina.build_krasulina_superstep(av, N, stepsize, mix=static,
+                                            fuse_xi=False)
+    b = krasulina.build_krasulina_superstep(av, N, stepsize, mix=sched)
+    w0 = jax.random.normal(jax.random.PRNGKey(1), (FIG7.dim,))
+    state = krasulina.init_krasulina_state(w0 / jnp.linalg.norm(w0), av, N)
+    batches = {"z": jax.random.normal(jax.random.PRNGKey(2),
+                                      (3, N, 4, FIG7.dim))}
+    sa, _ = jax.jit(a)(state, batches)
+    sb, _ = jax.jit(b)(state, batches)
+    np.testing.assert_array_equal(np.asarray(sa.w), np.asarray(sb.w))
+
+
+def _lm_run_cfg(rounds=R):
+    cfg = dataclasses.replace(
+        reduced(get_config("granite-8b"), layers=1, d_model=16),
+        vocab_size=32, d_ff=32)
+    return RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                     averaging=AveragingConfig("gossip", rounds),
+                     optimizer="adam", learning_rate=1e-3,
+                     param_dtype="float32", remat=False)
+
+
+def test_scheduled_equals_circulant_on_lm_superstep():
+    run_cfg = _lm_run_cfg()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    n_nodes, K, seq = 4, 2, 16
+    static = mixing.circulant_mix_op(mixing.schedule("ring", n_nodes),
+                                     n_nodes, R, impl="matmul")
+    sched = mixing.scheduled_mix_op([mixing.schedule("ring", n_nodes)],
+                                    n_nodes, R)
+    data = MarkovTokenStream(32, seed=0)
+    rng = np.random.default_rng(0)
+    toks = np.stack([data.sample(rng, 8, seq + 1) for _ in range(K)])
+    batch = make_node_batch({"tokens": jnp.asarray(toks[:, :, :-1]),
+                             "labels": jnp.asarray(toks[:, :, 1:])},
+                            n_nodes, axis=1)
+    with mesh_rules(mesh, activation_rules(mesh, run_cfg.shape,
+                                           node_axis=True)):
+        state0 = replicate_for_nodes(init_state(run_cfg,
+                                                jax.random.PRNGKey(0)),
+                                     n_nodes)
+        sup_a = jax.jit(build_superstep(run_cfg, mesh, n_nodes=n_nodes,
+                                        mix=static)[0])
+        sup_b = jax.jit(build_superstep(run_cfg, mesh, n_nodes=n_nodes,
+                                        mix=sched)[0])
+        sa, ma = sup_a(state0, batch)
+        sb, mb = sup_b(state0, batch)
+    for x, y in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(np.asarray(ma["consensus_err"]),
+                                  np.asarray(mb["consensus_err"]))
+
+
+def test_scheduled_mix_rejects_quantized_lm_config():
+    run_cfg = _lm_run_cfg()
+    run_cfg = dataclasses.replace(
+        run_cfg, averaging=dataclasses.replace(run_cfg.averaging,
+                                               quantization="int8"))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    sched = mixing.scheduled_mix_op([mixing.schedule("ring", 4)], 4, R)
+    with pytest.raises(ValueError, match="linear-only"):
+        build_superstep(run_cfg, mesh, n_nodes=4, mix=sched)
+
+
+# ---------------------------------------------------------------------------
+# Zero retraces: the phase is runtime data
+# ---------------------------------------------------------------------------
+
+
+def test_phase_switch_is_not_a_retrace():
+    scn = scenarios.get_scenario("tv_rte/clean/iid_pca")
+    mix = scenarios.build_mix(scn)
+    traces = []
+
+    @jax.jit
+    def step(x, t):
+        traces.append(1)  # once per trace, not per call
+        return mix(x, t=t)
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (scn.n_nodes, 3))
+    outs = [np.asarray(step(x, jnp.asarray(t))) for t in range(1, 13)]
+    assert len(traces) == 1
+    # the schedule actually varies (ring round vs torus round)...
+    assert not np.array_equal(outs[0], outs[2])
+    # ...and repeats with the period
+    np.testing.assert_array_equal(outs[0], outs[6])
+
+
+def test_scheduled_phase_lookup_matches_schedule():
+    scn = scenarios.get_scenario("tv_rte/clean/iid_pca")
+    mix = scenarios.build_mix(scn)
+    mats = scenarios.one_round_matrices(scn)
+    period = scenarios.scenario_period(scn)
+    assert mix.period == period
+    x = jax.random.normal(jax.random.PRNGKey(3), (scn.n_nodes, 5))
+    for t in range(1, period + 1):
+        want = np.linalg.matrix_power(np.asarray(mats[t % period]),
+                                      scn.rounds) @ np.asarray(x)
+        got = np.asarray(mix(x, t=jnp.asarray(t)))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: counter-based link RNG + DSL round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_link_drops_deterministic_across_instances():
+    spec = "link:0-1@1-40p0.4,link:2-3@1-40p0.4"
+    a = FaultSchedule.parse(spec, 8, seed=5)
+    b = FaultSchedule.parse(spec, 8, seed=5)
+    drops = [a.link_drops(t) for t in range(1, 41)]
+    assert drops == [b.link_drops(t) for t in range(1, 41)]
+    assert any(drops), "p=0.4 over 40 rounds must realize some drop"
+    c = FaultSchedule.parse(spec, 8, seed=6)
+    assert drops != [c.link_drops(t) for t in range(1, 41)], \
+        "a different seed must realize a different drop sequence"
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from([
+    "link:0-1@1-64p0.1",
+    "bw:2-3@5-15x4",
+    "bw:2-3@5x2.5",
+    "death:1@5-12,slow:0@3-9x4,link:0-1@1-64p0.25,bw:1-2@2-9x8",
+    "flaky:2@4p3,link:3-4@1-7p1",
+]), st.integers(0, 3))
+def test_fault_dsl_round_trip(spec, seed):
+    s = FaultSchedule.parse(spec, 8, seed=seed)
+    assert FaultSchedule.parse(str(s), 8, seed=seed) == s
+
+
+def _lossy_driver(prefetch):
+    scn = scenarios.make_scenario("ring", "lossy", "iid_pca", n_nodes=8)
+    stream = scenarios.build_stream(scn)
+    run_cfg = PCARunConfig(pca=FIG7,
+                           averaging=scenarios.averaging_config(scn),
+                           stream=StreamConfig())
+    inner = krasulina.krasulina_superstep_builder(
+        run_cfg.averaging, 8, lambda t: 10.0 / t,
+        mix=scenarios.build_mix(scn))
+    w0 = jax.random.normal(jax.random.PRNGKey(0), (FIG7.dim,))
+    state = krasulina.init_krasulina_state(w0 / jnp.linalg.norm(w0),
+                                           run_cfg.averaging, 8)
+    return StreamingDriver(
+        run_cfg, None, state, stream.sample, superstep_builder=inner,
+        n_nodes=8, batch=16, faults=scenarios.fault_schedule(scn),
+        engine=EngineConfig(superstep=2, prefetch_depth=prefetch,
+                            replan_every=0, warmup_supersteps=0,
+                            warmup_per_bucket=0, governor=GovernorConfig()))
+
+
+def test_lossy_run_bit_identical_across_prefetch_depths():
+    finals = []
+    for prefetch in (0, 2):
+        with _lossy_driver(prefetch) as drv:
+            drv.run(3)
+            finals.append(np.asarray(drv.state.w).copy())
+    np.testing.assert_array_equal(finals[0], finals[1])
+
+
+def test_link_only_faults_stay_non_elastic_and_observable():
+    with _lossy_driver(0) as drv:
+        assert not drv._elastic  # link models never force the elastic path
+        drv.run(2)
+        rec = drv.history[-1]
+        assert rec["bw_factor"] == 1.0  # lossy axis has no bandwidth cap
+        assert "link_drops" in rec
+
+
+# ---------------------------------------------------------------------------
+# Non-IID stream statistics
+# ---------------------------------------------------------------------------
+
+
+def test_skewed_logreg_matches_dirichlet_partition():
+    cfg = LogRegConfig(dim=5, generator="cond_gauss", noise_var=2.0)
+    lr = synthetic.make_skewed_logreg_sampler(cfg, 4, alpha=0.4, seed=1)
+    n = 40_000
+    batch = lr.sample(np.random.default_rng(0), n)
+    y = batch["y"].reshape(4, n // 4)
+    emp = (y > 0).mean(axis=1)
+    np.testing.assert_allclose(emp, lr.node_pos_prob, atol=0.02)
+    # severe skew: the per-node proportions actually differ across nodes
+    assert lr.node_pos_prob.std() > 0.05
+    iid = synthetic.make_skewed_logreg_sampler(cfg, 4, alpha=float("inf"),
+                                               seed=1)
+    np.testing.assert_array_equal(iid.node_pos_prob, np.full(4, 0.5))
+
+
+def test_skewed_logreg_deterministic_and_w_star_shape():
+    cfg = LogRegConfig(dim=5, generator="cond_gauss", noise_var=2.0)
+    a = synthetic.make_skewed_logreg_sampler(cfg, 4, alpha=0.4, seed=1)
+    b = synthetic.make_skewed_logreg_sampler(cfg, 4, alpha=0.4, seed=1)
+    np.testing.assert_array_equal(a.node_pos_prob, b.node_pos_prob)
+    np.testing.assert_array_equal(a.w_star, b.w_star)
+    assert a.w_star.shape == (cfg.dim + 1,)
+    ba = a.sample(np.random.default_rng(3), 64)
+    bb = b.sample(np.random.default_rng(3), 64)
+    np.testing.assert_array_equal(ba["x"], bb["x"])
+    np.testing.assert_array_equal(ba["y"], bb["y"])
+
+
+def test_drifting_pca_rotates_at_configured_rate():
+    rate = 5e-5
+    drift = synthetic.make_drifting_pca_sampler(FIG7, rate=rate)
+    v0 = drift.top_eigvec_at(0)
+    t = 20_000
+    vt = drift.top_eigvec_at(t)
+    # ground-truth clock: the rotation angle is exactly rate * t
+    np.testing.assert_allclose(abs(float(v0 @ vt)), abs(np.cos(rate * t)),
+                               atol=1e-9)
+    # empirical: each drawn batch follows the sampler's internal sample clock
+    rng = np.random.default_rng(0)
+    z0 = drift.sample(rng, t)["z"]  # clock 0 -> t
+    z1 = drift.sample(rng, t)["z"]  # clock t -> 2t
+    for z, expect in ((z0, v0), (z1, vt)):
+        _, vecs = np.linalg.eigh(np.cov(z.T))
+        top = vecs[:, -1]
+        assert abs(float(top @ expect)) > 0.95
+    # the rotation is real: batch 2's top eigenvector left batch 1's
+    _, vecs = np.linalg.eigh(np.cov(z1.T))
+    assert abs(float(vecs[:, -1] @ v0)) < abs(np.cos(rate * t)) + 0.1
+
+
+def test_drift_rate_zero_is_stationary():
+    drift = synthetic.make_drifting_pca_sampler(FIG7, rate=0.0)
+    np.testing.assert_allclose(drift.cov_at(0), drift.cov_at(10_000),
+                               atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_registry_build_is_deterministic():
+    scn = scenarios.get_scenario("ring/lossy/iid_pca")
+    a, b = scenarios.build_mix(scn), scenarios.build_mix(scn)
+    np.testing.assert_array_equal(np.asarray(a.A_stack),
+                                  np.asarray(b.A_stack))
+    np.testing.assert_array_equal(np.asarray(a.phase_by_round),
+                                  np.asarray(b.phase_by_round))
+    reseeded = scenarios.build_mix(dataclasses.replace(scn, seed=9))
+    assert not np.array_equal(np.asarray(a.A_stack),
+                              np.asarray(reseeded.A_stack))
+
+
+def test_scenario_rejects_open_ended_link_fault():
+    scn = ScenarioConfig(name="bad", n_nodes=4, links="link:0-1@5p0.5")
+    with pytest.raises(ValueError, match="bounded window"):
+        scenarios.build_mix(scn)
+
+
+def test_scenario_rejects_node_faults_in_links():
+    scn = ScenarioConfig(name="bad", n_nodes=4, links="death:1@5-12")
+    with pytest.raises(ValueError, match="node faults"):
+        scenarios.build_mix(scn)
+
+
+def test_unknown_scenario_and_axis_coverage():
+    with pytest.raises(KeyError, match="registered"):
+        scenarios.get_scenario("nope")
+    # the benchmark matrix spans >= 3 values per axis
+    assert len(scenarios.TOPOLOGY_AXIS) >= 3
+    assert len(scenarios.LINK_AXIS) >= 3
+    assert len(scenarios.STREAM_AXIS) >= 3
