@@ -28,6 +28,13 @@ Rows:
                  estimator's R_c moves DOWN and the replanned mu moves UP
                  vs the clean cell (eq. 4 re-inverted from measured round
                  times; `core.rates.rate_limited` is the ground truth)
+* lm           -- `scenarios/lm/<topo>/<link>`: one LM cell on the launcher's
+                 `--scenario` path (the token stream stays
+                 `data.lm.MarkovTokenStream`; the scenario contributes the
+                 time-varying mixing schedule + lossy link model through
+                 `trainer.superstep_builder(mix=...)`). CONTRACT: the cell
+                 converges — final loss below the first superstep's — and
+                 consensus error stays finite under the Bernoulli link drops
 
 All contract rows are asserted in quick AND full mode — every run here is
 deterministic (ungoverned plans, seeded samplers, counter-based link drops).
@@ -250,7 +257,71 @@ def _bench_governor_direction(quick: bool) -> None:
                             "mu up", out)
 
 
+def _bench_lm_cell(quick: bool) -> None:
+    """One LM cell under the scenario harness — the launcher's `--scenario`
+    path: reduced `configs/` transformer, `MarkovTokenStream` tokens, the
+    scenario's time-varying `ScheduledMixOp` via `trainer.superstep_builder
+    (mix=...)`, and its lossy link model on the driver's fault schedule."""
+    import dataclasses
+
+    from repro.configs import get_config, reduced
+    from repro.configs.base import RunConfig, SHAPES
+    from repro.data.lm import MarkovTokenStream
+    from repro.launch.mesh import make_mesh
+    from repro.launch.sharding import activation_rules
+    from repro.models.common import mesh_rules
+    from repro.train import trainer
+
+    topo, link = "tv_rte", "lossy"
+    scn = scenarios.make_scenario(topo, link, "iid_pca", n_nodes=N, seed=SEED)
+    model = dataclasses.replace(
+        reduced(get_config("granite-8b"), layers=1, d_model=16),
+        vocab_size=32, d_ff=32)
+    run_cfg = RunConfig(model=model, shape=SHAPES["train_4k"],
+                        averaging=scenarios.averaging_config(scn),
+                        stream=StreamConfig(),
+                        optimizer="adam", learning_rate=1e-3,
+                        param_dtype="float32", remat=False)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    data = MarkovTokenStream(model.vocab_size, seed=SEED)
+    seq = 16
+
+    def sample(rng, n):
+        toks = data.sample(rng, n, seq + 1)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    steps = 4 if quick else 10
+    with mesh_rules(mesh, activation_rules(mesh, run_cfg.shape,
+                                           node_axis=True)):
+        state = trainer.replicate_for_nodes(
+            trainer.init_state(run_cfg, jax.random.PRNGKey(SEED)), N)
+        builder = trainer.superstep_builder(run_cfg, mesh, n_nodes=N,
+                                            mix=scenarios.build_mix(scn))
+        with StreamingDriver(run_cfg, mesh, state, sample,
+                             superstep_builder=builder, n_nodes=N, batch=N * 4,
+                             faults=scenarios.fault_schedule(scn), seed=SEED,
+                             engine=EngineConfig(superstep=K, prefetch_depth=0,
+                                                 replan_every=0,
+                                                 warmup_supersteps=0,
+                                                 warmup_per_bucket=0,
+                                                 governor=GovernorConfig())) as drv:
+            t0 = time.perf_counter()
+            drv.run(steps)
+            wall = time.perf_counter() - t0
+            first = drv.history[0]["metrics"]["loss"]
+            last = drv.history[-1]["metrics"]["loss"]
+            cons = drv.history[-1]["metrics"]["consensus_err"]
+    convergent = int(last < first)
+    emit(f"scenarios/lm/{topo}/{link}", wall / (steps * K) * 1e6,
+         f"loss={last:.4f};first_loss={first:.4f};"
+         f"convergent={convergent};consensus_err={cons:.3e};"
+         f"rounds={steps * K};vocab={model.vocab_size};seq={seq}")
+    assert convergent, ("LM scenario cell did not converge", first, last)
+    assert np.isfinite(cons), cons
+
+
 def run(quick: bool = False) -> None:
     cells = _bench_matrix(quick)
     _bench_contracts(cells, quick)
     _bench_governor_direction(quick)
+    _bench_lm_cell(quick)

@@ -22,7 +22,7 @@ def main() -> None:
                     help="comma-separated subset: "
                          "rates,dmb,krasulina,dsgd,consensus,kernels,pipeline,"
                          "governor,elastic,scenarios,serve,checkpoint,"
-                         "roofline")
+                         "lm_decentralized,roofline")
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode: tiny shapes, no paper-regime asserts")
     ap.add_argument("--json", default="", metavar="OUT",
@@ -31,7 +31,8 @@ def main() -> None:
 
     from benchmarks import (bench_checkpoint, bench_consensus, bench_dmb,
                             bench_dsgd, bench_elastic, bench_governor,
-                            bench_kernels, bench_krasulina, bench_pipeline,
+                            bench_kernels, bench_krasulina,
+                            bench_lm_decentralized, bench_pipeline,
                             bench_rates, bench_roofline, bench_scenarios,
                             bench_serve, common)
 
@@ -48,6 +49,7 @@ def main() -> None:
         "scenarios": bench_scenarios.run,  # topology x link x stream matrix
         "serve": bench_serve.run,       # train-to-serve closed loop
         "checkpoint": bench_checkpoint.run,  # async snapshot / kill-resume
+        "lm_decentralized": bench_lm_decentralized.run,  # sharded gossip + EF
         "roofline": bench_roofline.run,  # deliverable (g)
     }
     chosen = [s.strip() for s in args.only.split(",") if s.strip()] or list(suites)

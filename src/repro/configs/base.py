@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Model configs
@@ -227,12 +227,33 @@ class AveragingConfig:
     # mixing operator runs once per step instead of once per leaf
     # (core.packing); per-leaf fallback when off. Quantized stats="global"
     # always takes the per-leaf oracle path (bit-identity contract).
-    packed: bool = True
+    # Tri-state: "auto" (default) packs everywhere EXCEPT layouts whose
+    # param leaves are actually sharded over a model axis — numeric parity
+    # under a model split is test-covered, but the pack's relayout cost on a
+    # real mesh is un-profiled (ROADMAP real-TPU debt), so those layouts opt
+    # in explicitly with True. The trainer resolves this against its mesh
+    # via `core.averaging.resolve_packed`; direct `core.averaging` callers
+    # see "auto" as on (truthy).
+    packed: Any = "auto"  # "auto" | True | False
     # quantizer statistic granularity: global (exact per-round oracle) |
     # segment (per-leaf scales on the packed buffer) | tile (fused kernel,
-    # per-[N, quant_block_d]-tile scales computed in-register)
+    # per-[N, quant_block_d]-tile scales computed in-register) | node
+    # (sender-local per-[1, quant_block_d] row-tile scales — the only
+    # granularity whose wire values survive a node-axis device split, so the
+    # shard_map gossip kernels require it)
     quant_stats: str = "global"
     quant_block_d: int = 512
+    # error-feedback compressed gossip, see
+    # docs/DESIGN.md §Decentralized LM track: "off" | "grads". With
+    # "grads", the compressor runs ONCE per
+    # step on v = grad + residual (sender-local per-node tile statistics),
+    # the R consensus rounds mix the compressed values with the exact LINEAR
+    # operator (so the composed-roll / matmul / shard_map implementations
+    # apply under compression), and the residual v - C(v) is carried per node
+    # in `OptState.ef_residual` — compression error stays in optimizer state
+    # instead of accumulating as iterate bias under momentum. Gossip mode
+    # only.
+    error_feedback: str = "off"
 
 
 @dataclass(frozen=True)

@@ -39,6 +39,7 @@ from repro.configs.base import AveragingConfig
 from repro.core import packing
 from repro.core.mixing import (CirculantMixOp, ScheduledMixOp,
                                circulant_mix_op, schedule)
+from repro.core.quantize import tile_compress
 
 Tree = Any
 # the consensus engine: a static CirculantMixOp or a time-varying
@@ -60,10 +61,32 @@ def make_gossip_mix(cfg: AveragingConfig, n_nodes: int, *,
     run under so sharded layouts are detected; without it, multi-device
     hosts conservatively get "roll"."""
     sched = schedule(cfg.topology, n_nodes, cfg.self_weight)
+    quantization = cfg.quantization
+    if cfg.error_feedback != "off":
+        # error feedback compresses ONCE per step outside the operator
+        # (`ef_average_and_error`); the consensus rounds themselves are exact
+        # and linear, so the composed/fused/shard implementations all apply
+        # to compressed gossip — the per-round nonlinear chain is bypassed
+        quantization = "none"
     return circulant_mix_op(sched, n_nodes, cfg.rounds,
-                            quantization=cfg.quantization, impl=impl,
+                            quantization=quantization, impl=impl,
                             mesh=mesh, stats=cfg.quant_stats,
                             block_d=cfg.quant_block_d)
+
+
+def resolve_packed(cfg: AveragingConfig, mesh: Any = None) -> bool:
+    """Resolve the tri-state `AveragingConfig.packed` against the layout the
+    step runs under. "auto" (the default) packs everywhere EXCEPT layouts
+    whose param leaves are actually sharded over a model axis: the pack
+    relayouts every leaf into one [N, D] buffer, which is numerically
+    parity-tested under a model split (tests/test_shard_gossip.py) but whose
+    all-gather cost on a real mesh is un-profiled (ROADMAP real-TPU debt) —
+    model-parallel layouts opt in explicitly with `packed=True`."""
+    if cfg.packed == "auto":
+        if mesh is None:
+            return True
+        return int(mesh.shape.get("model", 1)) == 1
+    return bool(cfg.packed)
 
 
 def _packable(mix: MixOp) -> bool:
@@ -216,6 +239,61 @@ def average_and_error(tree: Tree, cfg: AveragingConfig, *, n_nodes: int,
                      for b in bufs)
     err = _packed_consensus_error(outs, spec)
     return packing.unpack_tree(outs, spec), err
+
+
+def ef_average_and_error(tree: Tree, ef: Tree, cfg: AveragingConfig, *,
+                         n_nodes: int, mix: Optional[MixOp] = None,
+                         key: Any = None, t: Any = None
+                         ) -> Tuple[Tree, Tree, jax.Array, jax.Array, jax.Array]:
+    """Error-feedback compressed gossip: ONE pack, ONE compression, exact
+    linear consensus rounds (docs/DESIGN.md §Decentralized LM track).
+
+    Per step, on the packed [N, D] buffers: v = g + e (residual-corrected
+    gradient), q = C(v) with sender-local per-node tile statistics
+    (`quantize.tile_compress(per_node=True)` — the granularity the shard_map
+    wire uses), mixed = the R-round LINEAR consensus of q, e' = v - q. The
+    compressor runs once OUTSIDE the mixing operator, so the rounds keep the
+    composed-roll / matmul / shard_map fast paths that per-round quantized
+    chains forfeit, and the compression error is carried in the optimizer
+    state (`OptState.ef_residual`) instead of accumulating as iterate bias
+    under momentum.
+
+    With `cfg.quantization == "none"` the wire is exact: q = v, e' stays
+    zero, and the result equals plain packed linear gossip of g + e.
+
+    Returns (mixed, new_ef, consensus_err, ef_norm, ef_rel): `ef_norm` is
+    the global L2 norm of the new residual, `ef_rel` its ratio to ||v||.
+    """
+    if mix is None:
+        mix = make_gossip_mix(cfg, n_nodes)
+    if getattr(mix, "quantization", "none") != "none":
+        raise ValueError(
+            "error feedback needs a LINEAR consensus operator — build it via "
+            "make_gossip_mix, which drops the per-round compressor when "
+            "cfg.error_feedback is on")
+    bufs, spec = packing.pack_tree(tree)
+    ebufs, espec = packing.pack_tree(ef)
+    outs, res = [], []
+    v2 = jnp.zeros((), jnp.float32)
+    e2 = jnp.zeros((), jnp.float32)
+    for g, (b, e) in enumerate(zip(bufs, ebufs)):
+        v = b.astype(jnp.float32) + e.astype(jnp.float32)
+        if cfg.quantization == "none" or b.shape[-1] == 0:
+            q = v
+        else:
+            k = jax.random.fold_in(key, g) if key is not None else None
+            q = tile_compress(v, cfg.quantization, cfg.quant_block_d,
+                              key=k, per_node=True)
+        outs.append(_mix_call(mix, q, key=None, t=t).astype(b.dtype))
+        r = v - q
+        res.append(r.astype(e.dtype))
+        v2 = v2 + jnp.sum(v * v)
+        e2 = e2 + jnp.sum(r.astype(jnp.float32) ** 2)
+    err = _packed_consensus_error(tuple(outs), spec)
+    ef_norm = jnp.sqrt(e2)
+    ef_rel = ef_norm / (jnp.sqrt(v2) + 1e-30)
+    return (packing.unpack_tree(tuple(outs), spec),
+            packing.unpack_tree(tuple(res), espec), err, ef_norm, ef_rel)
 
 
 def _packed_consensus_error(bufs: Tuple[jax.Array, ...],

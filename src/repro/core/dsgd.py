@@ -15,6 +15,8 @@ in place instead of re-allocating it every step.
 """
 from __future__ import annotations
 
+import functools
+import warnings
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -43,13 +45,30 @@ def consensus(h: jax.Array, A: jax.Array, rounds: int) -> jax.Array:
     return h
 
 
+@functools.lru_cache(maxsize=None)
+def donation_supported() -> bool:
+    """Probe (once per process) whether the pinned jax/backend actually
+    honors `donate_argnums`: compile a tiny donated step and check that the
+    input buffer is consumed WITHOUT the "donated buffers were not usable"
+    warning. The support matrix has moved across jax releases (CPU donation
+    used to be a warn-and-ignore no-op; the pinned PJRT CPU client implements
+    it), so detect instead of hard-coding a backend list."""
+    f = jax.jit(lambda a: a + 1.0, donate_argnums=0)
+    x = jnp.zeros((8,), jnp.float32)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        jax.block_until_ready(f(x))
+    unusable = any("donated" in str(w.message).lower() for w in caught)
+    return bool(x.is_deleted() and not unusable)
+
+
 def jit_driver(fn: Callable) -> Callable:
     """Top-level jit for a scan driver `fn(init, ts)`, donating the carry
-    buffers where the backend supports it (CPU does not — donating there only
-    emits warnings). Compiles per driver invocation (the closure is fresh each
-    call) — same as the pre-jit tracing cost; the win is in-place [N, d] state
-    updates across the steps *within* a run."""
-    donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+    buffers where the backend supports it (feature-detected — see
+    `donation_supported`). Compiles per driver invocation (the closure is
+    fresh each call) — same as the pre-jit tracing cost; the win is in-place
+    [N, d] state updates across the steps *within* a run."""
+    donate = (0,) if donation_supported() else ()
     return jax.jit(fn, donate_argnums=donate)
 
 

@@ -412,20 +412,30 @@ class CirculantMixOp:
     schedule) is applied in ONE weighted-shift pass, replacing the
     (deg+1)*R-roll per-step loop. `impl` selects the execution strategy:
 
-    * "roll"   — one `jnp.roll` pass over `fused_sched` (sharding-friendly:
-                 lowers to collective-permute on TPU meshes).
+    * "roll"   — one `jnp.roll` pass over `fused_sched` (sharding-safe: GSPMD
+                 lowers the rolls to collective-permutes, but the wraparound
+                 concat defeats fusion — every term pays a full local pass).
     * "matmul" — apply the dense circulant `A_eff` [n, n] as one matmul over
                  the flattened node axis (fastest single-host XLA path, but
                  gathers a sharded node axis — unsharded layouts only).
     * "kernel" — Pallas TPU kernel: the node block is tiled into VMEM once and
                  all R rounds run in-register (one HBM read+write per leaf).
                  Single-device arrays only (no GSPMD partitioning rule).
+    * "shard"  — explicit shard_map partitioning rule over a sharded node
+                 axis (`kernels.consensus.gossip_mix_shard`): per round, halo
+                 ppermutes exchange only the rows the schedule reaches and
+                 the local tile mix is a fused slice-sum (no wraparound).
+                 PER-ROUND semantics — bit-identical to the fuse=False
+                 oracle, unlike the composed single-pass impls. Requires the
+                 `mesh` field; layouts the rule does not cover fall back to
+                 "roll" at call time.
     * "auto"   — resolved at build time by `circulant_mix_op` via
                  `resolve_auto_impl(mesh)`: the fast path ("matmul" on
                  CPU/GPU, "kernel" on TPU) when the node axis is provably
-                 unsharded, "roll" otherwise. An op constructed with a
-                 literal impl="auto" (bypassing the factory) falls back to
-                 "roll" at call time — always safe.
+                 unsharded, "shard" when the mesh reports it sharded and the
+                 partitioning rule covers the layout, "roll" otherwise. An op
+                 constructed with a literal impl="auto" (bypassing the
+                 factory) falls back to "roll" at call time — always safe.
 
     Quantization on: the compressor is nonlinear, so the operator is never
     collapsed. `stats` picks the statistic granularity: "global" keeps the
@@ -434,10 +444,14 @@ class CirculantMixOp:
     (pass the static `seg_widths` at call time); "tile" executes the fused
     quantized path — the Pallas kernel on TPU (one HBM read+write per buffer,
     all R rounds and the per-tile scales in-register), the single-dispatch XLA
-    tile chain elsewhere.
+    tile chain elsewhere; "node" computes sender-local per-row-tile scales —
+    the statistic a real sender derives from its own message alone, and the
+    only granularity whose wire values are invariant under a node-axis device
+    split, so it is the granularity the sharded quantized rule
+    (impl="shard") executes bit-identically.
     """
 
-    sched: Schedule  # one-round schedule (per-round / kernel path)
+    sched: Schedule  # one-round schedule (per-round / kernel / shard path)
     fused_sched: Optional[Schedule]  # R-round schedule; None = per-round loop
     #   (quantized configs, or fuse=False in `circulant_mix_op`)
     A_eff: Any  # [n, n] dense form of fused_sched (matmul impl), or None
@@ -445,9 +459,10 @@ class CirculantMixOp:
     rounds: int
     quantization: str = "none"
     impl: str = "auto"
-    stats: str = "global"  # quantizer statistics: global | segment | tile
-    block_d: int = 512  # tile width for stats="tile"
+    stats: str = "global"  # quantizer statistics: global | segment | tile | node
+    block_d: int = 512  # tile width for stats="tile" / "node"
     seed: int = 0  # threefry base for stochastic compressors
+    mesh: Any = None  # jax Mesh for impl="shard" (static aux; hashable)
 
     def __call__(self, x: jax.Array, *, seg_widths: Optional[Tuple[int, ...]] = None,
                  valid_d: Optional[int] = None, key: Any = None) -> jax.Array:
@@ -457,11 +472,18 @@ class CirculantMixOp:
             return x
         if self.quantization != "none":
             return self._quantized(x, seg_widths, valid_d, key)
+        impl = "roll" if self.impl == "auto" else self.impl
+        if impl == "shard":
+            shard = self._shard_info()
+            if shard is not None:
+                from repro.kernels.ops import sharded_gossip_mix
+                return sharded_gossip_mix(x, self.sched, self.rounds,
+                                          self.mesh, *shard)
+            impl = "roll"  # layout not covered: sharding-safe fallback
         if self.fused_sched is None:  # fuse=False: per-round oracle loop
             for _ in range(self.rounds):
                 x = roll_mix(x, self.sched, _identity)
             return x
-        impl = "roll" if self.impl == "auto" else self.impl
         if impl == "kernel":
             # an explicit "kernel" choice means the Pallas kernel — interpret
             # mode off-TPU, per the documented fallback
@@ -475,6 +497,12 @@ class CirculantMixOp:
             raise ValueError(f"unknown MixOp impl {self.impl!r}")
         return roll_mix(x, self.fused_sched, _identity)
 
+    def _shard_info(self):
+        """(node_axes, ring_axis) when the shard partitioning rule covers this
+        (mesh, n, schedule) — None forces the call-time roll fallback."""
+        from repro.kernels.ops import node_shard_info
+        return node_shard_info(self.mesh, self.n, self.sched)
+
     def _quantized(self, x, seg_widths, valid_d, key=None):
         """Per-round nonlinear consensus. `valid_d` marks trailing flattened
         columns as padding (masked out of compressor statistics — they must be
@@ -487,6 +515,20 @@ class CirculantMixOp:
         key0 = None
         if self.quantization in STOCHASTIC:
             key0 = jax.random.PRNGKey(self.seed) if key is None else key
+        if self.stats == "node":
+            # sender-local row-tile scales: shard-invariant wire values, so
+            # the sharded rule and the XLA chain are bit-identical (sign/int8)
+            impl = "roll" if self.impl == "auto" else self.impl
+            shard = self._shard_info() if impl == "shard" else None
+            if shard is not None:
+                from repro.kernels.ops import sharded_quant_gossip_mix
+                return sharded_quant_gossip_mix(
+                    x, self.sched, self.rounds, self.quantization, self.mesh,
+                    *shard, block_d=self.block_d, valid_d=valid_d, key=key0)
+            from repro.kernels.ops import quant_gossip_mix
+            return quant_gossip_mix(x, self.sched, self.rounds,
+                                    self.quantization, block_d=self.block_d,
+                                    valid_d=valid_d, key=key0, per_node=True)
         if self.stats == "tile":
             from repro.kernels.ops import quant_gossip_mix
             return quant_gossip_mix(x, self.sched, self.rounds,
@@ -521,7 +563,7 @@ class CirculantMixOp:
     def tree_flatten(self):
         return (self.A_eff,), (self.sched, self.fused_sched, self.n,
                                self.rounds, self.quantization, self.impl,
-                               self.stats, self.block_d, self.seed)
+                               self.stats, self.block_d, self.seed, self.mesh)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -532,11 +574,13 @@ def resolve_auto_impl(mesh: Any = None) -> str:
     """Pick the fastest *safe* execution strategy for `impl="auto"`.
 
     The node axis is sharded over the mesh's data axes in the trainer layout,
-    so any nontrivial data extent forces "roll" (the only impl with a
-    GSPMD partitioning rule: weighted rolls lower to collective-permute
-    chains). On an unsharded node axis the dense circulant matmul is the
-    3-10x fast path on CPU/GPU; on TPU the fused Pallas kernel is, but only
-    for genuinely single-device arrays (it has no partitioning rule at all).
+    so any nontrivial data extent picks "shard" — the explicit shard_map
+    partitioning rule (per-round halo ppermutes + fused slice-sum tile
+    mixing, `kernels.consensus`); `circulant_mix_op` downgrades it to the
+    "roll" fallback when the rule does not cover the (n, schedule, split).
+    On an unsharded node axis the dense circulant matmul is the 3-10x fast
+    path on CPU/GPU; on TPU the fused Pallas kernel is, but only for
+    genuinely single-device arrays (it has no partitioning rule at all).
     With no mesh information and multiple local devices the layout is
     unknowable at build time, so "auto" stays conservative."""
     if mesh is not None:
@@ -545,7 +589,7 @@ def resolve_auto_impl(mesh: Any = None) -> str:
             if a in ("pod", "data"):
                 node_extent *= mesh.shape[a]
         if node_extent > 1:
-            return "roll"  # node axis sharded
+            return "shard"  # node axis sharded: explicit partitioning rule
         single_device = mesh.devices.size == 1
     else:
         single_device = jax.device_count() == 1
@@ -575,19 +619,29 @@ def circulant_mix_op(sched: Schedule, n: int, rounds: int, *,
 
     `impl="auto"` resolves at build time via `resolve_auto_impl(mesh)`:
     "matmul" (CPU/GPU) or the Pallas "kernel" (TPU) on unsharded
-    single-device layouts, "roll" whenever the node axis is (or may be)
-    sharded."""
-    if impl not in ("auto", "roll", "matmul", "kernel"):
+    single-device layouts, the explicit "shard" partitioning rule when the
+    mesh reports the node axis sharded (downgraded here to "roll" when the
+    rule does not cover the (n, schedule, split)), "roll" whenever the
+    layout is unknowable. The "shard" impl keeps PER-ROUND semantics
+    (bit-identical to fuse=False), so it carries no fused schedule and any
+    call-time fallback stays on the per-round oracle loop."""
+    if impl not in ("auto", "roll", "matmul", "kernel", "shard"):
         raise ValueError(f"unknown MixOp impl {impl!r}")
-    if stats not in ("global", "segment", "tile"):
+    if stats not in ("global", "segment", "tile", "node"):
         raise ValueError(f"unknown quantizer stats mode {stats!r}")
     if quantization not in COMPRESSORS:
         raise ValueError(f"unknown quantization {quantization!r}")
     if impl == "auto":
         impl = resolve_auto_impl(mesh)
-    if quantization != "none" or not fuse:
+    if impl == "shard":
+        from repro.kernels.ops import node_shard_info
+        if node_shard_info(mesh, n, sched) is None:
+            impl, mesh = "roll", None  # rule doesn't cover this layout
+    if impl != "shard":
+        mesh = None  # mesh only rides the op for the shard rule (static aux)
+    if quantization != "none" or not fuse or impl == "shard":
         return CirculantMixOp(sched, None, None, n, rounds, quantization, impl,
-                              stats, block_d, seed)
+                              stats, block_d, seed, mesh)
     fused = compose_schedule(sched, rounds, n) if rounds > 0 else ((0, 1.0),)
     # the dense [n, n] operator is only needed by the matmul impl; the others
     # skip the O(n^2) build and the device pin. Kept as host numpy — it
@@ -595,7 +649,7 @@ def circulant_mix_op(sched: Schedule, n: int, rounds: int, *,
     A_eff = (np.asarray(schedule_matrix(fused, n), np.float32)
              if impl == "matmul" else None)
     return CirculantMixOp(sched, fused, A_eff, n, rounds, quantization, impl,
-                          stats, block_d, seed)
+                          stats, block_d, seed, mesh)
 
 
 # ---------------------------------------------------------------------------

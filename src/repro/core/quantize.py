@@ -155,7 +155,8 @@ def tile_valid_counts(d: int, block_d: int, valid_d: Optional[int] = None
 
 
 def tile_compress(x: jax.Array, name: str, block_d: int, *,
-                  valid_d: Optional[int] = None, key=None) -> jax.Array:
+                  valid_d: Optional[int] = None, key=None,
+                  per_node: bool = False) -> jax.Array:
     """Quantize x: [n, D] with one scale per [n, block_d] column tile.
 
     Matches `kernels.consensus.gossip_mix_quant_pallas` statistics: f32
@@ -163,7 +164,13 @@ def tile_compress(x: jax.Array, name: str, block_d: int, *,
     every statistic. Pad columns are REQUIRED to be zero (both pad sources —
     kernel tiling and the hierarchical reduce-scatter — zero-fill), which is
     what lets the statistics use plain contiguous reductions with static
-    counts instead of runtime masks. Output dtype follows x."""
+    counts instead of runtime masks. Output dtype follows x.
+
+    `per_node=True` keeps the node axis out of the statistic: one scale per
+    [1, block_d] row tile — the statistic a real sender computes from its own
+    message alone, and the only granularity whose wire values are invariant
+    under a node-axis device split (`kernels.consensus.gossip_mix_quant_shard`
+    computes it shard-locally, bit-identical to this form)."""
     n, d = x.shape
     bd = min(block_d, d)
     tiles = -(-d // bd)
@@ -176,22 +183,24 @@ def tile_compress(x: jax.Array, name: str, block_d: int, *,
     # reduce the contiguous lane axis FIRST, then the tiny remainder — XLA
     # CPU reduces strided leading axes an order of magnitude slower
     if name == "sign":
+        rows = 1 if per_node else n
         cnt = jnp.asarray(
-            np.maximum(tile_valid_counts(d, block_d, valid_d) * n, 1),
+            np.maximum(tile_valid_counts(d, block_d, valid_d) * rows, 1),
             jnp.float32)
-        scale = a.sum(2).sum(0) / cnt  # [tiles]
-        out = jnp.sign(xt) * scale[None, :, None]
+        s = a.sum(2)  # [n, tiles]
+        scale = s / cnt if per_node else s.sum(0)[None] / cnt  # [n|1, tiles]
+        out = jnp.sign(xt) * scale[:, :, None]
     else:
-        amax = a.max(2).max(0)  # [tiles]
+        amax = a.max(2) if per_node else a.max(2).max(0)[None]  # [n|1, tiles]
         scale = jnp.maximum(amax, _EPS) / 127.0
-        v = xt / scale[None, :, None]
+        v = xt / scale[:, :, None]
         if name == "int8":
-            out = jnp.clip(jnp.round(v), -127, 127) * scale[None, :, None]
+            out = jnp.clip(jnp.round(v), -127, 127) * scale[:, :, None]
         elif name == "int8_stoch":
             if key is None:
                 key = jax.random.PRNGKey(_DEFAULT_SEED)
             u = jax.random.uniform(key, v.shape, dtype=jnp.float32)
-            out = jnp.clip(jnp.floor(v + u), -127, 127) * scale[None, :, None]
+            out = jnp.clip(jnp.floor(v + u), -127, 127) * scale[:, :, None]
         else:
             raise ValueError(f"unknown compressor {name!r}")
     out = out.reshape(n, tiles * bd)

@@ -155,3 +155,161 @@ def gossip_mix_quant_pallas(x: jax.Array, shifts: Tuple[int, ...],
     if pad:
         out = out[:, :d]
     return out.reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# shard_map partitioning rules (sharded node axis)
+#
+# GSPMD has no good partition for the circular-shift form: `jnp.roll` on a
+# sharded axis lowers to a collective-permute plus a wraparound concat that
+# XLA cannot fuse into the weighted sum, so every schedule term pays a full
+# pass over the local shard. These rules partition the gossip explicitly:
+# each round exchanges only the halo rows the schedule reaches (a
+# `lax.ppermute` ring, one hop per n_local rows of reach), builds a
+# halo-extended local tile, and applies the round as a weighted sum of
+# *contiguous slices* — no wraparound, so XLA fuses the whole round into one
+# pass over the tile. Per-round semantics are preserved (bit-identical to
+# `ref.gossip_mix_ref`), which is exactly the form the quantized wire path
+# requires. The local slice-sum is the kernel's tile mixing restricted to a
+# shard; on real TPU the same extended-tile form is the candidate body for a
+# per-shard `pallas_call` (ROADMAP: real-TPU validation debt).
+# ---------------------------------------------------------------------------
+
+
+def centered_shift(s: int, n: int) -> int:
+    """Canonical shift representative in (-n/2, n/2]."""
+    s = s % n
+    return s if s <= n // 2 else s - n
+
+
+def halo_reach(sched, n: int) -> Tuple[int, int]:
+    """(rows needed from preceding shards, rows from following shards) for one
+    round of `sched` on an [n, ...] buffer: roll by +s pulls rows from s above."""
+    up = max((centered_shift(s, n) for s, _ in sched
+              if centered_shift(s, n) > 0), default=0)
+    down = max((-centered_shift(s, n) for s, _ in sched
+                if centered_shift(s, n) < 0), default=0)
+    return up, down
+
+
+def _gather_halo(h, reach: int, axis, extent: int, n_local: int, up: bool):
+    """Collect `reach` boundary rows from ring neighbors, one whole-tile hop
+    per n_local rows (ceil(reach / n_local) ppermutes)."""
+    rows = []
+    need, hop = reach, 1
+    while need > 0:
+        take = min(need, n_local)
+        if up:  # rows preceding this shard: tail rows of device i-hop
+            rows.insert(0, jax.lax.ppermute(
+                h[n_local - take:], axis,
+                [(i, (i + hop) % extent) for i in range(extent)]))
+        else:   # rows following: head rows of device i+hop
+            rows.append(jax.lax.ppermute(
+                h[:take], axis,
+                [(i, (i - hop) % extent) for i in range(extent)]))
+        need -= take
+        hop += 1
+    return rows
+
+
+def _ext_tile(h, ru: int, rd: int, axis, extent: int, n_local: int):
+    up = _gather_halo(h, ru, axis, extent, n_local, up=True)
+    dn = _gather_halo(h, rd, axis, extent, n_local, up=False)
+    return jnp.concatenate(up + [h] + dn, axis=0) if (up or dn) else h
+
+
+def _slice_round(ext, sched, n: int, ru: int, n_local: int, self_term=None):
+    """One gossip round as a weighted sum of contiguous row slices of the
+    halo-extended tile. `self_term` (optional) substitutes the s==0 source —
+    the quantized wire keeps the resident tile uncompressed for itself."""
+    acc = None
+    for s, w in sched:
+        sc = centered_shift(s, n)
+        if sc == 0 and self_term is not None:
+            t = w * self_term
+        else:
+            t = w * jax.lax.slice_in_dim(ext, ru - sc, ru - sc + n_local, axis=0)
+        acc = t if acc is None else acc + t
+    return acc
+
+
+def shard_compatible(sched, n: int, extent: int) -> bool:
+    """True when the halo rules cover this (schedule, split): even row tiles
+    and a one-round reach that neighbors can serve without wrapping onto the
+    resident shard."""
+    if extent <= 1 or n % extent:
+        return False
+    ru, rd = halo_reach(sched, n)
+    return ru + rd <= n - n // extent
+
+
+def gossip_mix_shard(x: jax.Array, sched, rounds: int, mesh,
+                     node_axes: Tuple[str, ...], axis: str) -> jax.Array:
+    """R rounds of circulant gossip over a node axis sharded across
+    `node_axes` of `mesh` (`axis`: the single nontrivial one the ppermute ring
+    runs over). Per-round halo exchange + fused local slice-sum; bit-identical
+    to `ref.gossip_mix_ref`."""
+    from jax.experimental import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n = x.shape[0]
+    extent = int(mesh.shape[axis])
+    n_local = n // extent
+    sched = tuple(sched)
+    ru, rd = halo_reach(sched, n)
+
+    def local(h):
+        shape = h.shape
+        h = h.reshape(n_local, -1)
+        for _ in range(rounds):
+            ext = _ext_tile(h, ru, rd, axis, extent, n_local)
+            h = _slice_round(ext, sched, n, ru, n_local)
+        return h.reshape(shape)
+
+    spec = P(node_axes, *([None] * (x.ndim - 1)))
+    return shard_map.shard_map(local, mesh=mesh, in_specs=spec,
+                               out_specs=spec)(x)
+
+
+def gossip_mix_quant_shard(x: jax.Array, sched, rounds: int, quant: str,
+                           mesh, node_axes: Tuple[str, ...], axis: str, *,
+                           block_d: int = 512, valid_d: int = -1,
+                           key=None) -> jax.Array:
+    """Quantized per-round gossip on a sharded node axis with **per-node**
+    tile statistics (`core.quantize.tile_compress(per_node=True)`): each node
+    scales its outgoing message from its own rows — the statistic a real
+    sender can compute locally — so the compressed wire values are invariant
+    under the device split and the sharded path matches the unsharded
+    `stats="node"` oracle (`ref.gossip_mix_quant_ref(per_node=True)`) — wire
+    values bit-identically, the weighted sum to f32 round-off (program
+    layouts associate the accumulation differently).
+    Stochastic compressors fold the shard index into the key (deterministic,
+    but layout-dependent noise — sign/int8 are layout-invariant)."""
+    from repro.core.quantize import STOCHASTIC, tile_compress
+    from jax.experimental import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n = x.shape[0]
+    extent = int(mesh.shape[axis])
+    n_local = n // extent
+    sched = tuple(sched)
+    ru, rd = halo_reach(sched, n)
+    dv = None if valid_d is None or valid_d < 0 else valid_d
+
+    def local(h):
+        shape = h.shape
+        h = h.reshape(n_local, -1).astype(jnp.float32)
+        k0 = key
+        if quant in STOCHASTIC and k0 is not None:
+            k0 = jax.random.fold_in(k0, jax.lax.axis_index(axis))
+        for r in range(rounds):
+            k = jax.random.fold_in(k0, r) if k0 is not None else None
+            q = tile_compress(h, quant, block_d, valid_d=dv, key=k,
+                              per_node=True)
+            ext = _ext_tile(q, ru, rd, axis, extent, n_local)
+            h = _slice_round(ext, sched, n, ru, n_local, self_term=h)
+        return h.reshape(shape).astype(x.dtype)
+
+    spec = P(node_axes, *([None] * (x.ndim - 1)))
+    return shard_map.shard_map(local, mesh=mesh, in_specs=spec,
+                               out_specs=spec)(x)

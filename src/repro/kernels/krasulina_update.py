@@ -168,3 +168,46 @@ def krasulina_xi_gossip_pallas(w: jax.Array, z: jax.Array,
         interpret=interpret,
     )(w, z)
     return out[:, :d] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# shard_map partitioning rule (sharded node axis)
+# ---------------------------------------------------------------------------
+
+
+def krasulina_xi_gossip_shard(w: jax.Array, z: jax.Array, sched, rounds: int,
+                              mesh, node_axes: Tuple[str, ...],
+                              axis: str) -> jax.Array:
+    """Fused xi + R-round gossip over a node axis sharded across `node_axes`
+    of `mesh` (`axis`: the nontrivial one the ppermute ring runs over).
+
+    The xi pass (Alg. 2 step 4) is node-local — each shard computes its own
+    rows' pseudo-gradients without any exchange — and only the consensus
+    rounds communicate, as per-round halo ppermutes + fused slice-sum tile
+    mixing (`kernels.consensus` shard rules). Matches the strict per-round
+    oracle `ref.gossip_mix_ref(vmap(ref.krasulina_xi_ref), ...)` to f32
+    round-off (xi itself is shard-invariant bitwise).
+    w: [n, d], z: [n, B, d], both sharded on the node axis."""
+    from jax.experimental import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels import ref
+    from repro.kernels.consensus import _ext_tile, _slice_round, halo_reach
+
+    n = w.shape[0]
+    extent = int(mesh.shape[axis])
+    n_local = n // extent
+    sched = tuple(sched)
+    ru, rd = halo_reach(sched, n)
+
+    def local(w_l, z_l):
+        h = jax.vmap(ref.krasulina_xi_ref)(w_l, z_l)  # [n_local, d], no comms
+        for _ in range(rounds):
+            ext = _ext_tile(h, ru, rd, axis, extent, n_local)
+            h = _slice_round(ext, sched, n, ru, n_local)
+        return h
+
+    wspec = P(node_axes, None)
+    zspec = P(node_axes, None, None)
+    return shard_map.shard_map(local, mesh=mesh, in_specs=(wspec, zspec),
+                               out_specs=wspec)(w, z)

@@ -10,14 +10,39 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.consensus import gossip_mix_pallas, gossip_mix_quant_pallas
+from repro.kernels.consensus import (gossip_mix_pallas, gossip_mix_quant_pallas,
+                                     gossip_mix_quant_shard, gossip_mix_shard,
+                                     shard_compatible)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.krasulina_update import (krasulina_xi_gossip_pallas,
+                                            krasulina_xi_gossip_shard,
                                             krasulina_xi_pallas)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def node_shard_info(mesh, n: int, sched=None):
+    """(node_axes, ring_axis) when the `kernels.consensus` shard rules cover
+    mixing an [n, ...] buffer on this mesh, else None.
+
+    Covered: the mesh's node axes ("pod"/"data") shard the node dimension with
+    exactly one nontrivial axis (the ppermute ring), even row tiles, and — when
+    `sched` is given — a one-round halo reach neighbors can serve."""
+    if mesh is None:
+        return None
+    node_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    sizes = [int(mesh.shape[a]) for a in node_axes]
+    live = [a for a, s in zip(node_axes, sizes) if s > 1]
+    if len(live) != 1:
+        return None  # unsharded, or a ring spanning two mesh axes
+    extent = sizes[node_axes.index(live[0])]
+    if n % extent or extent > n:
+        return None
+    if sched is not None and not shard_compatible(sched, n, extent):
+        return None
+    return node_axes, live[0]
 
 
 def gossip_mix(x: jax.Array, sched, rounds: int, *,
@@ -37,13 +62,21 @@ def gossip_mix(x: jax.Array, sched, rounds: int, *,
 
 def quant_gossip_mix(x: jax.Array, sched, rounds: int, quantization: str, *,
                      block_d: int = 512, valid_d=None, key=None,
-                     force_pallas: bool = False) -> jax.Array:
+                     force_pallas: bool = False,
+                     per_node: bool = False) -> jax.Array:
     """R rounds of QUANTIZED gossip with per-[n, block_d]-tile compressor
     statistics (the `stats="tile"` fused path), one HBM read+write per buffer
     on TPU. The stochastic int8 compressor and off-TPU callers take the
     single-dispatch XLA tile chain (`ref.gossip_mix_quant_ref`) so threefry
-    randomness is backend-independent and CPU keeps XLA performance."""
-    fuse = (_on_tpu() or force_pallas) and quantization in ("sign", "int8")
+    randomness is backend-independent and CPU keeps XLA performance.
+    `per_node=True` selects sender-local row-tile statistics (`stats="node"`,
+    the sharded wire's granularity) — XLA tile chain only, no fused kernel."""
+    fuse = (_on_tpu() or force_pallas) and quantization in ("sign", "int8") \
+        and not per_node
+    if per_node:
+        return ref.gossip_mix_quant_ref(x, sched, rounds, quantization,
+                                        block_d=block_d, valid_d=valid_d,
+                                        key=key, per_node=True)
     if fuse:
         shifts = tuple(s for s, _ in sched)
         weights = tuple(w for _, w in sched)
@@ -53,6 +86,40 @@ def quant_gossip_mix(x: jax.Array, sched, rounds: int, quantization: str, *,
             interpret=not _on_tpu())
     return ref.gossip_mix_quant_ref(x, sched, rounds, quantization,
                                     block_d=block_d, valid_d=valid_d, key=key)
+
+
+def sharded_gossip_mix(x: jax.Array, sched, rounds: int, mesh,
+                       node_axes, ring_axis: str) -> jax.Array:
+    """R rounds of gossip on a node axis sharded over `mesh` — the shard_map
+    partitioning rule (per-round halo ppermutes + fused slice-sum tile mixing)
+    replacing the roll fallback. Bit-identical to `ref.gossip_mix_ref`; pass
+    the (node_axes, ring_axis) pair from `node_shard_info`."""
+    return gossip_mix_shard(x, sched, rounds, mesh, tuple(node_axes),
+                            ring_axis)
+
+
+def sharded_quant_gossip_mix(x: jax.Array, sched, rounds: int,
+                             quantization: str, mesh, node_axes,
+                             ring_axis: str, *, block_d: int = 512,
+                             valid_d=None, key=None) -> jax.Array:
+    """Quantized gossip on a sharded node axis with per-node tile statistics
+    (`stats="node"` — sender-local scales, the only granularity invariant
+    under the device split). Matches `ref.gossip_mix_quant_ref(...,
+    per_node=True)` — wire values bit-identically, sums to f32 round-off."""
+    return gossip_mix_quant_shard(
+        x, sched, rounds, quantization, mesh, tuple(node_axes), ring_axis,
+        block_d=block_d, valid_d=-1 if valid_d is None else valid_d, key=key)
+
+
+def sharded_krasulina_xi_gossip(w: jax.Array, z: jax.Array, sched,
+                                rounds: int, mesh, node_axes,
+                                ring_axis: str) -> jax.Array:
+    """Fused xi + R-round gossip on a sharded node axis: xi is node-local per
+    shard, only the consensus rounds communicate. Matches the strict
+    per-round oracle `gossip_mix_ref(vmap(krasulina_xi_ref), ...)` to f32
+    round-off."""
+    return krasulina_xi_gossip_shard(w, z, sched, rounds, mesh,
+                                     tuple(node_axes), ring_axis)
 
 
 def krasulina_xi(w: jax.Array, z: jax.Array, *, force_pallas: bool = False) -> jax.Array:

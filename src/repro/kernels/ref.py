@@ -56,7 +56,7 @@ def gossip_mix_ref(x: jax.Array, sched, rounds: int) -> jax.Array:
 
 def gossip_mix_quant_ref(x: jax.Array, sched, rounds: int, quant: str, *,
                          block_d: int = 512, valid_d: Optional[int] = None,
-                         key=None) -> jax.Array:
+                         key=None, per_node: bool = False) -> jax.Array:
     """R rounds of quantized gossip with per-[n, block_d]-tile compressor
     statistics — the XLA oracle (and CPU execution path) for
     `kernels.consensus.gossip_mix_quant_pallas`, plus the keyed stochastic
@@ -66,7 +66,12 @@ def gossip_mix_quant_ref(x: jax.Array, sched, rounds: int, quant: str, *,
     Compress-once-broadcast: tile scales are roll-invariant (the roll permutes
     rows, the stats reduce over them), so each round quantizes the buffer ONCE
     and rolls the compressed copy — identical in exact arithmetic to
-    compressing every rolled message, at (1 compress + deg rolls) per round."""
+    compressing every rolled message, at (1 compress + deg rolls) per round.
+
+    `per_node=True` selects per-[1, block_d] row-tile statistics (sender-local
+    scales, `stats="node"`): still compress-once-broadcast — each node's scale
+    travels with its rows under the roll — and the oracle for the sharded
+    wire path `kernels.consensus.gossip_mix_quant_shard`."""
     from repro.core.quantize import tile_compress
 
     n = x.shape[0]
@@ -74,7 +79,8 @@ def gossip_mix_quant_ref(x: jax.Array, sched, rounds: int, quant: str, *,
     h = x.reshape(n, -1).astype(jnp.float32)
     for r in range(rounds):
         k = jax.random.fold_in(key, r) if key is not None else None
-        q = tile_compress(h, quant, block_d, valid_d=valid_d, key=k)
+        q = tile_compress(h, quant, block_d, valid_d=valid_d, key=k,
+                          per_node=per_node)
         out = None
         for shift, w in sched:
             term = w * (h if shift == 0 else jnp.roll(q, shift, axis=0))

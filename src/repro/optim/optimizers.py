@@ -19,21 +19,32 @@ class OptState(NamedTuple):
     m: Tree  # momentum / first moment / Nesterov v
     v: Tree  # second moment (Adam) or unused
     master: Tree = ()  # fp32 master weights (mixed-precision training)
+    # per-node error-feedback residuals for compressed gossip
+    # (`core.averaging.ef_average_and_error`); () unless
+    # AveragingConfig.error_feedback is on. The update rules never touch it —
+    # the trainer re-attaches the mixed residual via `_replace` each step.
+    ef_residual: Tree = ()
 
 
 def _zeros_like_f32(params: Tree) -> Tree:
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
-def init_optimizer(name: str, params: Tree, *, master_weights: bool = False) -> OptState:
+def init_optimizer(name: str, params: Tree, *, master_weights: bool = False,
+                   error_feedback: bool = False) -> OptState:
     master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
               if master_weights else ())
+    # EF residuals live in the gradient dtype: they pack alongside the
+    # gradient buffers under the same PackSpec dtype grouping
+    ef = (jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+          if error_feedback else ())
     if name == "accel":
         # v iterate initialized at params (fp32)
         v0 = jax.tree.map(lambda p: p.astype(jnp.float32), params)
-        return OptState(jnp.zeros((), jnp.int32), v0, _zeros_like_f32(params), master)
+        return OptState(jnp.zeros((), jnp.int32), v0, _zeros_like_f32(params),
+                        master, ef)
     return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params),
-                    _zeros_like_f32(params), master)
+                    _zeros_like_f32(params), master, ef)
 
 
 def make_optimizer(name: str, lr: float, *, weight_decay: float = 0.0,

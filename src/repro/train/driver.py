@@ -64,7 +64,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import GovernorConfig, RunConfig
-from repro.core import rates
+from repro.core import dsgd, rates
 from repro.core.faults import FaultSchedule
 from repro.core.mixing import Membership
 from repro.data.pipeline import DevicePrefetcher, StreamCounters, StreamingPipeline
@@ -109,7 +109,11 @@ class EngineConfig:
     """Knobs of the streaming engine (all host-side; no retrace on change)."""
 
     superstep: int = 8  # K: rounds folded into one device scan
-    prefetch_depth: int = 2  # staged supersteps in flight; 0 = synchronous
+    # staged supersteps in flight; 0 = synchronous. Default backed by the
+    # pipeline/prefetch_sweep/* bench rows: depth 1 covers steady-state host
+    # synthesis, depth 2 also absorbs scheduling jitter, deeper is staging
+    # memory without throughput on this container.
+    prefetch_depth: int = 2
     replan_every: int = 1  # supersteps between governor re-plans; 0 = open loop
     # supersteps whose timings the governor ignores on the INITIAL jit
     # signature: the first two calls pay XLA compilation (one per signature —
@@ -220,9 +224,10 @@ class StreamingDriver:
             self._builder_elastic = len(params) >= 2
         except (TypeError, ValueError):
             self._builder_elastic = False
-        # donation updates the state in place across supersteps; CPU lacks
-        # donation support and would only warn (see core.dsgd.jit_driver)
-        self._donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        # donation updates the TrainState in place across supersteps where
+        # the backend honors it — feature-detected, not a backend list (the
+        # pinned jax implements CPU donation; see core.dsgd.donation_supported)
+        self._donate = (0,) if dsgd.donation_supported() else ()
         # one compiled superstep per (bucket, cohort size), built lazily on
         # first visit and reused with zero retrace on every revisit — the
         # active ids are a runtime argument, so all same-size memberships

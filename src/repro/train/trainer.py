@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import RunConfig
-from repro.core.averaging import average_and_error, make_gossip_mix
+from repro.core.averaging import (average_and_error, ef_average_and_error,
+                                  make_gossip_mix, resolve_packed)
 from repro.core.mixing import ScheduledMixOp
 from repro.core.quantize import STOCHASTIC
 from repro.launch import sharding as shlib
@@ -48,8 +49,11 @@ def _dtype(run: RunConfig):
 def init_state(run: RunConfig, key) -> TrainState:
     params = registry.init_params(key, run.model, _dtype(run))
     use_master = run.master_weights and _dtype(run) != jnp.float32
+    use_ef = (run.averaging.error_feedback != "off"
+              and run.averaging.mode == "gossip")
     return TrainState(params, init_optimizer(run.optimizer, params,
-                                             master_weights=use_master))
+                                             master_weights=use_master,
+                                             error_feedback=use_ef))
 
 
 def replicate_for_nodes(state: TrainState, n_nodes: int) -> TrainState:
@@ -106,11 +110,19 @@ def build_train_step(run: RunConfig, mesh, *,
     reject the override.
     """
     cfg = run.model
+    # pin the tri-state packed default against THIS mesh (packed="auto"
+    # gates off on model-parallel layouts — core.averaging.resolve_packed)
+    run = dataclasses.replace(run, averaging=dataclasses.replace(
+        run.averaging, packed=resolve_packed(run.averaging, mesh)))
     update = make_optimizer(run.optimizer, run.learning_rate,
                             weight_decay=run.weight_decay)
     n_nodes = n_nodes or n_data_nodes(mesh)
     pods = mesh.shape.get("pod", 1)
     decentralized = run.averaging.mode != "exact"
+    ef_on = run.averaging.error_feedback != "off"
+    if ef_on and run.averaging.mode != "gossip":
+        raise ValueError("error_feedback requires averaging mode 'gossip' "
+                         f"(got {run.averaging.mode!r})")
 
     def loss(params, batch):
         return registry.loss_fn(params, cfg, batch, remat=run.remat)
@@ -198,11 +210,25 @@ def build_train_step(run: RunConfig, mesh, *,
             # instead of replaying the seed-derived sequence (the MixOp still
             # folds the round index in per consensus round)
             step_key = jax.random.fold_in(jax.random.PRNGKey(mix.seed), t)
-        mixed, cerr = average_and_error(grads, run.averaging, n_nodes=n_nodes,
-                                       pods=pods, mix=mix, key=step_key, t=t)
+        if ef_on:
+            # error-feedback compressed gossip: compress once per step on the
+            # packed residual-corrected gradients, mix LINEARLY, carry the
+            # residual in OptState.ef_residual (core.averaging docstring)
+            mixed, new_ef, cerr, ef_norm, ef_rel = ef_average_and_error(
+                grads, state.opt.ef_residual, run.averaging,
+                n_nodes=n_nodes, mix=mix, key=step_key, t=t)
+        else:
+            mixed, cerr = average_and_error(grads, run.averaging,
+                                            n_nodes=n_nodes, pods=pods,
+                                            mix=mix, key=step_key, t=t)
         new_params, new_opt = jax.vmap(update)(mixed, state.opt, state.params)
         metrics = jax.tree.map(jnp.mean, metrics)
         metrics = dict(metrics, loss=jnp.mean(l), consensus_err=cerr)
+        if ef_on:
+            # the optimizer update rules never touch ef_residual (they return
+            # it at its default); re-attach the fresh residual here
+            new_opt = new_opt._replace(ef_residual=new_ef)
+            metrics = dict(metrics, ef_norm=ef_norm, ef_rel=ef_rel)
         return TrainState(new_params, new_opt), metrics
 
     return train_step, partial(_state_specs, run=run, mesh=mesh, node_axes=node_axes)
@@ -229,9 +255,11 @@ def _state_specs(state_shapes: TrainState, *, run: RunConfig, mesh, node_axes):
         opt.v) else jax.tree.map(lambda _: jax.sharding.PartitionSpec(), opt.v)
     master_spec = (shlib.zero1_specs(opt.master, mesh, node_axes=node_axes)
                    if opt.master != () else ())
+    ef_spec = (shlib.zero1_specs(opt.ef_residual, mesh, node_axes=node_axes)
+               if opt.ef_residual != () else ())
     from repro.optim.optimizers import OptState
     return TrainState(pspec, OptState(jax.sharding.PartitionSpec(), m_spec,
-                                      v_spec, master_spec))
+                                      v_spec, master_spec, ef_spec))
 
 
 def build_superstep(run: RunConfig, mesh, *,

@@ -1,0 +1,54 @@
+"""Shared trace/retrace counting helpers for the test suite.
+
+jit runs the *python* body of a function once per trace (one per new input
+signature), never per call — so a python-side append inside the wrapped body
+counts compilations exactly. Three test families share the idiom: the
+adaptive-B governor (one trace per bucket), elastic membership (one trace per
+(bucket, cohort), zero on rejoin), and the scenario harness (phase switches
+are runtime data, zero retraces). `hlo_collective_permutes` is the companion
+*lowering* counter: the shard_map gossip tests pin the exact number of
+collective-permute ops their partitioning rule emits.
+"""
+import inspect
+
+
+def traced(fn, log, tag=1):
+    """Wrap `fn` so each jit TRACE (not call) appends `tag` to `log`."""
+
+    def counted(*args, **kwargs):
+        log.append(tag)  # runs once per jit trace, not per call
+        return fn(*args, **kwargs)
+
+    return counted
+
+
+def wrap_builder(builder, log, tag=None):
+    """Wrap a driver superstep builder so every supestep it builds logs one
+    tag per jit trace.
+
+    `builder` may take `(B)` or `(B, membership)` (both driver protocols).
+    The default tag is the bucket `B`, or `(B, membership.n_active)` when a
+    cohort membership is passed — pass `tag=fn(B, membership)` to override.
+    """
+    takes_membership = "membership" in inspect.signature(builder).parameters
+
+    def build(B, membership=None):
+        raw = builder(B, membership) if takes_membership else builder(B)
+        if tag is not None:
+            t = tag(B, membership)
+        elif membership is None:
+            t = B
+        else:
+            t = (B, membership.n_active)
+        return traced(raw, log, t)
+
+    return build
+
+
+def hlo_collective_permutes(jitted, *args) -> int:
+    """Number of collective-permute ops in the compiled HLO of
+    `jitted(*args)` — counts both the fused and the async-pair
+    (`-start`/`-done`) lowerings once each."""
+    txt = jitted.lower(*args).compile().as_text()
+    return (txt.count("collective-permute(")
+            + txt.count("collective-permute-start("))

@@ -1,0 +1,145 @@
+"""Executed by test_shard_gossip.py in a subprocess with 4 fake host devices:
+exercises the shard_map gossip partitioning rules (kernels/consensus.py,
+kernels/krasulina_update.py) on a REALLY sharded node axis and prints JSON
+results for the parent to assert on."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import mixing
+from repro.kernels import ops, ref
+from _trace import hlo_collective_permutes
+
+N, D, R = 16, 1 << 12, 3
+
+
+def main():
+    res = {"n_devices": len(jax.devices())}
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 1), ("data", "model"))
+    sharding = NamedSharding(mesh, P("data", None))
+    x = jax.device_put(
+        jax.random.normal(jax.random.PRNGKey(0), (N, D), jnp.float32),
+        sharding)
+    sched = mixing.schedule("ring", N, 0.5)
+
+    # auto-resolution picks the shard rule on this layout
+    res["auto_impl"] = mixing.resolve_auto_impl(mesh)
+    op = mixing.circulant_mix_op(sched, N, R, mesh=mesh)
+    res["op_impl"] = op.impl
+
+    # exact path: bitwise vs the per-round oracle, 2 ppermutes per round
+    f = jax.jit(op)
+    got = np.asarray(jax.block_until_ready(f(x)))
+    oracle = np.asarray(ref.gossip_mix_ref(np.asarray(x), tuple(sched), R))
+    res["exact_bit_identical"] = bool(np.array_equal(got, oracle))
+    res["exact_ppermutes"] = hlo_collective_permutes(f, x)
+
+    # quantized node-stats wire: sign is bitwise; int8 matches to f32
+    # round-off (association differs across program layouts)
+    for quant in ("sign", "int8", "int8_stoch"):
+        opq = mixing.circulant_mix_op(sched, N, R, quantization=quant,
+                                      mesh=mesh, stats="node", block_d=512)
+        res[f"{quant}_impl"] = opq.impl
+        gotq = np.asarray(jax.block_until_ready(jax.jit(opq)(x)))
+        key0 = (jax.random.PRNGKey(opq.seed)
+                if quant in mixing.STOCHASTIC else None)
+        oq = np.asarray(ref.gossip_mix_quant_ref(
+            np.asarray(x), tuple(sched), R, quant, block_d=512,
+            key=key0, per_node=True))
+        res[f"{quant}_bit_identical"] = bool(np.array_equal(gotq, oq))
+        denom = max(float(np.abs(oq).max()), 1e-30)
+        res[f"{quant}_rel_err"] = float(np.abs(gotq - oq).max() / denom)
+
+    # krasulina fused xi+gossip: xi node-local, rounds match the strict
+    # per-round oracle to f32 round-off
+    d, B = 256, 16
+    w = jax.device_put(jax.random.normal(jax.random.PRNGKey(1), (N, d)),
+                       sharding)
+    z = jax.device_put(jax.random.normal(jax.random.PRNGKey(2), (N, B, d)),
+                       NamedSharding(mesh, P("data", None, None)))
+    info = ops.node_shard_info(mesh, N, tuple(sched))
+    res["shard_info"] = [list(info[0]), info[1]]
+    fk = jax.jit(functools.partial(
+        ops.sharded_krasulina_xi_gossip, sched=tuple(sched), rounds=R,
+        mesh=mesh, node_axes=info[0], ring_axis=info[1]))
+    gotk = np.asarray(jax.block_until_ready(fk(w, z=z)))
+    ok = np.asarray(ref.gossip_mix_ref(
+        jax.vmap(ref.krasulina_xi_ref)(w, z), tuple(sched), R))
+    res["krasulina_rel_err"] = float(
+        np.abs(gotk - ok).max() / max(float(np.abs(ok).max()), 1e-30))
+    res["krasulina_ppermutes"] = hlo_collective_permutes(fk, w, z)
+
+    # packed pack/unpack resharding parity under a MODEL-PARALLEL layout
+    # (ROADMAP caveat -> core.averaging.resolve_packed gate): leaves sharded
+    # over the model axis, mixed through ONE packed [N, D] buffer, must match
+    # the per-leaf dispatch bitwise — the pack is a pure relayout
+    import dataclasses
+
+    from repro.configs.base import AveragingConfig
+    from repro.core import averaging
+
+    mesh_mp = Mesh(np.asarray(jax.devices()).reshape(2, 2), ("data", "model"))
+    n_mp = 8
+    tree = {
+        "w1": jax.device_put(
+            jax.random.normal(jax.random.PRNGKey(5), (n_mp, 12, 16)),
+            NamedSharding(mesh_mp, P("data", None, "model"))),
+        "w2": jax.device_put(
+            jax.random.normal(jax.random.PRNGKey(6), (n_mp, 64)),
+            NamedSharding(mesh_mp, P("data", "model"))),
+        "b": jax.device_put(
+            jax.random.normal(jax.random.PRNGKey(7), (n_mp, 48)),
+            NamedSharding(mesh_mp, P("data", None))),
+    }
+    cfg_avg = AveragingConfig("gossip", rounds=2, topology="ring")
+    mix_mp = averaging.make_gossip_mix(cfg_avg, n_mp, mesh=mesh_mp)
+    res["mp_mix_impl"] = mix_mp.impl
+    got_p = jax.jit(lambda tr: averaging.gossip_average(
+        tr, n_mp, dataclasses.replace(cfg_avg, packed=True), mix_mp))(tree)
+    got_l = jax.jit(lambda tr: averaging.gossip_average(
+        tr, n_mp, dataclasses.replace(cfg_avg, packed=False), mix_mp))(tree)
+    # not bitwise: XLA picks different fusions/FMA contractions for the
+    # packed [N, D] program vs the per-leaf shapes — parity is f32 round-off
+    res["mp_packed_rel_err"] = max(
+        float(np.abs(np.asarray(got_p[k]) - np.asarray(got_l[k])).max()
+              / max(float(np.abs(np.asarray(got_l[k])).max()), 1e-30))
+        for k in tree)
+    sched8 = tuple(mixing.schedule("ring", n_mp, 0.0))
+    oracle_ok = True
+    for k, v in tree.items():
+        want = np.asarray(ref.gossip_mix_ref(
+            np.asarray(v).reshape(n_mp, -1), sched8, 2)).reshape(v.shape)
+        oracle_ok &= bool(np.allclose(np.asarray(got_p[k]), want,
+                                      rtol=1e-5, atol=1e-6))
+    res["mp_packed_vs_oracle"] = oracle_ok
+    # the tri-state default gates packed OFF under the model split and ON on
+    # node-only layouts; explicit True overrides the gate
+    res["mp_auto_packed"] = averaging.resolve_packed(cfg_avg, mesh_mp)
+    res["flat_auto_packed"] = averaging.resolve_packed(cfg_avg, mesh)
+    res["mp_forced_packed"] = averaging.resolve_packed(
+        dataclasses.replace(cfg_avg, packed=True), mesh_mp)
+
+    # uncoverable layout (n=6 does not tile the 4-way device split): the
+    # factory downgrades to the sharding-safe roll and stays correct
+    op_small = mixing.circulant_mix_op(mixing.schedule("ring", 6, 0.0), 6, R,
+                                       mesh=mesh)
+    res["small_impl"] = op_small.impl
+    xs = jax.random.normal(jax.random.PRNGKey(3), (6, D))
+    got_s = np.asarray(jax.jit(op_small)(xs))
+    want_s = np.asarray(ref.gossip_mix_ref(
+        np.asarray(xs), tuple(mixing.schedule("ring", 6, 0.0)), R))
+    res["small_close"] = bool(np.allclose(got_s, want_s, rtol=1e-5,
+                                          atol=1e-6))
+    print(json.dumps(res))
+
+
+if __name__ == "__main__":
+    main()

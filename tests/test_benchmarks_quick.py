@@ -15,7 +15,7 @@ def test_run_quick_all_suites(tmp_path):
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     p = subprocess.run(
         [sys.executable, "-m", "benchmarks.run", "--quick", "--json", str(out)],
-        capture_output=True, text=True, timeout=600, cwd=ROOT, env=env)
+        capture_output=True, text=True, timeout=900, cwd=ROOT, env=env)
     assert p.returncode == 0, (p.stdout[-2000:], p.stderr[-3000:])
 
     artifact = json.loads(out.read_text())
@@ -32,7 +32,8 @@ def test_run_quick_all_suites(tmp_path):
                    "krasulina/fused/", "krasulina/gossip/",
                    "governor/cold_switch/", "governor/warm_switch/",
                    "elastic/throughput/", "scenarios/matrix/", "serve/",
-                   "checkpoint/"):
+                   "checkpoint/", "scenarios/lm/", "pipeline/prefetch_sweep/",
+                   "lm_decentralized/"):
         assert any(n.startswith(prefix) for n in names), (prefix, names)
     # the engine rows carry machine-readable throughput
     pipe = [r for r in artifact["rows"] if r["name"].startswith("pipeline/")]
@@ -113,3 +114,47 @@ def test_run_quick_all_suites(tmp_path):
     assert gv and field(gv[0], "direction") == 1
     assert field(gv[0], "est_Rc_limited") < field(gv[0], "est_Rc_clean")
     assert field(gv[0], "mu_limited") > field(gv[0], "mu_clean")
+    # decentralized-LM contract rows (PR 10): the sharded gossip rule is
+    # bit-identical to the per-round oracle even at smoke scale, the
+    # error-feedback compressed runs keep their progress within 1.2x of the
+    # uncompressed baseline, and the LM scenario cell (launcher --scenario
+    # path) converges under the time-varying lossy schedule
+    ep = [r for r in artifact["rows"]
+          if r["name"] == "lm_decentralized/mix/exact_parity"]
+    assert ep and field(ep[0], "bit_identical") == 1
+    for q in ("sign", "int8"):
+        row = [r for r in artifact["rows"]
+               if r["name"] == f"lm_decentralized/train/ef_{q}"]
+        assert row and field(row[0], "ef_excess_x") <= 1.2
+        assert field(row[0], "ef_norm") >= 0.0
+    lm = [r for r in artifact["rows"]
+          if r["name"].startswith("scenarios/lm/")]
+    assert lm and field(lm[0], "convergent") == 1
+    # the prefetch-depth sweep records the sweet-spot finding as a row
+    sw = [r for r in artifact["rows"]
+          if r["name"] == "pipeline/prefetch_sweep/sweet_spot"]
+    assert sw and "best_depth=" in sw[0]["derived"]
+
+
+def test_committed_lm_decentralized_artifact():
+    """The committed BENCH_lm_decentralized.json carries the full-mode
+    contract rows: shard_map gossip >= 1.5x the composed-roll fallback on the
+    4-way sharded node axis, exact parity bitwise, EF progress within 1.2x."""
+    artifact = json.loads(
+        open(os.path.join(ROOT, "BENCH_lm_decentralized.json")).read())
+    assert artifact["schema"] == "repro-bench-v1"
+    assert artifact["quick"] is False
+    assert artifact["failed"] == []
+    rows = {r["name"]: r["derived"] for r in artifact["rows"]}
+
+    def field(derived, key):
+        return float(derived.split(f"{key}=")[1].split(";")[0].rstrip("x"))
+
+    assert field(rows["lm_decentralized/mix/exact_parity"],
+                 "bit_identical") == 1
+    assert field(rows["lm_decentralized/mix/shard_vs_roll"], "speedup") >= 1.5
+    assert field(rows["lm_decentralized/train/gossip_shard"],
+                 "tokens_per_s") > 0
+    for q in ("sign", "int8"):
+        assert field(rows[f"lm_decentralized/train/ef_{q}"],
+                     "ef_excess_x") <= 1.2

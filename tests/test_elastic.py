@@ -32,6 +32,7 @@ from repro.core.mixing import Membership
 from repro.data.pipeline import StreamingPipeline
 from repro.data.synthetic import make_pca_host_sampler, make_pca_stream
 from repro.train.driver import EngineConfig, StreamingDriver, elastic_superstep
+from _trace import wrap_builder
 
 
 # ---------------------------------------------------------------------------
@@ -417,17 +418,9 @@ def _elastic_driver(faults=None, *, stream=StreamConfig(), gov=None,
     builder = krasulina.krasulina_superstep_builder(
         run_cfg.averaging, n, lambda t: 10.0 / t)
     if traces is not None:
-        inner = builder
-
-        def builder(B, membership=None):  # noqa: F811 — trace-counting wrap
-            raw = inner(B, membership)
-            m = n if membership is None else membership.n_active
-
-            def counted(s, b):
-                traces.append((B, m))  # once per jit trace, not per call
-                return raw(s, b)
-
-            return counted
+        builder = wrap_builder(
+            builder, traces,
+            tag=lambda B, mem: (B, n if mem is None else mem.n_active))
 
     w0 = jax.random.normal(jax.random.PRNGKey(0), (FIG7.dim,))
     state = krasulina.init_krasulina_state(w0 / jnp.linalg.norm(w0),

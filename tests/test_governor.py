@@ -34,6 +34,7 @@ from repro.launch.sharding import activation_rules
 from repro.models.common import mesh_rules
 from repro.train.driver import EngineConfig, StreamingDriver
 from repro.train.trainer import build_superstep, init_state
+from _trace import wrap_builder
 
 SEQ = 16
 BATCH = 8
@@ -394,12 +395,7 @@ def _lm_driver(stream, clock, gov, *, batch=BATCH, warmup=0, per_bucket=0,
     builder = None
     if trace_log is not None:
         base, _ = build_superstep(run_cfg, mesh)
-
-        def builder(B):
-            def counted(s, b):
-                trace_log.append(B)  # runs once per jit trace, not per call
-                return base(s, b)
-            return counted
+        builder = wrap_builder(lambda B: base, trace_log)
 
     driver = StreamingDriver(
         run_cfg, mesh, state, _sample_fn(), batch=batch,
@@ -512,12 +508,7 @@ def test_driver_steady_state_switch_zero_recompilation_krasulina():
     traces = []
     base = krasulina.build_krasulina_superstep(run_cfg.averaging, N,
                                                lambda t: 10.0 / t)
-
-    def builder(B):
-        def counted(s, b):
-            traces.append(B)
-            return base(s, b)
-        return counted
+    builder = wrap_builder(lambda B: base, traces)
 
     w0 = jax.random.normal(jax.random.PRNGKey(0), (FIG7.dim,))
     state = krasulina.init_krasulina_state(w0 / jnp.linalg.norm(w0),

@@ -114,10 +114,12 @@ class _FakeMesh:
 
 
 def test_resolve_auto_impl_layouts():
-    # sharded node axis (data/pod extent > 1): always the roll lowering
-    assert mixing.resolve_auto_impl(_FakeMesh({"data": 8, "model": 1})) == "roll"
+    # sharded node axis (data/pod extent > 1): the explicit shard_map
+    # partitioning rule (circulant_mix_op downgrades to "roll" when the rule
+    # does not cover the (n, schedule, split))
+    assert mixing.resolve_auto_impl(_FakeMesh({"data": 8, "model": 1})) == "shard"
     assert mixing.resolve_auto_impl(
-        _FakeMesh({"pod": 2, "data": 4, "model": 2})) == "roll"
+        _FakeMesh({"pod": 2, "data": 4, "model": 2})) == "shard"
     # node axis local but model-sharded trailing dims: matmul would flatten
     # (and so gather) them — must stay on roll
     assert mixing.resolve_auto_impl(_FakeMesh({"data": 1, "model": 4})) == "roll"

@@ -28,6 +28,7 @@ import pytest
 
 sys.path.insert(0, __file__.rsplit("/", 1)[0])
 from _prop import given, settings, st
+from _trace import traced
 
 from repro.configs import get_config, reduced
 from repro.configs.base import (AveragingConfig, GovernorConfig, RunConfig,
@@ -223,10 +224,10 @@ def test_phase_switch_is_not_a_retrace():
     mix = scenarios.build_mix(scn)
     traces = []
 
-    @jax.jit
-    def step(x, t):
-        traces.append(1)  # once per trace, not per call
+    def _step(x, t):
         return mix(x, t=t)
+
+    step = jax.jit(traced(_step, traces))
 
     x = jax.random.normal(jax.random.PRNGKey(0), (scn.n_nodes, 3))
     outs = [np.asarray(step(x, jnp.asarray(t))) for t in range(1, 13)]
